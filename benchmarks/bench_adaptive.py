@@ -1,0 +1,95 @@
+"""§7.5 adaptive load-based policies: traffic reduction under a spike.
+
+Paper projection: threshold relaxation of 0.05 cuts model traffic by
+9–17 % depending on base hit rate (linear Δh=k·δ assumption). We measure
+the actual reduction end-to-end in the simulator, with the §7.5.6
+FP-feedback loop active, for the loaded model only (§7.5.5 isolation).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.economics import traffic_reduction
+from repro.core.policy import PolicyEngine, paper_policies
+from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
+from repro.serving.simulator import ServingSimulator, SimConfig
+
+
+def simulate(adaptive: bool, spikes, n: int, seed: int,
+             fp_rate_limit: float = 0.05):
+    eng = PolicyEngine(paper_policies())
+    gen = WorkloadGenerator(TABLE1_WORKLOAD, rate_per_s=30.0, seed=seed)
+    sim = ServingSimulator(eng, SimConfig(
+        architecture="hybrid", cache_capacity=12000, index_kind="flat",
+        adaptive=adaptive, fp_rate_limit=fp_rate_limit,
+        load_spikes=list(spikes)))
+    return sim.run(gen, n)
+
+
+def run(n: int = 6000, seed: int = 11):
+    # §7.5.4 analytic projections
+    for h0 in (0.40, 0.45, 0.55):
+        dh = 0.05  # k=1.0 per 0.01 → Δh = 0.05 at δ=0.05
+        emit(f"adaptive.analytic.h0_{h0:.2f}", 0.0,
+             delta_h=dh, reduction=traffic_reduction(h0, dh))
+
+    spikes = [(30.0, 1000.0, "o1", 3.0)]      # 3× spike on the code model
+    base = simulate(False, spikes, n, seed)
+    adap = simulate(True, spikes, n, seed)
+    calls_b = base.model_calls.get("o1", 1)
+    calls_a = adap.model_calls.get("o1", 1)
+    fp_b = base.per_category["code_generation"]["false_positives"]
+    fp_a = adap.per_category["code_generation"]["false_positives"]
+    emit("adaptive.spike_o1", 0.0,
+         calls_base=calls_b, calls_adaptive=calls_a,
+         traffic_reduction=1 - calls_a / calls_b,
+         paper_projection="0.09-0.17",
+         fp_base=fp_b, fp_adaptive=fp_a,
+         hit_base=base.per_category["code_generation"]["hit_rate"],
+         hit_adaptive=adap.per_category["code_generation"]["hit_rate"])
+    # isolation: unloaded models keep their traffic (±5 %)
+    other_b = sum(v for k, v in base.model_calls.items() if k != "o1")
+    other_a = sum(v for k, v in adap.model_calls.items() if k != "o1")
+    emit("adaptive.isolation_other_models", 0.0,
+         calls_base=other_b, calls_adaptive=other_a,
+         drift=abs(other_a - other_b) / max(1, other_b))
+    # latency win for users during the spike
+    emit("adaptive.latency", 0.0,
+         mean_base_ms=base.mean_latency_ms,
+         mean_adaptive_ms=adap.mean_latency_ms,
+         stale_base=base.stale_served, stale_adaptive=adap.stale_served)
+
+    # Paper's-assumptions variant: §7.5.4 projects 9–17 % from Δh = k·δ
+    # with NO accuracy constraint. Disabling the FP-feedback loop
+    # (fp_rate_limit=1.0) reproduces that regime; the run above shows what
+    # survives once §7.5.6 safety is enforced.
+    adap_nofb = simulate(True, spikes, n, seed, fp_rate_limit=1.0)
+    ca_nofb = adap_nofb.model_calls.get("o1", 1)
+    fp_nofb = adap_nofb.per_category["code_generation"]["false_positives"]
+    emit("adaptive.spike_o1_no_fp_safety", 0.0,
+         calls_base=calls_b, calls_adaptive=ca_nofb,
+         traffic_reduction=1 - ca_nofb / calls_b,
+         paper_projection="0.09-0.17",
+         fp_code=fp_nofb,
+         hit_code=adap_nofb.per_category["code_generation"]["hit_rate"],
+         note="projection_reproduced_at_accuracy_cost")
+
+    # Second scenario: spike on gpt4o (legal/api/medical). Legal's space is
+    # sparse enough that relaxed τ stays FP-free → the full projected
+    # reduction is achievable there (vs the FP-bounded dense code case).
+    spikes2 = [(30.0, 1000.0, "gpt4o", 3.0)]
+    base2 = simulate(False, spikes2, n, seed + 1)
+    adap2 = simulate(True, spikes2, n, seed + 1)
+    cb = base2.model_calls.get("gpt4o", 1)
+    ca = adap2.model_calls.get("gpt4o", 1)
+    emit("adaptive.spike_gpt4o", 0.0,
+         calls_base=cb, calls_adaptive=ca,
+         traffic_reduction=1 - ca / cb,
+         hit_legal_base=base2.per_category["legal_queries"]["hit_rate"],
+         hit_legal_adaptive=adap2.per_category["legal_queries"]["hit_rate"],
+         fp_legal_adaptive=adap2.per_category["legal_queries"]
+         ["false_positives"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""§4.4/§5.5 break-even analysis, with the local-search cost MEASURED.
+
+The 2 ms hybrid miss cost is the paper's calibration; here we also measure
+what this container actually achieves for the in-memory search (host HNSW
+and jitted flat scan) and derive break-even hit rates from both the
+paper's constants and the measured cost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_callable
+from repro.core.economics import CostModel, HYBRID_COSTS, VDB_COSTS
+from repro.core.hnsw import FlatIndex, HNSWIndex
+
+
+def run(n_entries: int = 20000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n_entries, 384)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    hnsw = HNSWIndex.bulk_build(vecs, seed=seed)
+    flat = FlatIndex(384, n_entries + 8)
+    for v in vecs:
+        flat.add(v)
+    q = vecs[rng.integers(0, n_entries, 16)]
+    taus = np.full(16, 0.9, np.float32)
+
+    us_hnsw = time_callable(lambda: hnsw.search_host(q[:1], taus[:1]), iters=20)
+    us_flat = time_callable(lambda: flat.search_host(q, taus), iters=20) / 16
+    # batched device-style search (jitted beam search, per query amortized)
+    hnsw.search_batch(q, taus)  # compile
+    us_beam = time_callable(lambda: hnsw.search_batch(q, taus), iters=10) / 16
+
+    emit("breakeven.local_search.hnsw_host", us_hnsw, entries=n_entries)
+    emit("breakeven.local_search.flat_np", us_flat, entries=n_entries)
+    emit("breakeven.local_search.beam_jax", us_beam, entries=n_entries,
+         batch=16)
+
+    for t_llm, tag in ((200.0, "fast_model"), (500.0, "slow_model")):
+        for model, name in ((VDB_COSTS, "vdb"), (HYBRID_COSTS, "hybrid")):
+            be = model.break_even_hit_rate(t_llm)
+            emit(f"breakeven.{name}.{tag}", model.search_ms * 1e3,
+                 t_llm_ms=t_llm, break_even=be)
+        measured = CostModel("measured", search_ms=us_hnsw / 1e3,
+                             hit_fetch_ms=5.0)
+        emit(f"breakeven.measured.{tag}", us_hnsw,
+             t_llm_ms=t_llm, break_even=measured.break_even_hit_rate(t_llm))
+    # ratios the paper quotes: 15× (fast) / 10× (slow) reduction
+    emit("breakeven.reduction_factor", 0.0,
+         fast=VDB_COSTS.break_even_hit_rate(200.0)
+         / HYBRID_COSTS.break_even_hit_rate(200.0),
+         slow=VDB_COSTS.break_even_hit_rate(500.0)
+         / HYBRID_COSTS.break_even_hit_rate(500.0))
+
+
+if __name__ == "__main__":
+    run()

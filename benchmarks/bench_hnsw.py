@@ -1,0 +1,45 @@
+"""§7.4 HNSW scaling: search latency vs index size (log n expected).
+
+Paper quotes 2–3 ms at 1 M entries, 5–8 ms at 10 M (production CPUs).
+This container is 1 CPU core, so we sweep to 10^5 and report the curve +
+a fitted per-doubling increment; the jitted flat scan is included as the
+O(n) contrast (its TPU roofline version appears in EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_callable
+from repro.core.hnsw import FlatIndex, HNSWIndex
+
+
+def run(sizes=(2000, 8000, 32000, 100000), seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lat = {}
+    for n in sizes:
+        vecs = rng.standard_normal((n, 384)).astype(np.float32)
+        vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+        idx = HNSWIndex.bulk_build(vecs, seed=seed)
+        q = vecs[rng.integers(0, n, 8)]
+        taus = np.full(8, 0.9, np.float32)
+        us = time_callable(lambda: idx.search_host(q[:1], taus[:1]), iters=15)
+        lat[n] = us
+        emit(f"hnsw.search.n{n}", us, entries=n)
+        flat = FlatIndex(384, n + 8)
+        flat.emb[:n] = vecs
+        flat.valid[:n] = True
+        flat._n = n
+        us_flat = time_callable(lambda: flat.search_host(q, taus),
+                                iters=10) / 8
+        emit(f"hnsw.flat_contrast.n{n}", us_flat, entries=n)
+    # growth per doubling (log-n signature: roughly constant increment)
+    ns = sorted(lat)
+    incs = [(lat[b] - lat[a]) / max(1e-9, np.log2(b / a))
+            for a, b in zip(ns, ns[1:])]
+    emit("hnsw.us_per_doubling", float(np.mean(incs)),
+         increments=";".join(f"{x:.1f}" for x in incs))
+
+
+if __name__ == "__main__":
+    run()

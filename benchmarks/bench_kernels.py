@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks (interpret mode on CPU = correctness-scale only;
+TPU projections from the roofline model are reported alongside).
+
+Roofline projections (v5e: 197 TFLOP/s bf16, 819 GB/s HBM):
+  flat_topk over N×384 fp32  → max(bytes/819e9, flops/197e12)
+  decode_attention B,H,S,dh  → KV bytes / 819e9
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_callable
+from repro.kernels import ops, ref
+
+HBM = 819e9
+PEAK = 197e12
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    # flat cache scan (the 2 ms local search at 1 M entries)
+    for n in (4096, 16384):
+        table = rng.standard_normal((n, 384)).astype(np.float32)
+        valid = np.ones(n, bool)
+        q = rng.standard_normal((16, 384)).astype(np.float32)
+        args = (jnp.asarray(table), jnp.asarray(valid), jnp.asarray(q))
+        us_ref = time_callable(
+            lambda: ref.flat_topk_ref(args[0], args[1], args[2]
+                                      )[0].block_until_ready(), iters=5)
+        emit(f"kernels.flat_topk_ref.n{n}", us_ref, entries=n, batch=16)
+    # TPU roofline projection at 1 M entries (paper's budget: 2 ms)
+    n = 1_000_000
+    bytes_scanned = n * 384 * 4
+    flops = 2 * n * 384 * 16
+    emit("kernels.flat_topk.tpu_projection_1M", 0.0,
+         mem_ms=bytes_scanned / HBM * 1e3,
+         compute_ms=flops / PEAK * 1e3,
+         bound="memory", paper_budget_ms=2.0)
+
+    # HNSW hop (gather_scores): bytes = B·K·d·4
+    B, K = 16, 1024
+    emit("kernels.gather_scores.tpu_projection", 0.0,
+         bytes_per_hop=B * K * 384 * 4,
+         mem_us=B * K * 384 * 4 / HBM * 1e6,
+         hops=8, total_us=8 * B * K * 384 * 4 / HBM * 1e6)
+
+    # decode attention: KV-bandwidth bound
+    for (b, hkv, s, dh, name) in ((128, 8, 32768, 128, "decode_32k"),
+                                  (1, 8, 524288, 128, "long_500k")):
+        kv_bytes = 2 * b * hkv * s * dh * 2      # k+v bf16
+        emit(f"kernels.decode_attention.{name}", 0.0,
+             kv_bytes=kv_bytes, mem_ms_single_chip=kv_bytes / HBM * 1e3,
+             mem_us_256chips=kv_bytes / 256 / HBM * 1e6)
+
+    # interpret-mode correctness-scale timings (not perf numbers)
+    q = (rng.standard_normal((1, 4, 64, 64)) * 0.3).astype(np.float32)
+    k = (rng.standard_normal((1, 2, 64, 64)) * 0.3).astype(np.float32)
+    us = time_callable(
+        lambda: np.asarray(ops.flash_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(k),
+            block_q=64, block_k=64, interpret=True)), iters=3)
+    emit("kernels.flash_attention.interpret_64tok", us,
+         note="interpret-mode_correctness_path")
+
+
+if __name__ == "__main__":
+    run()

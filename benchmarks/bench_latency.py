@@ -1,0 +1,47 @@
+"""§5.2 expected-latency comparison at the paper's operating point.
+
+Paper example: at 20 % hit rate, hybrid averages 0.2·7 + 0.8·2 = 3.0 ms of
+cache overhead vs vector-DB 0.2·35 + 0.8·30 = 31 ms. We reproduce both
+analytically and from the discrete-event simulator (cache overhead only,
+then end-to-end including model calls).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.policy import PolicyEngine, paper_policies
+from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
+from repro.serving.simulator import ServingSimulator, SimConfig
+
+
+def run(n_queries: int = 4000, seed: int = 7):
+    # analytic §5.2 example
+    h = 0.2
+    hybrid_ms = h * (2 + 5) + (1 - h) * 2
+    vdb_ms = h * (30 + 5) + (1 - h) * 30
+    emit("latency.analytic.hybrid", hybrid_ms * 1e3, hit_rate=h,
+         paper_value_ms=3.0)
+    emit("latency.analytic.vdb", vdb_ms * 1e3, hit_rate=h,
+         paper_value_ms=31.0)
+
+    results = {}
+    for arch in ("hybrid", "vdb", "none"):
+        eng = PolicyEngine(paper_policies())
+        gen = WorkloadGenerator(TABLE1_WORKLOAD, rate_per_s=30.0, seed=seed)
+        sim = ServingSimulator(eng, SimConfig(architecture=arch,
+                                              cache_capacity=12000,
+                                              index_kind="flat"))
+        res = sim.run(gen, n_queries)
+        results[arch] = res
+        # cache overhead per query = end-to-end − model time share
+        emit(f"latency.e2e.{arch}", res.mean_latency_ms * 1e3,
+             p95_ms=res.p95_latency_ms, hit_rate=res.overall_hit_rate,
+             model_cost=res.model_cost,
+             false_positives=res.false_positives)
+    speedup = (results["none"].mean_latency_ms
+               / results["hybrid"].mean_latency_ms)
+    emit("latency.hybrid_speedup_vs_none", 0.0, speedup=speedup)
+
+
+if __name__ == "__main__":
+    run()

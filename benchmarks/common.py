@@ -1,0 +1,29 @@
+"""Shared benchmark helpers. Every bench emits ``name,us_per_call,derived``
+CSV rows via ``emit`` (derived = semicolon-separated key=value pairs)."""
+
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, **derived) -> str:
+    pairs = ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())
+    row = f"{name},{us_per_call:.2f},{pairs}"
+    print(row, flush=True)
+    return row
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def time_callable(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Mean wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+Output: ``name,us_per_call,derived`` CSV rows (stdout).
+
+    bench_longtail    — Table 1 (long-tail hit rates + viability)
+    bench_breakeven   — §4.4/§5.5 eqs (1)–(5), measured local search
+    bench_latency     — §5.2 expected latency (3.0 ms vs 31 ms)
+    bench_thresholds  — §3.1 density ↔ threshold FP/FN rates
+    bench_memory      — §5.1/§7.4 bytes/entry accounting
+    bench_hnsw        — §7.4 index scaling curve
+    bench_adaptive    — §7.5 load-adaptive traffic reduction (9–17 %)
+    bench_routing     — §7.5.5 multi-model per-hit value
+    bench_kernels     — kernel microbench + TPU roofline projections
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
+                        bench_kernels, bench_latency, bench_longtail,
+                        bench_memory, bench_routing, bench_thresholds)
+
+ALL = {
+    "longtail": bench_longtail.run,
+    "breakeven": bench_breakeven.run,
+    "latency": bench_latency.run,
+    "thresholds": bench_thresholds.run,
+    "memory": bench_memory.run,
+    "hnsw": bench_hnsw.run,
+    "adaptive": bench_adaptive.run,
+    "routing": bench_routing.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (default: all)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            ALL[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Adaptive load-based policies (§7.5) in the discrete-event simulator.
+
+    PYTHONPATH=src python examples/adaptive_load.py
+
+Runs the Table-1 workload three ways through a 3× spike on the o1 model:
+fixed policies, adaptive with FP-safety (§7.5.6), and adaptive with the
+paper's unconstrained linear assumption — showing the traffic-reduction /
+accuracy trade-off the paper's projection leaves open.
+"""
+
+from repro.core.policy import PolicyEngine, paper_policies
+from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
+from repro.serving.simulator import ServingSimulator, SimConfig
+
+N = 5000
+SPIKE = [(30.0, 900.0, "o1", 3.0)]
+
+
+def run(adaptive: bool, fp_limit: float = 0.05):
+    eng = PolicyEngine(paper_policies())
+    gen = WorkloadGenerator(TABLE1_WORKLOAD, rate_per_s=30.0, seed=3)
+    sim = ServingSimulator(eng, SimConfig(
+        architecture="hybrid", cache_capacity=12000, index_kind="flat",
+        adaptive=adaptive, fp_rate_limit=fp_limit, load_spikes=SPIKE))
+    return sim.run(gen, N)
+
+
+def main():
+    rows = [
+        ("fixed policies", run(False)),
+        ("adaptive + FP-safety", run(True, 0.05)),
+        ("adaptive, unconstrained", run(True, 1.0)),
+    ]
+    base_calls = rows[0][1].model_calls.get("o1", 1)
+    print(f"{'variant':26s} {'o1 calls':>9s} {'reduction':>10s} "
+          f"{'code hit':>9s} {'code FPs':>9s} {'mean ms':>8s}")
+    for name, res in rows:
+        calls = res.model_calls.get("o1", 0)
+        code = res.per_category["code_generation"]
+        print(f"{name:26s} {calls:9d} {1 - calls / base_calls:10.3f} "
+              f"{code['hit_rate']:9.3f} {code['false_positives']:9d} "
+              f"{res.mean_latency_ms:8.1f}")
+    print("\npaper §7.5.4 projects 9-17% reduction (theoretical, no FP "
+          "constraint);\nthe unconstrained run reproduces/exceeds it, the "
+          "FP-safe run shows what survives §7.5.6 monitoring.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Quickstart: the category-aware semantic cache in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's policy set, inserts a few (query → response) pairs,
+and walks every Algorithm-1 path: paraphrase hit, threshold miss,
+compliance rejection, TTL expiry, and a load-adaptive threshold shift.
+"""
+
+from repro.core import SemanticCache, SimClock, PolicyEngine
+from repro.core.embedding import FeatureHashEmbedder
+from repro.core.policy import AdaptiveController, LoadSignal, paper_policies
+
+
+def main():
+    clock = SimClock()
+    controller = AdaptiveController()
+    controller.register_model("o1", latency_target_ms=600, queue_target=32)
+    policies = PolicyEngine(paper_policies(), controller=controller)
+    cache = SemanticCache(policies, capacity=4096, clock=clock,
+                          index_kind="hnsw", l1_capacity=64)
+    embed = FeatureHashEmbedder()
+
+    # 1. populate
+    pairs = [
+        ("how do I sort a list in python", "Use sorted(xs) or xs.sort().",
+         "code_generation"),
+        ("reverse a string in python", "s[::-1]", "code_generation"),
+        ("what is the capital of france", "Paris.", "conversational_chat"),
+    ]
+    for q, r, cat in pairs:
+        cache.insert(embed.embed(q), cat, q, r)
+    print(f"cached {len(cache)} entries")
+
+    # 2. near-duplicate hit in the tight code category (τ=0.90, §3.1)
+    res = cache.lookup(embed.embed("how do I sort a list in python?"),
+                       "code_generation")
+    print(f"code near-duplicate → hit={res.hit} score={res.score:.3f} "
+          f"response={res.response!r}")
+
+    # 2b. looser paraphrase hits in the sparse chat category (τ=0.75)
+    res = cache.lookup(embed.embed("what is the capital city of france"),
+                       "conversational_chat")
+    print(f"chat paraphrase → hit={res.hit} score={res.score:.3f} "
+          f"response={res.response!r}")
+
+    # 3. semantically different query → miss in 2 ms, no external access
+    res = cache.lookup(embed.embed("delete every file on my disk"),
+                       "code_generation")
+    print(f"distinct intent → hit={res.hit} reason={res.reason}")
+
+    # 4. compliance category never caches (§6.4)
+    res = cache.lookup(embed.embed("patient 1234 lab results"),
+                       "phi_medical_records")
+    print(f"PHI category → hit={res.hit} reason={res.reason}")
+
+    # 5. TTL enforcement BEFORE external fetch (§5.4)
+    cache.insert(embed.embed("AAPL price right now"), "financial_data",
+                 "AAPL price right now", "$212.33")
+    clock.advance(600)                      # financial TTL = 5 min
+    res = cache.lookup(embed.embed("AAPL price right now"), "financial_data")
+    print(f"stale quote after 10 min → hit={res.hit} reason={res.reason}")
+
+    # 6. adaptive relaxation under load (§7.5)
+    base = policies.effective("code_generation").threshold
+    for _ in range(64):
+        controller.observe("o1", LoadSignal(latency_ms=2000, queue_depth=128))
+    relaxed = policies.effective("code_generation").threshold
+    print(f"o1 under 3x load: τ {base:.3f} → {relaxed:.3f}, "
+          f"TTL ×{policies.effective('code_generation').ttl / (7 * 86400):.2f}")
+
+    print("\nper-category stats:")
+    for cat, st in cache.metrics.snapshot().items():
+        print(f"  {cat}: {st}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: category-aware semantic caching for heterogeneous LLM workloads.
+
+Production-grade JAX framework implementing Wang et al., "Category-Aware
+Semantic Caching for Heterogeneous LLM Workloads" (CS.DB 2025):
+
+- ``repro.core``     — the paper's contribution: category policy engine,
+                       hybrid HNSW-in-memory / external-document cache,
+                       break-even economics, adaptive load-based policies.
+- ``repro.models``   — LLM substrate (dense / MoE / SSM / hybrid / enc-dec).
+- ``repro.kernels``  — Pallas TPU kernels for the cache + attention hot spots.
+- ``repro.serving``  — batched serving engine, multi-model router, simulator.
+- ``repro.launch``   — production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,183 @@
+"""Three-term roofline from compiled dry-run artifacts (deliverable g).
+
+    compute_s    = HLO_FLOPs / peak_FLOPs          (per chip)
+    memory_s     = HLO_bytes / HBM_bw              (per chip)
+    collective_s = collective_bytes / link_bw      (per chip)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (post-SPMD =
+per-device); collective bytes are parsed from the HLO text by summing
+result-shape bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (shapes there are per-device too).
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# e.g.  %ag = bf16[2,512,128]{2,1,0} all-gather(...), or tuple results
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(?)((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum per-device result bytes per collective kind."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = sum(shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(shapes))
+        out[kind] = out.get(kind, 0) + total
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    hlo_flops: float                 # per device
+    hlo_bytes: float                 # per device
+    collective_bytes: float          # per device
+    collectives: dict = field(default_factory=dict)
+    model_flops: float = 0.0         # 6·N·D or 2·N·D (global)
+    n_devices: int = 256
+    param_bytes: float = 0.0         # global (bf16)
+    cache_bytes: float = 0.0         # global KV/SSM cache (decode cells)
+    kind: str = "train"              # train | prefill | decode
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × devices): remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def ideal_step_s(self) -> float:
+        """Workload-intrinsic lower bound per device.
+
+        train/prefill: useful-FLOPs compute time (the MFU ideal).
+        decode: additionally bounded by one streaming pass over weights +
+        KV/SSM state (decode is bandwidth-bound by construction).
+        """
+        compute = (self.model_flops / self.n_devices) / PEAK_FLOPS
+        if self.kind != "decode":
+            return compute
+        bytes_ideal = (self.param_bytes + self.cache_bytes) / self.n_devices
+        return max(compute, bytes_ideal / HBM_BW)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_step / roofline step — how close the compiled program is
+        to the workload's intrinsic roofline (≈ MFU for train/prefill,
+        bandwidth utilization for decode)."""
+        if self.step_time_s == 0:
+            return 0.0
+        return self.ideal_step_s / self.step_time_s
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bottleneck=self.bottleneck,
+                 step_time_s=self.step_time_s,
+                 ideal_step_s=self.ideal_step_s,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n = cfg.active_param_count()
+    return (6.0 if shape_kind == "train" else 2.0) * n * tokens
+
+
+def report_from_dryrun(payload: dict) -> RooflineReport:
+    shape = payload["shape"]
+    kind = ("train" if "train" in shape
+            else "prefill" if "prefill" in shape else "decode")
+    parsed = payload.get("hlo_cost")
+    if parsed:   # loop-aware measurement (preferred; see hlo_cost.py)
+        flops = float(parsed["flops"])
+        byts = float(parsed["bytes"])
+        coll_bytes = float(parsed["total_collective_bytes"])
+        coll = {"bytes": parsed["collective_bytes"],
+                "counts": parsed["collective_counts"],
+                "total_bytes": coll_bytes}
+    else:        # fall back to XLA's single-pass numbers
+        cost = payload.get("cost_analysis") or {}
+        coll = payload.get("collectives") or {}
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        coll_bytes = float(coll.get("total_bytes", 0.0))
+    return RooflineReport(
+        arch=payload["arch"], shape=shape, mesh=payload["mesh"],
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        collective_bytes=coll_bytes,
+        collectives=coll,
+        model_flops=float(payload.get("model_flops", 0.0)),
+        n_devices=int(payload.get("n_devices", 256)),
+        param_bytes=float(payload.get("active_params", 0)) * 2.0,
+        cache_bytes=float(payload.get("cache_bytes", 0.0)),
+        kind=kind,
+    )
+
+
+def load_reports(path: str) -> list[RooflineReport]:
+    import glob
+    import os
+    reports = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            reports.append(report_from_dryrun(json.load(fh)))
+    return reports

@@ -1,0 +1,8 @@
+"""Fault-tolerant checkpointing with elastic resharding."""
+
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    AsyncCheckpointer,
+)

@@ -1,0 +1,169 @@
+"""Sharded, atomic, async checkpointing with elastic reshard-on-restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/step_000123/
+        manifest.json      — tree structure, leaf dtypes/shapes, extras
+        arrays.npz         — flat {leaf_path: ndarray}; fp32/bf16/int8 kept
+    ckpt_dir/step_000123.tmp…  → atomically renamed when complete
+
+Restore is **elastic**: arrays are loaded as host numpy and re-placed with
+``jax.device_put`` under the *restoring* mesh's shardings — a checkpoint
+written on the 16×16 mesh restores onto 2×16×16 (or a single CPU device)
+unchanged (DESIGN.md §4 fault tolerance). bf16 leaves round-trip via a
+uint16 view (npz has no bf16).
+
+``AsyncCheckpointer`` runs saves on a writer thread (training continues),
+keeps the newest K checkpoints, and ``wait()`` joins at shutdown /
+preemption (SIGTERM handler in ``repro.distributed.fault``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    if arr.dtype == jax.numpy.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return arr.view(jax.numpy.bfloat16)
+    return arr
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: dict,
+                    extras: dict | None = None, keep: int = 3) -> str:
+    """Atomic checkpoint write. ``extras`` = JSON-serializable state
+    (data-pipeline cursor, RNG, config fingerprint)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": {}, "extras": extras or {}}
+    for path, leaf in flat.items():
+        arr, dtype = _to_numpy(leaf)
+        arrays[path] = arr
+        manifest["leaves"][path] = {"dtype": dtype,
+                                    "shape": list(arr.shape)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.isdir(final):         # same-step overwrite (emergency save)
+        shutil.rmtree(final)
+    os.replace(tmp, final)           # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        (d for d in os.listdir(ckpt_dir) if re.fullmatch(r"step_\d+", d)))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if re.fullmatch(r"step_\d+", d)]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int | None = None,
+                       shardings: dict | None = None,
+                       ) -> tuple[dict, dict, int]:
+    """Returns (tree, extras, step). ``shardings``: optional pytree of
+    NamedSharding for elastic re-placement onto the current mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat = {}
+    for leaf_path, meta in manifest["leaves"].items():
+        flat[leaf_path] = _from_numpy(npz[leaf_path], meta["dtype"])
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        def place(path, arr):
+            sh = flat_sh.get(path)
+            return jax.device_put(arr, sh) if sh is not None else arr
+        tree = _unflatten({p: place(p, a) for p, a in _flatten(tree).items()})
+    return tree, manifest["extras"], step
+
+
+class AsyncCheckpointer:
+    """Writer-thread checkpointing: ``save`` snapshots to host immediately
+    (so training can donate/overwrite buffers) and persists in background."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree: dict, extras: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def run():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, extras,
+                                self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,38 @@
+"""The paper's primary contribution: category-aware semantic caching.
+
+Modules:
+    policy     — per-category configs + adaptive load-based controller (§3, §7.5)
+    embedding  — 384-d feature-hash embedder + synthetic category spaces (§3.1)
+    hnsw       — TPU-adapted batched-frontier HNSW index (§5, §5.3)
+    cache      — hybrid cache: Algorithm 1 lookup, insert, evict, quotas (§5)
+    storage    — external document stores + vector-DB baseline emulator (§4)
+    economics  — break-even analysis, eqs (1)-(6) (§4.4, §5.5, §7.5.1)
+    workload   — heterogeneous category workload generator (Table 1)
+    metrics    — per-category statistics
+    clock      — simulated / wall clocks
+"""
+
+from repro.core.policy import (  # noqa: F401
+    CategoryConfig,
+    PolicyEngine,
+    AdaptiveController,
+    LoadSignal,
+)
+from repro.core.cache import SemanticCache, CacheResult  # noqa: F401
+from repro.core.economics import (  # noqa: F401
+    break_even_hit_rate,
+    expected_latency,
+    CostModel,
+    HYBRID_COSTS,
+    VDB_COSTS,
+)
+from repro.core.embedding import FeatureHashEmbedder, SyntheticCategorySpace  # noqa: F401
+from repro.core.hnsw import HNSWIndex, FlatIndex  # noqa: F401
+from repro.core.storage import (  # noqa: F401
+    InMemoryStore,
+    FileStore,
+    LatencyModelStore,
+    VectorDBEmulator,
+)
+from repro.core.workload import WorkloadGenerator, CategorySpec, TABLE1_WORKLOAD  # noqa: F401
+from repro.core.clock import SimClock, WallClock  # noqa: F401

@@ -1,0 +1,321 @@
+"""The hybrid category-aware semantic cache (paper §5, Algorithm 1).
+
+In-memory index (HNSW or flat) over embeddings + per-slot category metadata;
+documents live in an external ``DocumentStore`` reached by primary key only
+on fresh, above-threshold hits. Policy enforcement points (§5.4):
+
+    compliance  — before anything (Algorithm 1 line 5): restricted
+                  categories never enter the cache, no temporary presence
+    threshold   — during traversal (per-query τ vector, §5.3)
+    TTL         — after match, BEFORE external fetch (line 18): expired
+                  entries evict without wasting a network call
+    quota       — at insertion: per-category share of capacity
+    eviction    — score = priority × 1/age × hitRate (§5.4); lowest evicted
+
+Extensions implemented from §7.6: hot-document L1 (in-memory docs for the
+power-law head → hit latency 7 ms → 2 ms).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.clock import Clock, SimClock
+from repro.core.hnsw import FlatIndex, HNSWIndex, INVALID
+from repro.core.metrics import MetricsRegistry
+from repro.core.policy import PolicyEngine
+from repro.core.storage import Document, DocumentStore, InMemoryStore
+
+
+@dataclass
+class CacheResult:
+    hit: bool
+    response: str | None = None
+    score: float = float("-inf")
+    category: str = ""
+    slot: int = INVALID
+    doc_id: int = INVALID
+    reason: str = ""        # "hit" | "hit_l1" | "compliance" | "no_match" | "expired"
+    latency_ms: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+class SemanticCache:
+    """Category-aware hybrid semantic cache.
+
+    ``index_kind``: "hnsw" (default) or "flat" (exact; small caches).
+    ``use_device``: route batched lookups through the jitted beam search
+    (TPU data plane); otherwise the host search is used (CPU benchmarks).
+    """
+
+    def __init__(self, policies: PolicyEngine, dim: int = 384,
+                 capacity: int = 65536, store: DocumentStore | None = None,
+                 clock: Clock | None = None, index_kind: str = "hnsw",
+                 use_device: bool = False, search_ms: float = 2.0,
+                 insert_ms: float = 1.0, l1_capacity: int = 0,
+                 seed: int = 0):
+        self.policies = policies
+        self.dim = dim
+        self.capacity = capacity
+        self.clock = clock or SimClock()
+        self.store = store if store is not None else InMemoryStore()
+        self.use_device = use_device
+        self.search_ms = search_ms
+        self.insert_ms = insert_ms
+        self.metrics = MetricsRegistry()
+
+        if index_kind == "hnsw":
+            self.index: HNSWIndex | FlatIndex = HNSWIndex(dim, capacity, seed=seed)
+        elif index_kind == "flat":
+            self.index = FlatIndex(dim, capacity)
+        else:
+            raise ValueError(f"unknown index_kind {index_kind!r}")
+
+        # Per-slot metadata (§5.1: ~112 B/entry overhead).
+        self.slot_category = np.full(capacity, -1, np.int32)
+        self.slot_inserted = np.zeros(capacity, np.float64)
+        self.slot_hits = np.zeros(capacity, np.int64)
+        self.slot_doc = np.full(capacity, INVALID, np.int64)
+        self.slot_valid = np.zeros(capacity, bool)
+        self._cat_names: dict[int, str] = {}
+        self._next_doc_id = 0
+
+        # §7.6 hot-document L1.
+        self.l1_capacity = l1_capacity
+        self._l1: dict[int, str] = {}           # doc_id -> response
+        self._l1_order: list[int] = []
+
+    # ------------------------------------------------------------------ utils
+    def __len__(self) -> int:
+        return int(self.slot_valid.sum())
+
+    def _cat_id(self, name: str) -> int:
+        cid = self.policies.category_id(name)
+        self._cat_names[cid] = name
+        return cid
+
+    def category_count(self, name: str) -> int:
+        cid = self.policies.category_id(name)
+        return int((self.slot_valid & (self.slot_category == cid)).sum())
+
+    # -------------------------------------------------------------- Algorithm 1
+    def lookup(self, embedding: np.ndarray, category: str) -> CacheResult:
+        return self.lookup_batch(embedding[None, :], [category])[0]
+
+    def lookup_batch(self, embeddings: np.ndarray,
+                     categories: Sequence[str]) -> list[CacheResult]:
+        """Vectorized Algorithm 1 over a mixed-category batch."""
+        B = embeddings.shape[0]
+        assert len(categories) == B
+        now = self.clock.now()
+        results: list[CacheResult] = [None] * B  # type: ignore[list-item]
+
+        # Line 4-7: per-category config + compliance gate.
+        effective = [self.policies.effective(c) for c in categories]
+        active = [i for i in range(B) if effective[i].allow_caching]
+        for i in range(B):
+            st = self.metrics.cat(categories[i])
+            st.lookups += 1
+            if not effective[i].allow_caching:
+                st.compliance_rejects += 1
+                st.misses += 1
+                results[i] = CacheResult(False, category=categories[i],
+                                         reason="compliance")
+        if not active:
+            return results
+
+        # Line 9-11: search with per-query thresholds DURING traversal.
+        self.clock.advance(self.search_ms / 1e3)
+        q = embeddings[active]
+        taus = np.asarray([effective[i].threshold for i in active], np.float32)
+        if self.use_device and isinstance(self.index, HNSWIndex):
+            idxs, scores = self.index.search_batch(q, taus)
+        else:
+            idxs, scores = self.index.search_host(q, taus)
+
+        for pos, i in enumerate(active):
+            cat = categories[i]
+            st = self.metrics.cat(cat)
+            slot, score = int(idxs[pos]), float(scores[pos])
+
+            # Line 12-14: miss → return immediately, no external access.
+            if slot == INVALID or not self.slot_valid[slot]:
+                st.misses += 1
+                results[i] = CacheResult(False, score=score, category=cat,
+                                         reason="no_match",
+                                         latency_ms=self.search_ms)
+                continue
+
+            # Category isolation: a match from another category is a miss
+            # (its τ/TTL regime differs; cross-category reuse is unsound).
+            if self.slot_category[slot] != self._cat_id(cat):
+                st.misses += 1
+                results[i] = CacheResult(False, score=score, category=cat,
+                                         reason="category_mismatch",
+                                         latency_ms=self.search_ms)
+                continue
+
+            # Line 18-21: TTL validated BEFORE the external fetch.
+            age = now - self.slot_inserted[slot]
+            if age > effective[i].ttl:
+                self._evict_slot(slot, reason="ttl")
+                st.ttl_evictions += 1
+                st.misses += 1
+                results[i] = CacheResult(False, score=score, category=cat,
+                                         reason="expired",
+                                         latency_ms=self.search_ms)
+                continue
+
+            # Line 23-25: fetch by ID (L1 first — §7.6 extension).
+            doc_id = int(self.slot_doc[slot])
+            self.slot_hits[slot] += 1
+            st.hits += 1
+            if doc_id in self._l1:
+                self._l1_touch(doc_id)
+                results[i] = CacheResult(True, response=self._l1[doc_id],
+                                         score=score, category=cat, slot=slot,
+                                         doc_id=doc_id, reason="hit_l1",
+                                         latency_ms=self.search_ms)
+                continue
+            doc = self.store.get(doc_id)
+            if doc is None:   # store lost the doc (crash recovery): treat as miss
+                self._evict_slot(slot, reason="missing_doc")
+                st.misses += 1
+                st.hits -= 1
+                self.slot_hits[slot] -= 1
+                results[i] = CacheResult(False, score=score, category=cat,
+                                         reason="missing_doc",
+                                         latency_ms=self.search_ms)
+                continue
+            self._l1_maybe_promote(doc_id, doc.response, self.slot_hits[slot])
+            results[i] = CacheResult(True, response=doc.response, score=score,
+                                     category=cat, slot=slot, doc_id=doc_id,
+                                     reason="hit", latency_ms=self.search_ms)
+        return results
+
+    # ------------------------------------------------------------------ insert
+    def insert(self, embedding: np.ndarray, category: str, request: str,
+               response: str, meta: dict | None = None) -> int:
+        """Insert one (query → response) pair. Returns slot id or INVALID.
+
+        Enforcement: compliance pre-insertion (§5.4 — restricted categories
+        never create temporary data presence), per-category quota, global
+        capacity eviction by economic score.
+        """
+        eff = self.policies.effective(category)
+        st = self.metrics.cat(category)
+        if not eff.allow_caching or eff.quota <= 0.0:
+            st.insert_rejects += 1
+            return INVALID
+
+        cid = self._cat_id(category)
+        cat_quota = int(eff.quota * self.capacity)
+        if self.category_count(category) >= max(1, cat_quota):
+            victim = self._lowest_score_slot(within_category=cid)
+            if victim != INVALID:
+                self._evict_slot(victim, reason="quota")
+                st.quota_evictions += 1
+        if len(self) >= self.capacity:
+            victim = self._lowest_score_slot()
+            if victim != INVALID:
+                vic_cat = self._cat_names.get(int(self.slot_category[victim]), "?")
+                self._evict_slot(victim, reason="capacity")
+                self.metrics.cat(vic_cat).capacity_evictions += 1
+
+        self.clock.advance(self.insert_ms / 1e3)
+        doc_id = self._next_doc_id
+        self._next_doc_id += 1
+        now = self.clock.now()
+        self.store.put(Document(doc_id, request, response, now, category,
+                                meta or {}))
+        slot = self.index.add(np.asarray(embedding, np.float32))
+        self.slot_category[slot] = cid
+        self.slot_inserted[slot] = now
+        self.slot_hits[slot] = 0
+        self.slot_doc[slot] = doc_id
+        self.slot_valid[slot] = True
+        st.inserts += 1
+        return slot
+
+    # ----------------------------------------------------------------- eviction
+    def _entry_score(self, slots: np.ndarray) -> np.ndarray:
+        """§5.4: score = priority × 1/age × hitRate (hits+1 so fresh entries
+        aren't instantly evicted). Higher = more valuable."""
+        now = self.clock.now()
+        age = np.maximum(now - self.slot_inserted[slots], 1e-3)
+        pri = np.asarray([
+            self.policies.get(self._cat_names.get(int(c), "__default__")).priority
+            for c in self.slot_category[slots]])
+        return pri * (1.0 / age) * (self.slot_hits[slots] + 1)
+
+    def _lowest_score_slot(self, within_category: int | None = None) -> int:
+        mask = self.slot_valid.copy()
+        if within_category is not None:
+            mask &= self.slot_category == within_category
+        slots = np.where(mask)[0]
+        if slots.size == 0:
+            return INVALID
+        scores = self._entry_score(slots)
+        return int(slots[int(np.argmin(scores))])
+
+    def _evict_slot(self, slot: int, reason: str = "") -> None:
+        if not self.slot_valid[slot]:
+            return
+        self.index.remove(slot)
+        doc_id = int(self.slot_doc[slot])
+        self.store.delete(doc_id)
+        self._l1.pop(doc_id, None)
+        self.slot_valid[slot] = False
+        self.slot_category[slot] = -1
+        self.slot_doc[slot] = INVALID
+
+    def sweep_expired(self) -> int:
+        """Background TTL sweep (complement to lookup-time validation)."""
+        now = self.clock.now()
+        n = 0
+        for slot in np.where(self.slot_valid)[0]:
+            cat = self._cat_names.get(int(self.slot_category[slot]), "__default__")
+            ttl = self.policies.effective(cat).ttl
+            if now - self.slot_inserted[slot] > ttl:
+                self._evict_slot(slot, reason="ttl_sweep")
+                self.metrics.cat(cat).ttl_evictions += 1
+                n += 1
+        return n
+
+    # ----------------------------------------------------------------- L1 docs
+    def _l1_touch(self, doc_id: int) -> None:
+        if doc_id in self._l1_order:
+            self._l1_order.remove(doc_id)
+        self._l1_order.append(doc_id)
+
+    def _l1_maybe_promote(self, doc_id: int, response: str, hits: int) -> None:
+        if self.l1_capacity <= 0 or hits < 2:
+            return
+        if doc_id not in self._l1 and len(self._l1) >= self.l1_capacity:
+            victim = self._l1_order.pop(0)
+            self._l1.pop(victim, None)
+        self._l1[doc_id] = response
+        self._l1_touch(doc_id)
+
+    # ----------------------------------------------------------------- reports
+    def memory_report(self) -> dict:
+        """§5.1/§7.4 accounting: bytes/entry in-memory vs externalized."""
+        n = max(1, len(self))
+        emb_bytes = self.dim * 4
+        graph_bytes = 0
+        if isinstance(self.index, HNSWIndex):
+            graph_bytes = sum(nb.shape[1] * 4 for nb in self.index.neighbors)
+        overhead = 16 + 64 + 32   # id map + category metadata + statistics
+        doc_bytes = (self.store.total_bytes() // n
+                     if isinstance(self.store, InMemoryStore) and len(self.store) else 0)
+        return {
+            "entries": len(self),
+            "in_memory_bytes_per_entry": emb_bytes + graph_bytes + overhead,
+            "embedding_bytes": emb_bytes,
+            "graph_bytes": graph_bytes,
+            "metadata_overhead_bytes": overhead,
+            "external_doc_bytes_per_entry": doc_bytes,
+        }

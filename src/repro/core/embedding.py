@@ -1,0 +1,176 @@
+"""Embedding providers (§3.1).
+
+Two providers, both deterministic and offline:
+
+``FeatureHashEmbedder``
+    Character/word n-gram feature hashing into ``dim`` buckets with signed
+    hashing, L2-normalized. Stable across processes (crc32-based, not
+    Python's randomized ``hash``). Real text in → real 384-d vectors out.
+
+``SyntheticCategorySpace``
+    The controlled generator used by benchmarks: each category owns a set of
+    cluster centers on the unit sphere; queries are ``center + sigma * noise``
+    re-normalized. ``sigma`` (paraphrase spread) and the number of centers
+    control *embedding-space density* — the paper's key category property
+    (10th-NN distance ~0.12 for code vs ~0.38 for chat).
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+EMBED_DIM = 384  # paper §5.1: 1.5 KB/entry at 384 dims (fp32)
+
+
+def _stable_hash(token: str, salt: int = 0) -> int:
+    return zlib.crc32((f"{salt}\x00" + token).encode("utf-8")) & 0xFFFFFFFF
+
+
+class FeatureHashEmbedder:
+    """Signed n-gram feature hashing. Deterministic, dependency-free."""
+
+    def __init__(self, dim: int = EMBED_DIM, char_ngrams: tuple[int, ...] = (3, 4),
+                 use_words: bool = True):
+        self.dim = dim
+        self.char_ngrams = char_ngrams
+        self.use_words = use_words
+
+    def _features(self, text: str) -> list[str]:
+        text = text.lower().strip()
+        feats: list[str] = []
+        if self.use_words:
+            feats.extend(w for w in text.split() if w)
+        padded = f" {text} "
+        for n in self.char_ngrams:
+            feats.extend(padded[i:i + n] for i in range(max(0, len(padded) - n + 1)))
+        return feats
+
+    def embed(self, text: str) -> np.ndarray:
+        vec = np.zeros(self.dim, dtype=np.float32)
+        for feat in self._features(text):
+            h = _stable_hash(feat)
+            idx = h % self.dim
+            sign = 1.0 if (h >> 31) & 1 else -1.0
+            vec[idx] += sign
+        norm = float(np.linalg.norm(vec))
+        if norm > 0:
+            vec /= norm
+        return vec
+
+    def embed_batch(self, texts: list[str]) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.dim), dtype=np.float32)
+        return np.stack([self.embed(t) for t in texts])
+
+
+def _unit(v: np.ndarray, axis: int = -1) -> np.ndarray:
+    n = np.linalg.norm(v, axis=axis, keepdims=True)
+    return v / np.maximum(n, 1e-12)
+
+
+@dataclass
+class SyntheticCategorySpace:
+    """Controlled-density embedding space for one category.
+
+    ``n_centers`` distinct semantic intents; ``sigma`` paraphrase noise.
+    Dense (code-like) spaces: many nearby centers, small sigma.
+    Sparse (chat-like) spaces: spread-out centers, larger sigma.
+
+    ``center_spread`` < 1 concentrates the centers themselves around a
+    category anchor, producing the dense cluster geometry where a loose
+    threshold causes cross-intent false positives (§3.1). Centers get a
+    per-center spread jitter so cross-intent similarities are dispersed
+    (graded FP-vs-τ curves rather than a cliff).
+
+    Paraphrases are a two-component mixture: most rephrasings stay tight
+    (σ), a ``loose_frac`` minority drifts further (σ·loose_mult) — the
+    sub-threshold mass that §7.5.2's threshold relaxation recovers.
+    """
+
+    name: str
+    n_centers: int
+    sigma: float
+    center_spread: float = 1.0
+    loose_frac: float = 0.30
+    loose_mult: float = 2.4
+    dim: int = EMBED_DIM
+    seed: int = 0
+    _centers: np.ndarray = field(init=False, repr=False, default=None)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(
+            zlib.crc32(self.name.encode()) ^ self.seed)
+        anchor = _unit(rng.standard_normal(self.dim))
+        raw = rng.standard_normal((self.n_centers, self.dim))
+        # Per-center spread jitter disperses the cross-intent sims.
+        w = self.center_spread * rng.uniform(0.85, 1.30, (self.n_centers, 1))
+        mixed = w * raw + (1.0 - w) * anchor * np.sqrt(self.dim)
+        self._centers = _unit(mixed).astype(np.float32)
+        self._rng = rng
+
+    @property
+    def centers(self) -> np.ndarray:
+        return self._centers
+
+    def _sigmas(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        loose = rng.random(n) < self.loose_frac
+        return np.where(loose, self.sigma * self.loose_mult, self.sigma)
+
+    def sample(self, intent_id: int, rng: np.random.Generator | None = None) -> np.ndarray:
+        """One paraphrase of intent ``intent_id``."""
+        rng = rng or self._rng
+        c = self._centers[intent_id % self.n_centers]
+        sig = self._sigmas(1, rng)[0]
+        noisy = c + sig * rng.standard_normal(self.dim).astype(np.float32)
+        return _unit(noisy).astype(np.float32)
+
+    def sample_batch(self, intent_ids: np.ndarray, rng: np.random.Generator | None = None) -> np.ndarray:
+        rng = rng or self._rng
+        c = self._centers[np.asarray(intent_ids) % self.n_centers]
+        sig = self._sigmas(c.shape[0], rng)[:, None].astype(np.float32)
+        noisy = c + sig * rng.standard_normal(c.shape).astype(np.float32)
+        return _unit(noisy).astype(np.float32)
+
+    def nn_distance_profile(self, k: int = 10, n_probe: int = 256,
+                            rng: np.random.Generator | None = None) -> float:
+        """Mean cosine *distance* to the k-th NN among sampled queries.
+
+        Reproduces the paper's density characterization (§3.1): ~0.12 for
+        dense code spaces, ~0.38 for sparse conversational spaces.
+        """
+        rng = rng or np.random.default_rng(1234)
+        ids = rng.integers(0, self.n_centers, size=n_probe)
+        pts = self.sample_batch(ids, rng)
+        sims = pts @ pts.T
+        np.fill_diagonal(sims, -np.inf)
+        kth = np.sort(sims, axis=1)[:, -k]
+        return float(np.mean(1.0 - kth))
+
+
+def make_dense_space(name: str = "code", seed: int = 0) -> SyntheticCategorySpace:
+    """Code-like: constrained vocabulary → tight clusters.
+
+    Calibrated (384-d): tight paraphrase cos ≈ 0.97, loose ≈ 0.87,
+    cross-intent max-sim quartiles ≈ 0.82–0.92, 10th-NN distance ≈ 0.15
+    (paper §3.1 ≈ 0.12) — τ=0.80 produces graded cross-intent false
+    positives that τ=0.90 suppresses, and the loose-paraphrase mass in
+    (0.85, 0.90) is what §7.5.2 threshold relaxation recovers.
+    """
+    return SyntheticCategorySpace(name=name, n_centers=2000, sigma=0.012,
+                                  center_spread=0.25, loose_frac=0.30,
+                                  loose_mult=2.4, seed=seed)
+
+
+def make_sparse_space(name: str = "chat", seed: int = 0) -> SyntheticCategorySpace:
+    """Conversation-like: varied phrasing → sparse clusters.
+
+    Calibrated (384-d): paraphrase cos ≈ 0.92 (tight) / 0.83 (loose),
+    cross-intent max ≈ 0.65, 10th-NN distance ≈ 0.35 (paper §3.1 ≈ 0.38) —
+    τ=0.80 misses loose paraphrases, τ=0.75 captures them FP-free.
+    """
+    return SyntheticCategorySpace(name=name, n_centers=2000, sigma=0.022,
+                                  center_spread=0.36, loose_frac=0.30,
+                                  loose_mult=1.5, seed=seed)

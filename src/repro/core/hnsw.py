@@ -1,0 +1,486 @@
+"""TPU-adapted HNSW index (paper §5, §5.3, §7.4).
+
+The paper's hot loop is CPU HNSW: pointer-chasing greedy traversal with
+per-category thresholds applied *during* traversal and early exit on the
+first match above threshold. A literal port is hostile to TPU, so the
+device-side search is re-blocked for the MXU (see DESIGN.md §3):
+
+* **Host control plane** (this module, numpy): hierarchical HNSW insertion,
+  level assignment, neighbor wiring, tombstoning, entry-point maintenance.
+  Also an exact hierarchical search used for CPU latency benchmarks.
+* **Device data plane** (JAX): *batched fixed-width beam search* over the
+  level-0 graph from a multi-entry start set. One hop = gather (B,F,M)
+  neighbor ids → gather embeddings → one (B, F·M, d)×(B, d) contraction on
+  the MXU → top-F merge. Early exit is the `while_loop` predicate
+  ``best_score ≥ τ_q`` with a per-query threshold vector — the paper's
+  threshold-during-traversal, vectorized. The gather+score primitive has a
+  Pallas kernel (``repro.kernels.gather_scores``); the pure-jnp path here is
+  the portable reference used on CPU.
+
+Capacity is fixed at construction: tables are preallocated so the jitted
+search never recompiles as the cache fills.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = -1
+
+
+# ---------------------------------------------------------------------------
+# Flat (brute force) index — exact oracle + small-category fast path.
+# ---------------------------------------------------------------------------
+
+class FlatIndex:
+    """Exact cosine top-1 with threshold. O(n·d) per query batch.
+
+    On TPU this is memory-bound at ~1.9 ms per 1M×384 fp32 scan (819 GB/s),
+    which is *itself* within the paper's 2 ms local-search budget — see
+    EXPERIMENTS.md. Kernel: ``repro.kernels.flat_topk``.
+    """
+
+    def __init__(self, dim: int, capacity: int):
+        self.dim = dim
+        self.capacity = capacity
+        self.emb = np.zeros((capacity, dim), dtype=np.float32)
+        self.valid = np.zeros((capacity,), dtype=bool)
+        self._n = 0
+        self._free: list[int] = []
+
+    def __len__(self) -> int:
+        return int(self.valid.sum())
+
+    def add(self, vec: np.ndarray) -> int:
+        slot = self._free.pop() if self._free else self._n
+        if slot >= self.capacity:
+            raise RuntimeError("FlatIndex full — evict before inserting")
+        if slot == self._n:
+            self._n += 1
+        self.emb[slot] = vec
+        self.valid[slot] = True
+        return slot
+
+    def remove(self, slot: int) -> None:
+        if self.valid[slot]:
+            self.valid[slot] = False
+            self._free.append(slot)
+
+    def search_host(self, queries: np.ndarray, thresholds: np.ndarray,
+                    ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (idx, score) per query; idx = -1 below threshold."""
+        queries = np.atleast_2d(queries)
+        if self._n == 0:
+            B = queries.shape[0]
+            return np.full(B, INVALID, np.int32), np.full(B, -np.inf, np.float32)
+        sims = queries @ self.emb[:self._n].T                     # (B, n)
+        sims = np.where(self.valid[None, :self._n], sims, -np.inf)
+        idx = np.argmax(sims, axis=1)
+        score = sims[np.arange(len(idx)), idx]
+        ok = score >= thresholds
+        return (np.where(ok, idx, INVALID).astype(np.int32),
+                score.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Device-side batched beam search (pure-jnp reference implementation).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("beam", "max_hops"))
+def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
+                neighbors: jax.Array,    # (cap, M0) int32, INVALID padded
+                valid: jax.Array,        # (cap,) bool
+                entries: jax.Array,      # (E,) int32 entry points
+                queries: jax.Array,      # (B, d) float32, L2-normalized
+                thresholds: jax.Array,   # (B,) float32 per-query τ (category)
+                *, beam: int = 32, max_hops: int = 12):
+    """Batched fixed-width beam search with per-query threshold early exit.
+
+    Returns (best_idx (B,), best_score (B,), hops_used ()). best_idx is -1
+    where no valid node reached the query's threshold (a cache miss —
+    paper Algorithm 1 line 12-14: return immediately, no external access).
+
+    Tombstoned (invalid) nodes still route traffic (DiskANN-style) but are
+    excluded from results.
+    """
+    B = queries.shape[0]
+    E = entries.shape[0]
+
+    def score_nodes(idx):  # idx (B, K) -> cosine scores (B, K)
+        vecs = jnp.take(emb, jnp.maximum(idx, 0), axis=0)          # (B,K,d)
+        s = jnp.einsum("bkd,bd->bk", vecs, queries)
+        return jnp.where(idx == INVALID, -jnp.inf, s)
+
+    # Initial frontier: entry points (same for all queries), padded to beam.
+    if E >= beam:
+        f0 = entries.astype(jnp.int32)[:beam]
+    else:
+        f0 = jnp.concatenate([entries.astype(jnp.int32),
+                              jnp.full((beam - E,), INVALID, jnp.int32)])
+    f_idx = jnp.broadcast_to(f0[None, :], (B, beam))
+    f_score = score_nodes(f_idx)
+
+    res_score = jnp.where(jnp.take(valid, jnp.maximum(f_idx, 0)) & (f_idx != INVALID),
+                          f_score, -jnp.inf)
+    best_score = jnp.max(res_score, axis=1)
+    best_idx = jnp.take_along_axis(f_idx, jnp.argmax(res_score, axis=1)[:, None], axis=1)[:, 0]
+    best_idx = jnp.where(jnp.isfinite(best_score), best_idx, INVALID)
+
+    def cond(state):
+        hop, _, _, best_s, _, done = state
+        return (hop < max_hops) & ~jnp.all(done)
+
+    def body(state):
+        hop, f_idx, f_score, best_s, best_i, done = state
+        # Expand: neighbors of the frontier. (B, F, M) -> (B, F*M)
+        nbr = jnp.take(neighbors, jnp.maximum(f_idx, 0), axis=0)
+        nbr = jnp.where(f_idx[:, :, None] == INVALID, INVALID, nbr)
+        cand = nbr.reshape(B, -1)
+        c_score = score_nodes(cand)
+
+        # Merge frontier ∪ candidates, keep top-beam by raw routing score.
+        all_idx = jnp.concatenate([f_idx, cand], axis=1)
+        all_score = jnp.concatenate([f_score, c_score], axis=1)
+        top_s, top_pos = jax.lax.top_k(all_score, beam)
+        top_i = jnp.take_along_axis(all_idx, top_pos, axis=1)
+
+        # Result tracking only over valid (non-tombstoned) nodes.
+        res_s = jnp.where(jnp.take(valid, jnp.maximum(top_i, 0)) & (top_i != INVALID),
+                          top_s, -jnp.inf)
+        hop_best_s = jnp.max(res_s, axis=1)
+        hop_best_i = jnp.take_along_axis(
+            top_i, jnp.argmax(res_s, axis=1)[:, None], axis=1)[:, 0]
+        improved = hop_best_s > best_s + 1e-9
+        new_best_s = jnp.where(improved, hop_best_s, best_s)
+        new_best_i = jnp.where(improved, hop_best_i, best_i)
+
+        # Early exit (paper §5.3): per-query done once τ reached; also stop
+        # queries whose beam no longer improves (converged).
+        frozen = done[:, None]
+        top_i = jnp.where(frozen, f_idx, top_i)
+        top_s = jnp.where(frozen, f_score, top_s)
+        new_done = done | (new_best_s >= thresholds) | ~improved
+        return hop + 1, top_i, top_s, new_best_s, new_best_i, new_done
+
+    done0 = best_score >= thresholds
+    state = (jnp.asarray(0), f_idx, f_score, best_score, best_idx, done0)
+    hops, _, _, best_score, best_idx, _ = jax.lax.while_loop(cond, body, state)
+
+    hit = best_score >= thresholds
+    return jnp.where(hit, best_idx, INVALID), best_score, hops
+
+
+# ---------------------------------------------------------------------------
+# HNSW proper.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HNSWParams:
+    M: int = 16                 # neighbors per node, upper levels
+    M0: int = 32                # neighbors per node, level 0
+    ef_construction: int = 64
+    ef_search: int = 48         # host-search beam
+    beam: int = 32              # device-search beam width F
+    max_hops: int = 12          # device-search hop cap
+    n_entries: int = 8          # device-search entry set size E
+
+
+class HNSWIndex:
+    """Hierarchical build on host; batched beam search on device.
+
+    Fixed ``capacity``; slots are recycled through a freelist on removal
+    (cache eviction). Device tables are mirrored lazily: ``device_tables()``
+    re-uploads only when the host copy changed (``_version`` bump).
+    """
+
+    def __init__(self, dim: int, capacity: int, params: HNSWParams | None = None,
+                 seed: int = 0):
+        self.dim = dim
+        self.capacity = capacity
+        self.p = params or HNSWParams()
+        self.rng = np.random.default_rng(seed)
+        self.ml = 1.0 / math.log(self.p.M)
+
+        self.emb = np.zeros((capacity, dim), dtype=np.float32)
+        self.valid = np.zeros((capacity,), dtype=bool)
+        self.level = np.full((capacity,), -1, dtype=np.int8)
+        # neighbors[0] is the device-visible level-0 graph.
+        self.neighbors: list[np.ndarray] = [
+            np.full((capacity, self.p.M0), INVALID, dtype=np.int32)
+        ]
+        self.entry_point: int = INVALID
+        self.max_level: int = -1
+        self._n = 0
+        self._free: list[int] = []
+        self._version = 0
+        self._device_version = -1
+        self._device: dict | None = None
+
+    # -- basic bookkeeping ---------------------------------------------------
+    def __len__(self) -> int:
+        return int(self.valid.sum())
+
+    def _alloc_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._n >= self.capacity:
+            raise RuntimeError("HNSWIndex full — evict before inserting")
+        slot = self._n
+        self._n += 1
+        return slot
+
+    def _ensure_level_arrays(self, level: int) -> None:
+        while len(self.neighbors) <= level:
+            self.neighbors.append(
+                np.full((self.capacity, self.p.M), INVALID, dtype=np.int32))
+
+    def _draw_level(self) -> int:
+        return int(-math.log(max(self.rng.random(), 1e-12)) * self.ml)
+
+    # -- host greedy search helpers -------------------------------------------
+    def _greedy_descend(self, q: np.ndarray, entry: int, level: int) -> int:
+        """Greedy 1-best descent at one level (used above the target level)."""
+        cur = entry
+        cur_sim = float(q @ self.emb[cur])
+        improved = True
+        nbrs = self.neighbors[level]
+        while improved:
+            improved = False
+            nb = nbrs[cur]
+            nb = nb[nb != INVALID]
+            if nb.size == 0:
+                break
+            sims = self.emb[nb] @ q
+            j = int(np.argmax(sims))
+            if sims[j] > cur_sim:
+                cur_sim = float(sims[j])
+                cur = int(nb[j])
+                improved = True
+        return cur
+
+    def _search_level(self, q: np.ndarray, entries: list[int], level: int,
+                      ef: int) -> tuple[np.ndarray, np.ndarray]:
+        """Best-first search at one level. Returns (ids, sims) sorted desc."""
+        nbrs = self.neighbors[level]
+        visited = set(entries)
+        cand_ids = list(entries)
+        cand_sims = list(self.emb[entries] @ q)
+        # results kept as parallel arrays, pruned to ef
+        res_ids = list(cand_ids)
+        res_sims = list(cand_sims)
+        while cand_ids:
+            j = int(np.argmax(cand_sims))
+            c_sim = cand_sims.pop(j)
+            c = cand_ids.pop(j)
+            worst = min(res_sims) if len(res_sims) >= ef else -np.inf
+            if c_sim < worst:
+                break
+            nb = nbrs[c]
+            nb = nb[nb != INVALID]
+            nb = [int(x) for x in nb if int(x) not in visited]
+            if not nb:
+                continue
+            visited.update(nb)
+            sims = self.emb[nb] @ q
+            for node, s in zip(nb, sims):
+                if len(res_sims) < ef or s > min(res_sims):
+                    res_ids.append(node)
+                    res_sims.append(float(s))
+                    cand_ids.append(node)
+                    cand_sims.append(float(s))
+                    if len(res_sims) > ef:
+                        k = int(np.argmin(res_sims))
+                        res_ids.pop(k)
+                        res_sims.pop(k)
+        order = np.argsort(res_sims)[::-1]
+        return (np.asarray(res_ids, np.int32)[order],
+                np.asarray(res_sims, np.float32)[order])
+
+    # -- insertion -------------------------------------------------------------
+    def add(self, vec: np.ndarray) -> int:
+        vec = np.asarray(vec, np.float32)
+        slot = self._alloc_slot()
+        self.emb[slot] = vec
+        self.valid[slot] = True
+        lvl = min(self._draw_level(), 8)
+        self.level[slot] = lvl
+        self._ensure_level_arrays(lvl)
+        for l in range(len(self.neighbors)):
+            self.neighbors[l][slot] = INVALID
+
+        if self.entry_point == INVALID:
+            self.entry_point = slot
+            self.max_level = lvl
+            self._version += 1
+            return slot
+
+        cur = self.entry_point
+        for l in range(self.max_level, lvl, -1):
+            cur = self._greedy_descend(vec, cur, l)
+        entries = [cur]
+        for l in range(min(lvl, self.max_level), -1, -1):
+            ids, _sims = self._search_level(vec, entries, l, self.p.ef_construction)
+            m = self.p.M0 if l == 0 else self.p.M
+            chosen = ids[:m]
+            self.neighbors[l][slot, :len(chosen)] = chosen
+            # bidirectional wiring with pruning to closest-m
+            for nb in chosen:
+                row = self.neighbors[l][nb]
+                empty = np.where(row == INVALID)[0]
+                if empty.size:
+                    row[empty[0]] = slot
+                else:
+                    cand = np.concatenate([row, [slot]])
+                    sims = self.emb[cand] @ self.emb[nb]
+                    keep = cand[np.argsort(sims)[::-1][:m]]
+                    self.neighbors[l][nb] = keep
+            entries = list(ids[:1]) if len(ids) else entries
+
+        if lvl > self.max_level:
+            self.max_level = lvl
+            self.entry_point = slot
+        self._version += 1
+        return slot
+
+    def remove(self, slot: int) -> None:
+        """Tombstone: stays routable until slot reuse, excluded from results."""
+        if not self.valid[slot]:
+            return
+        self.valid[slot] = False
+        self._free.append(slot)
+        if slot == self.entry_point:
+            alive = np.where(self.valid)[0]
+            if alive.size:
+                lv = self.level[alive]
+                best = alive[int(np.argmax(lv))]
+                self.entry_point = int(best)
+                self.max_level = int(self.level[best])
+            else:
+                self.entry_point = INVALID
+                self.max_level = -1
+        self._version += 1
+
+    # -- host search (exact hierarchical; CPU latency benchmarks) --------------
+    def search_host(self, queries: np.ndarray, thresholds: np.ndarray,
+                    ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        thresholds = np.broadcast_to(np.asarray(thresholds, np.float32),
+                                     (queries.shape[0],))
+        ef = ef or self.p.ef_search
+        out_idx = np.full(queries.shape[0], INVALID, np.int32)
+        out_sim = np.full(queries.shape[0], -np.inf, np.float32)
+        if self.entry_point == INVALID:
+            return out_idx, out_sim
+        for i, q in enumerate(queries):
+            entries = [self.entry_point]
+            for l in range(self.max_level, 0, -1):
+                # small-beam descent (more robust than 1-greedy on the
+                # bulk-built pivot graphs; negligible cost on upper levels)
+                ids_l, _ = self._search_level(q, entries, l, ef=16)
+                entries = [int(x) for x in ids_l[:8]] or entries
+            ids, sims = self._search_level(q, entries, 0, ef)
+            ok = self.valid[ids]
+            ids, sims = ids[ok], sims[ok]
+            if len(ids) and sims[0] >= thresholds[i]:
+                out_idx[i] = ids[0]
+                out_sim[i] = sims[0]
+            elif len(ids):
+                out_sim[i] = sims[0]
+        return out_idx, out_sim
+
+    # -- device search ----------------------------------------------------------
+    def entry_set(self) -> np.ndarray:
+        """Multi-entry start set: entry point + highest-level live nodes."""
+        E = self.p.n_entries
+        ents = np.full((E,), INVALID, np.int32)
+        if self.entry_point == INVALID:
+            return ents
+        alive = np.where(self.valid)[0]
+        order = np.argsort(self.level[alive])[::-1]
+        chosen = alive[order[:E]].astype(np.int32)
+        ents[:len(chosen)] = chosen
+        if self.entry_point not in chosen:
+            ents[0] = self.entry_point
+        return ents
+
+    def device_tables(self) -> dict:
+        if self._device is None or self._device_version != self._version:
+            self._device = {
+                "emb": jnp.asarray(self.emb),
+                "neighbors": jnp.asarray(self.neighbors[0]),
+                "valid": jnp.asarray(self.valid),
+                "entries": jnp.asarray(self.entry_set()),
+            }
+            self._device_version = self._version
+        return self._device
+
+    def search_batch(self, queries: np.ndarray, thresholds: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched device beam search (jnp reference path)."""
+        t = self.device_tables()
+        q = jnp.asarray(np.atleast_2d(queries).astype(np.float32))
+        tau = jnp.asarray(np.broadcast_to(
+            np.asarray(thresholds, np.float32), (q.shape[0],)))
+        idx, score, _ = beam_search(t["emb"], t["neighbors"], t["valid"],
+                                    t["entries"], q, tau,
+                                    beam=self.p.beam, max_hops=self.p.max_hops)
+        return np.asarray(idx), np.asarray(score)
+
+    # -- bulk build (benchmarks) -------------------------------------------------
+    @classmethod
+    def bulk_build(cls, vecs: np.ndarray, capacity: int | None = None,
+                   params: HNSWParams | None = None, seed: int = 0) -> "HNSWIndex":
+        """Pivot-clustered approximate build: O(n·√n·d), for large benchmark
+        indexes where incremental insertion would dominate runtime."""
+        n, dim = vecs.shape
+        capacity = capacity or int(n * 1.25) + 8
+        idx = cls(dim, capacity, params, seed)
+        p = idx.p
+        n_piv = max(1, int(math.sqrt(n) * 2))
+        rng = np.random.default_rng(seed)
+        piv = rng.choice(n, size=min(n_piv, n), replace=False)
+        pivots = vecs[piv]
+        sims_pv = vecs @ pivots.T                               # (n, P)
+        assign = np.argmax(sims_pv, axis=1)
+        # overlap: second-best pivot too, for boundary connectivity
+        assign2 = np.argsort(-sims_pv, axis=1)[:, 1] if pivots.shape[0] > 1 \
+            else assign
+        idx.emb[:n] = vecs
+        idx.valid[:n] = True
+        idx.level[:n] = 0
+        idx._n = n
+        piv_nodes = piv.astype(np.int64)      # pivots ARE real points
+        for c in range(pivots.shape[0]):
+            members = np.where((assign == c) | (assign2 == c))[0]
+            if members.size <= 1:
+                continue
+            sims = vecs[members] @ vecs[members].T
+            np.fill_diagonal(sims, -np.inf)
+            k = min(p.M0 - 2, members.size - 1)   # leave room for hub edges
+            nn = np.argpartition(-sims, k - 1, axis=1)[:, :k]
+            idx.neighbors[0][members[:, None].repeat(k, 1),
+                             np.arange(k)[None, :]] = members[nn]
+            # hub edges: every member ↔ its pivot keeps the graph connected
+            idx.neighbors[0][members, p.M0 - 1] = piv_nodes[c]
+        # pivot-to-pivot kNN edges (level 0 + level 1) bridge clusters
+        psims = pivots @ pivots.T
+        np.fill_diagonal(psims, -np.inf)
+        kp = min(p.M, piv_nodes.size - 1)
+        idx._ensure_level_arrays(1)
+        idx.level[piv_nodes] = 1
+        if kp > 0:
+            pnn = np.argpartition(-psims, kp - 1, axis=1)[:, :kp]
+            for j, node in enumerate(piv_nodes):
+                idx.neighbors[1][node, :kp] = piv_nodes[pnn[j]]
+                idx.neighbors[0][node, p.M0 - kp - 1:p.M0 - 1] = \
+                    piv_nodes[pnn[j][:kp]]
+        idx.entry_point = int(piv_nodes[0])
+        idx.max_level = 1
+        idx._version += 1
+        return idx

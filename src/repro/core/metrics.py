@@ -1,0 +1,70 @@
+"""Per-category cache statistics (feeds Table 1 + adaptive feedback)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class CategoryStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    compliance_rejects: int = 0
+    insert_rejects: int = 0
+    ttl_evictions: int = 0
+    quota_evictions: int = 0
+    capacity_evictions: int = 0
+    inserts: int = 0
+    stale_served: int = 0          # ground-truth staleness (simulator only)
+    false_positives: int = 0       # ground-truth wrong-intent hits (sim only)
+    true_positives: int = 0
+    latency_ms_sum: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    @property
+    def false_positive_rate(self) -> float:
+        total = self.false_positives + self.true_positives
+        return self.false_positives / total if total else 0.0
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return self.latency_ms_sum / self.lookups if self.lookups else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "lookups": self.lookups, "hits": self.hits, "misses": self.misses,
+            "hit_rate": round(self.hit_rate, 4),
+            "fp_rate": round(self.false_positive_rate, 4),
+            "mean_latency_ms": round(self.mean_latency_ms, 3),
+            "compliance_rejects": self.compliance_rejects,
+            "insert_rejects": self.insert_rejects,
+            "ttl_evictions": self.ttl_evictions,
+            "quota_evictions": self.quota_evictions,
+            "capacity_evictions": self.capacity_evictions,
+            "inserts": self.inserts,
+            "stale_served": self.stale_served,
+            "false_positives": self.false_positives,
+            "true_positives": self.true_positives,
+        }
+
+
+@dataclass
+class MetricsRegistry:
+    per_category: dict[str, CategoryStats] = field(default_factory=dict)
+
+    def cat(self, name: str) -> CategoryStats:
+        if name not in self.per_category:
+            self.per_category[name] = CategoryStats()
+        return self.per_category[name]
+
+    def overall_hit_rate(self) -> float:
+        lookups = sum(s.lookups for s in self.per_category.values())
+        hits = sum(s.hits for s in self.per_category.values())
+        return hits / lookups if lookups else 0.0
+
+    def snapshot(self) -> dict:
+        return {k: v.to_dict() for k, v in sorted(self.per_category.items())}

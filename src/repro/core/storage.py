@@ -1,0 +1,232 @@
+"""External document storage + the vector-DB baseline (paper §4, §5.1).
+
+The hybrid architecture keeps only embeddings + metadata in memory and the
+documents (request body, response body, timestamps) in an external store
+accessed by primary key. Stores are pluggable:
+
+    InMemoryStore      — dict-backed (tests, simulator)
+    FileStore          — one file per doc + manifest (restart-durable)
+    LatencyModelStore  — wraps any store and charges simulated latency on a
+                         ``Clock`` (the 5 ms fetch of §4.4)
+    VectorDBEmulator   — the *baseline the paper argues against*: coupled
+                         remote search+storage. Charges 30 ms search on every
+                         query (hit or miss), applies thresholds post-search,
+                         collection-level config, server-side TTL checks that
+                         waste a fetch on expired entries (§4.1–4.3).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import zlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.clock import Clock, SimClock
+
+
+@dataclass
+class Document:
+    """A cached (request, response) pair with timestamps (§5.1)."""
+
+    doc_id: int
+    request: str
+    response: str
+    created_at: float
+    category: str = ""
+    meta: dict = field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "doc_id": self.doc_id, "request": self.request,
+            "response": self.response, "created_at": self.created_at,
+            "category": self.category, "meta": self.meta,
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "Document":
+        return cls(**json.loads(s))
+
+    def nbytes(self) -> int:
+        return len(self.request.encode()) + len(self.response.encode()) + 64
+
+
+class DocumentStore:
+    """Primary-key document store interface."""
+
+    def put(self, doc: Document) -> None:
+        raise NotImplementedError
+
+    def get(self, doc_id: int) -> Document | None:
+        raise NotImplementedError
+
+    def delete(self, doc_id: int) -> None:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class InMemoryStore(DocumentStore):
+    def __init__(self):
+        self._docs: dict[int, Document] = {}
+
+    def put(self, doc: Document) -> None:
+        self._docs[doc.doc_id] = doc
+
+    def get(self, doc_id: int) -> Document | None:
+        return self._docs.get(doc_id)
+
+    def delete(self, doc_id: int) -> None:
+        self._docs.pop(doc_id, None)
+
+    def __len__(self) -> int:
+        return len(self._docs)
+
+    def total_bytes(self) -> int:
+        return sum(d.nbytes() for d in self._docs.values())
+
+
+class FileStore(DocumentStore):
+    """One compressed file per document; atomic writes; restart-durable."""
+
+    def __init__(self, root: str, compress: bool = True):
+        self.root = root
+        self.compress = compress
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, doc_id: int) -> str:
+        return os.path.join(self.root, f"{doc_id:016x}.doc")
+
+    def put(self, doc: Document) -> None:
+        payload = doc.to_json().encode()
+        if self.compress:
+            payload = zlib.compress(payload, level=1)
+        fd, tmp = tempfile.mkstemp(dir=self.root)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, self._path(doc.doc_id))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def get(self, doc_id: int) -> Document | None:
+        path = self._path(doc_id)
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            payload = f.read()
+        if self.compress:
+            payload = zlib.decompress(payload)
+        return Document.from_json(payload.decode())
+
+    def delete(self, doc_id: int) -> None:
+        path = self._path(doc_id)
+        if os.path.exists(path):
+            os.unlink(path)
+
+    def __len__(self) -> int:
+        return sum(1 for n in os.listdir(self.root) if n.endswith(".doc"))
+
+
+class LatencyModelStore(DocumentStore):
+    """Charges per-op latency on a simulated clock (paper's 5 ms fetch)."""
+
+    def __init__(self, inner: DocumentStore, clock: Clock,
+                 get_ms: float = 5.0, put_ms: float = 1.0, delete_ms: float = 0.5):
+        self.inner = inner
+        self.clock = clock
+        self.get_ms = get_ms
+        self.put_ms = put_ms
+        self.delete_ms = delete_ms
+
+    def put(self, doc: Document) -> None:
+        self.clock.advance(self.put_ms / 1e3)
+        self.inner.put(doc)
+
+    def get(self, doc_id: int) -> Document | None:
+        self.clock.advance(self.get_ms / 1e3)
+        return self.inner.get(doc_id)
+
+    def delete(self, doc_id: int) -> None:
+        self.clock.advance(self.delete_ms / 1e3)
+        self.inner.delete(doc_id)
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: remote vector database (what the paper argues against).
+# ---------------------------------------------------------------------------
+
+class VectorDBEmulator:
+    """Coupled remote search + storage with the paper's cost structure.
+
+    Architectural constraints faithfully reproduced (§4):
+      * every query pays ``search_ms`` network+server cost, hit or miss (§4.4)
+      * ONE collection-level threshold; per-category thresholds are not
+        supported (§4.2) — caller gets the raw top-1 and the collection
+        threshold is applied post-search (§4.1)
+      * TTL enforced server-side AFTER fetching the document, wasting the
+        fetch on expired entries (§4.3)
+    """
+
+    def __init__(self, dim: int, capacity: int, clock: Clock | None = None,
+                 collection_threshold: float = 0.85, collection_ttl: float = 3600.0,
+                 search_ms: float = 30.0, fetch_ms: float = 5.0, insert_ms: float = 10.0):
+        from repro.core.hnsw import FlatIndex  # exact search server-side
+        self.index = FlatIndex(dim, capacity)
+        self.docs: dict[int, Document] = {}
+        self.slot_doc: dict[int, int] = {}
+        self.created: dict[int, float] = {}
+        self.clock = clock or SimClock()
+        self.collection_threshold = collection_threshold
+        self.collection_ttl = collection_ttl
+        self.search_ms = search_ms
+        self.fetch_ms = fetch_ms
+        self.insert_ms = insert_ms
+        self._next_doc = 0
+
+    def __len__(self) -> int:
+        return len(self.index)
+
+    def query(self, emb: np.ndarray) -> Document | None:
+        """Remote search → post-search threshold → fetch → server TTL check."""
+        self.clock.advance(self.search_ms / 1e3)          # paid hit OR miss
+        idx, score = self.index.search_host(emb[None, :], np.array([-np.inf]))
+        slot, score = int(idx[0]), float(score[0])
+        if slot < 0 or score < self.collection_threshold:  # §4.1 post-search
+            return None
+        self.clock.advance(self.fetch_ms / 1e3)           # fetch BEFORE TTL
+        doc_id = self.slot_doc[slot]
+        if self.clock.now() - self.created[slot] > self.collection_ttl:  # §4.3
+            self._evict(slot)
+            return None
+        return self.docs.get(doc_id)
+
+    def insert(self, emb: np.ndarray, doc: Document) -> None:
+        self.clock.advance(self.insert_ms / 1e3)
+        if len(self.index) >= self.index.capacity:
+            oldest = min(self.created, key=self.created.get)
+            self._evict(oldest)
+        slot = self.index.add(emb)
+        doc = Document(self._next_doc, doc.request, doc.response,
+                       self.clock.now(), doc.category, doc.meta)
+        self._next_doc += 1
+        self.docs[doc.doc_id] = doc
+        self.slot_doc[slot] = doc.doc_id
+        self.created[slot] = doc.created_at
+
+    def _evict(self, slot: int) -> None:
+        self.index.remove(slot)
+        doc_id = self.slot_doc.pop(slot, None)
+        if doc_id is not None:
+            self.docs.pop(doc_id, None)
+        self.created.pop(slot, None)

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic corpus, packing, resumable iteration."""
+
+from repro.data.pipeline import SyntheticCorpus, PackedBatcher  # noqa: F401

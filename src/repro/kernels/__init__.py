@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper's data plane (cache similarity search) and the serving substrate
+(attention, SSM scan) each get a TPU kernel with explicit BlockSpec VMEM
+tiling, a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``:
+
+    flat_topk        — tiled cosine top-1 + threshold over the cache table
+                       (the hybrid cache's 2 ms local search, §5.2)
+    gather_scores    — scalar-prefetch gather + dot: one HNSW frontier hop
+    flash_attention  — tiled prefill attention (causal / sliding-window /
+                       logit softcap / GQA)
+    decode_attention — single-token decode against a long KV cache
+    mamba_scan       — chunked selective-scan recurrence (Mamba1)
+
+Kernels target TPU (MXU-aligned tiles, VMEM budgets); on this CPU container
+they are validated with ``interpret=True`` against the oracles. Model code
+paths default to pure-jnp implementations (clean HLO for the dry-run
+roofline) and switch to kernels with ``use_pallas=True`` on real TPUs.
+"""

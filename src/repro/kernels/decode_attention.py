@@ -1,0 +1,108 @@
+"""Decode attention kernel — one new token vs a long KV cache (§ serving).
+
+decode_32k / long_500k lower this shape: q (B, Hq, dh) against
+k/v (B, Hkv, S, dh) with ragged valid lengths. The kernel streams the KV
+cache in (TK, dh) tiles with online softmax, carrying (m, l, acc) in VMEM
+scratch across KV grid steps. Decode is purely HBM-bandwidth-bound
+(arithmetic intensity ≈ 1 FLOP/byte), so the tile size just needs to keep
+the DMA pipeline busy; TK = 512 rows of bf16 KV ≈ 128 kB/tile at dh = 128.
+
+Ragged batches: tiles fully beyond ``kv_len[b]`` are skipped via
+``pl.when`` — a batch with mixed 2 k / 32 k contexts doesn't pay 32 k of
+bandwidth for every row (beyond-paper optimization; see EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref,                       # scalar-prefetch (B,) int32
+                   q_ref, k_ref, v_ref,           # (1,1,dh), (1,1,TK,dh) ×2
+                   o_ref,                         # (1,1,dh)
+                   m_scr, l_scr, acc_scr, *,      # VMEM scratch
+                   scale: float, softcap: float | None, tk: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+    k_start = ik * tk
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (dh,)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (TK, dh)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (TK, dh)
+        s = jnp.einsum("kd,d->k", k, q) * scale                # VPU matvec
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tk,), 0)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                                 # (TK,)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[0, 0] = alpha * l_scr[0, 0] + jnp.sum(p)
+        acc_scr[...] = alpha * acc_scr[...] + jnp.einsum("k,kd->d", p, v)[None, :]
+        m_scr[0, 0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[0, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[0] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "block_k",
+                                             "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, softcap: float | None = None,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q (B, Hq, dh); k, v (B, Hkv, S, dh); kv_len (B,) int32 → (B, Hq, dh)."""
+    B, Hq, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    tk = min(block_k, S)
+    assert S % tk == 0
+    grid = (B, Hq, S // tk)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap,
+                               tk=tk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda b, h, j, lens: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda b, h, j, lens: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, h, j, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

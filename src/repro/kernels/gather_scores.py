@@ -1,0 +1,59 @@
+"""Scalar-prefetch gather + dot kernel — one HNSW frontier hop (§5.3).
+
+Device beam search expands (B, K = beam·M) candidate node ids per hop and
+needs ``scores[b,k] = <emb[idx[b,k]], q[b]>``. On TPU the gather must be
+expressed as *block index maps*: the candidate ids are scalar-prefetched
+(available before the grid runs) and each grid step DMAs exactly one table
+row HBM→VMEM chosen by ``idx_ref`` — the canonical TPU embedding-gather
+pattern. Bytes touched: O(B·K·d) instead of the flat scan's O(N·d).
+
+Grid: (B, K). Step (b, k): table row idx[b,k] (1, d) + query row b (1, d)
+→ VPU dot → out[b, k]. Tombstones/padding (idx < 0) clamp the DMA to row 0
+and the result is masked to -inf in the kernel body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_scores_kernel(idx_ref,               # scalar-prefetched (B, K) int32
+                          row_ref, q_ref,        # (1, d) gathered row, (1, d) query
+                          out_ref):              # (1, 1)
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    raw = idx_ref[b, k]
+    dot = jnp.sum(row_ref[...].astype(jnp.float32)
+                  * q_ref[...].astype(jnp.float32))
+    out_ref[0, 0] = jnp.where(raw < 0, -jnp.inf, dot)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
+                  *, interpret: bool = False) -> jax.Array:
+    """table (N, d) fp32; indices (B, K) int32 (−1 = padding);
+    queries (B, d) fp32 → scores (B, K) fp32 (−inf at padding)."""
+    N, d = table.shape
+    B, K = indices.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            # Gathered table row: block index chosen by the prefetched ids.
+            pl.BlockSpec((1, d), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
+            pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, k)),
+    )
+    return pl.pallas_call(
+        _gather_scores_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table, queries)

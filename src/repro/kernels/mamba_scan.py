@@ -1,0 +1,103 @@
+"""Chunked selective-scan kernel (Mamba1) for falcon-mamba / jamba.
+
+The recurrence  h_t = exp(dt_t ⊙ A)·h_{t-1} + (dt_t·x_t) ⊗ B_t  is
+sequential in t but dense over (d_inner, d_state): each step is a
+(TD, N) elementwise update — VPU work with perfect (8,128) lane shape when
+TD is a multiple of 8 and N = 16 → padded lanes are tolerable since the
+(TD, N) update is bandwidth-trivial next to the x/dt/B/C streams.
+
+Grid (B, D/TD, L/TL) with the **sequence axis innermost**: the hidden
+state h (TD, N) lives in VMEM scratch and carries across sequence chunks
+(TPU grids execute sequentially), resetting at chunk 0. Within a chunk a
+``fori_loop`` walks TL steps. Bytes streamed per step ≈ TL·TD·(x,dt,y) +
+TL·N·(B,C) — contiguous, double-buffered by the pipeline.
+
+This is the TPU-native answer to the CUDA selective-scan kernel: no warp
+shuffles, just VMEM-resident state + chunked streaming (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,   # inputs
+                  y_ref, hout_ref,                             # outputs
+                  h_scr, *, tl: int):                          # scratch
+    il = pl.program_id(2)
+    nl = pl.num_programs(2)
+
+    @pl.when(il == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (TL, TD)
+    dt = dt_ref[0].astype(jnp.float32)        # (TL, TD)
+    A = a_ref[...].astype(jnp.float32)        # (TD, N)
+    Bc = b_ref[0].astype(jnp.float32)         # (TL, N)
+    Cc = c_ref[0].astype(jnp.float32)         # (TL, N)
+    D = d_ref[...].astype(jnp.float32)        # (1, TD)
+
+    def step(t, carry):
+        h, ys = carry
+        dt_t = dt[t][:, None]                 # (TD, 1)
+        dA = jnp.exp(dt_t * A)                # (TD, N)
+        dBx = (dt_t[:, 0] * x[t])[:, None] * Bc[t][None, :]
+        h = dA * h + dBx
+        y = jnp.sum(h * Cc[t][None, :], axis=1) + D[0] * x[t]   # (TD,)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    ys0 = jnp.zeros((tl, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, tl, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(il == nl - 1)
+    def _flush():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_l", "interpret"))
+def mamba_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, D: jax.Array, *, block_d: int = 512,
+               block_l: int = 64, interpret: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """x, dt (Bt, L, Dm); A (Dm, N); B, C (Bt, L, N); D (Dm,)
+    → (y (Bt, L, Dm), h_final (Bt, Dm, N))."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    td = min(block_d, Dm)
+    tl = min(block_l, L)
+    assert Dm % td == 0 and L % tl == 0
+    grid = (Bt, Dm // td, L // tl)
+
+    kernel = functools.partial(_mamba_kernel, tl=tl)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tl, td), lambda b, i, j: (b, j, i)),   # x
+            pl.BlockSpec((1, tl, td), lambda b, i, j: (b, j, i)),   # dt
+            pl.BlockSpec((td, N), lambda b, i, j: (i, 0)),          # A
+            pl.BlockSpec((1, tl, N), lambda b, i, j: (b, j, 0)),    # B
+            pl.BlockSpec((1, tl, N), lambda b, i, j: (b, j, 0)),    # C
+            pl.BlockSpec((1, td), lambda b, i, j: (0, i)),          # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tl, td), lambda b, i, j: (b, j, i)),   # y
+            pl.BlockSpec((1, td, N), lambda b, i, j: (b, i, 0)),    # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, Dm), x.dtype),
+            jax.ShapeDtypeStruct((Bt, Dm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((td, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D.reshape(1, -1))
+    return y, h

@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the direct, unfused mathematical definition — no tiling,
+no online softmax, no chunking — used by tests/test_kernels.py to
+``assert_allclose`` against the kernels across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flat_topk_ref(table: jax.Array, valid: jax.Array, queries: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Exact cosine top-1 over the whole table.
+
+    table (N, d) fp32 (rows L2-normalized), valid (N,) bool, queries (B, d).
+    Returns (best_score (B,), best_idx (B,) int32); invalid rows excluded.
+    """
+    scores = queries.astype(jnp.float32) @ table.astype(jnp.float32).T  # (B,N)
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.take_along_axis(scores, best_idx[:, None].astype(jnp.int32),
+                                     axis=1)[:, 0]
+    return best_score, best_idx
+
+
+def gather_scores_ref(table: jax.Array, indices: jax.Array, queries: jax.Array
+                      ) -> jax.Array:
+    """scores[b,k] = <table[indices[b,k]], queries[b]>; -inf where idx < 0.
+
+    table (N, d), indices (B, K) int32 (may contain -1), queries (B, d).
+    """
+    vecs = jnp.take(table, jnp.maximum(indices, 0), axis=0)     # (B,K,d)
+    s = jnp.einsum("bkd,bd->bk", vecs.astype(jnp.float32),
+                   queries.astype(jnp.float32))
+    return jnp.where(indices < 0, -jnp.inf, s)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, kv_offset: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    """Full-materialization attention with GQA + masks + softcap.
+
+    q (B, Hq, Sq, dh); k/v (B, Hkv, Skv, dh); Hq % Hkv == 0.
+    Query position i attends to kv position j iff
+        j <= i + kv_offset                      (causal)
+        j >  i + kv_offset - window             (sliding window, if set)
+    """
+    B, Hq, Sq, dh = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + kv_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         kv_len: jax.Array | int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None) -> jax.Array:
+    """Single-token decode: q (B, Hq, dh) vs k/v (B, Hkv, S, dh).
+
+    ``kv_len`` masks positions >= kv_len (ragged batches); scalar or (B,).
+    """
+    B, Hq, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if kv_len is not None:
+        lens = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+        mask = jnp.arange(S)[None, :] < lens[:, None]          # (B,S)
+        logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: jax.Array,
+                   h0: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Selective scan (Mamba1), sequential lax.scan oracle.
+
+    x, dt (Bt, L, Dm); A (Dm, N); B, C (Bt, L, N); D (Dm,).
+    h_t = exp(dt_t ⊙ A) * h_{t-1} + (dt_t * x_t) ⊗ B_t
+    y_t = Σ_n h_t[:, :, n] C_t[n] + D ⊙ x_t
+    Returns (y (Bt, L, Dm), h_final (Bt, Dm, N)).
+    """
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    h = jnp.zeros((Bt, Dm, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A[None, :, :])            # (Bt,Dm,N)
+        dBx = (dt_t * x_t)[:, :, None] * B_t[:, None, :]          # (Bt,Dm,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D[None, :] * x_t
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

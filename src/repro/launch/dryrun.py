@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the production
+meshes — 16×16 single-pod and 2×16×16 multi-pod — and records
+memory_analysis / cost_analysis / collective schedule per cell.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); this module is the ONLY place that sets it.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch kimi-k2-1t-a32b \
+        --shape train_4k --mesh multi
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+Results: results/dryrun/<arch>__<shape>__<mesh>.json (existing cells are
+skipped unless --force).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.configs import (ARCH_IDS, SHAPES, get_config, runnable_cells,
+                           skipped_cells)
+from repro.distributed.context import Dist
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models.model import Model, padded_vocab
+from repro.models.transformer import init_cache
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    sds = jax.ShapeDtypeStruct
+    if spec.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "labels": sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["tokens"] = sds((B, S - cfg.n_patches), jnp.int32)
+            out["labels"] = sds((B, S - cfg.n_patches), jnp.int32)
+            out["patches"] = sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["audio"] = sds((B, cfg.enc_ctx, cfg.enc_dim), jnp.bfloat16)
+        return out
+    if spec.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["tokens"] = sds((B, S - cfg.n_patches), jnp.int32)
+            out["patches"] = sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["audio"] = sds((B, cfg.enc_ctx, cfg.enc_dim), jnp.bfloat16)
+        return out
+    # decode: one new token against a KV cache of length S
+    return {"tokens": sds((B,), jnp.int32),
+            "kv_len": sds((B,), jnp.int32)}
+
+
+def _tree_sds(shapes, shardings=None):
+    if shardings is None:
+        return shapes
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower + compile one cell; return the report payload."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = Dist.from_mesh(mesh)
+    model = Model(cfg, dist)
+    training = spec.kind == "train"
+    plan = shd.param_plan(cfg, dist, training=training)
+    pshard = plan.shardings(mesh)
+    pshapes = model.param_shapes()
+    ns = lambda s: NamedSharding(mesh, s)
+    B, S = spec.global_batch, spec.seq_len
+
+    ins = input_specs(cfg, shape_name)
+    t0 = time.time()
+
+    if spec.kind == "train":
+        opt_cfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        opt_shapes = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg),
+                                    pshapes)
+        opt_specs = shd.opt_plan(plan.params, opt_shapes, dist)
+        opt_shard = jax.tree.map(
+            lambda s: ns(s) if s is not None else None, opt_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        in_specs = shd.input_specs_train(cfg, dist, B)
+        in_shard = jax.tree.map(lambda s: ns(s), in_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+        accum_dtype = jnp.bfloat16 if cfg.opt_state_dtype == "int8" \
+            else jnp.float32
+        step = make_train_step(model, opt_cfg, accum_dtype=accum_dtype)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, opt_shard, in_shard),
+                     out_shardings=(pshard, opt_shard, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(pshapes, opt_shapes, ins)
+        tokens = B * S
+    elif spec.kind == "prefill":
+        in_shard = jax.tree.map(
+            lambda s: ns(s),
+            {k: (P(shd.batch_spec(dist, B), None) if v.ndim == 2
+                 else P(shd.batch_spec(dist, B), None, None))
+             for k, v in ins.items()},
+            is_leaf=lambda x: isinstance(x, P))
+        cspecs = {"stack": shd.cache_specs(cfg, dist, B, S)}
+        if cfg.family == "encdec":
+            cspecs["enc_kv"] = shd.enc_kv_spec(cfg, dist, B)
+        out_shard = (ns(P(shd.batch_spec(dist, B), None)),       # logits
+                     jax.tree.map(ns, cspecs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                     ns(P(shd.batch_spec(dist, B))))             # kv_len
+        step = make_prefill_step(model, max_len=S)
+        fn = jax.jit(step, in_shardings=(pshard, in_shard),
+                     out_shardings=out_shard)
+        lowered = fn.lower(pshapes, ins)
+        tokens = B * S
+    else:  # decode
+        sds = jax.ShapeDtypeStruct
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        cspecs = {"stack": shd.cache_specs(cfg, dist, B, S)}
+        cache_tree = {"stack": cache_shapes}
+        if cfg.family == "encdec":
+            # enc_kv shapes (whisper): (G, B, ctx, Hkv, dh)
+            from repro.models.transformer import layer_groups
+            _, G = layer_groups(cfg)
+            cspecs["enc_kv"] = shd.enc_kv_spec(cfg, dist, B)
+            cache_tree["enc_kv"] = {
+                "k": sds((G, B, cfg.enc_ctx, cfg.n_kv_heads, cfg.head_dim),
+                         jnp.bfloat16),
+                "v": sds((G, B, cfg.enc_ctx, cfg.n_kv_heads, cfg.head_dim),
+                         jnp.bfloat16)}
+        cshard = jax.tree.map(ns, cspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        bspec = shd.batch_spec(dist, B)
+        step = make_decode_step(model)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, cshard, ns(P(bspec)), ns(P(bspec))),
+                     out_shardings=(ns(P(bspec, None)), cshard, ns(P(bspec))),
+                     donate_argnums=(1,))
+        lowered = fn.lower(pshapes, cache_tree,
+                           ins["tokens"], ins["kv_len"])
+        tokens = B  # one token per sequence per step
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_dict = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_dict[attr] = int(getattr(mem, attr))
+    print(f"  memory_analysis: {mem_dict}")
+
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))}
+    print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    hlo = compiled.as_text()
+    coll = rl.collective_bytes_from_hlo(hlo)
+    # loop-aware re-analysis (XLA counts while bodies once; see hlo_cost.py)
+    from repro.analysis import hlo_cost
+    parsed = hlo_cost.analyze(hlo).to_dict()
+    print(f"  hlo_cost(loop-aware): flops={parsed['flops']:.3e} "
+          f"bytes={parsed['bytes']:.3e} "
+          f"coll={parsed['total_collective_bytes']:.3e}")
+
+    cache_bytes = 0
+    if spec.kind == "decode":
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        cache_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(cache_shapes))
+
+    payload = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_dict,
+        "cost_analysis": cost,
+        "collectives": coll,
+        "hlo_cost": parsed,
+        "model_flops": rl.model_flops(cfg, spec.kind, tokens),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "cache_bytes": cache_bytes,
+        "hlo_bytes_len": len(hlo),
+        "sharding_notes": plan.notes,
+    }
+    return payload
+
+
+def cell_path(arch: str, shape: str, mesh: str, out_dir: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = runnable_cells()
+    if args.arch:
+        from repro.configs import ALIASES
+        a = ALIASES.get(args.arch, args.arch).replace("-", "_").replace(".", "_")
+        cells = [c for c in cells if c[0] == a]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for arch, shape in cells:
+            for mp in meshes:
+                print(arch, shape, "multi" if mp else "single")
+        for arch, shape, why in skipped_cells():
+            print(arch, shape, f"SKIP({why})")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            path = cell_path(arch, shape, mesh_name, args.out)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip existing] {arch} {shape} {mesh_name}")
+                continue
+            print(f"[dryrun] {arch} {shape} {mesh_name} ...", flush=True)
+            try:
+                payload = build_cell(arch, shape, mp)
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=1)
+                rep = rl.report_from_dryrun(payload)
+                print(f"  OK lower={payload['lower_s']}s "
+                      f"compile={payload['compile_s']}s "
+                      f"bottleneck={rep.bottleneck} "
+                      f"roofline_frac={rep.roofline_fraction:.3f}", flush=True)
+            except Exception as e:  # record and continue
+                failures.append((arch, shape, mesh_name, repr(e)))
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"  FAIL {e!r}", flush=True)
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", *f)
+        raise SystemExit(1)
+    print("\nAll requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

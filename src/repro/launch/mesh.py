@@ -1,0 +1,24 @@
+"""Production meshes (DESIGN.md §4).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state. Single pod: 16×16 = 256 chips (data, model).
+Multi-pod: 2×16×16 = 512 chips (pod, data, model) — the pod axis is outer
+data parallelism (or pipeline stages via ``pipeline_over_pod``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests/examples (e.g. (2,2,2) mini multi-pod)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,103 @@
+"""Pipeline parallelism over the pod axis (GPipe schedule, GSPMD-native).
+
+The multi-pod mesh's slow tier is the inter-pod link, which suits pipeline
+parallelism: each pod holds a contiguous range of layer groups, and
+activations cross pods once per microbatch instead of every gradient
+all-reduce. The schedule is expressed WITHOUT shard_map:
+
+  * stage params: the (G, …) group-stacked stack reshaped to
+    (P, G/P, …) and sharded ``P("pod", None, …)``;
+  * the activation buffer (P, Bµ, S, d) is sharded ``P("pod", batch…)``;
+    each scan step vmaps the stage body over the P dim (every pod runs its
+    own layers on its own buffer row) and then ``jnp.roll``s the buffer by
+    one along the stage dim — GSPMD lowers the roll to a
+    ``collective-permute`` across pods, i.e. the pipeline hand-off;
+  * n_micro + P − 1 steps fill/drain the pipe (GPipe bubble); outputs are
+    collected from the last stage row.
+
+Identical math to the sequential stack (same groups, same order), so the
+correctness test asserts exact loss equality vs the non-PP path. Dense
+families only (MoE's shard_map cannot nest under the stage vmap) —
+kimi/granite-moe/jamba keep the DP-over-pod layout instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import Dist
+from repro.models import transformer as tf
+from repro.models.layers import rms_norm
+from repro.models.model import Model
+
+
+def reshape_stack_for_pp(stack: dict, n_stages: int) -> dict:
+    """(G, …) leaves → (P, G/P, …)."""
+    def r(x):
+        G = x.shape[0]
+        assert G % n_stages == 0, (G, n_stages)
+        return x.reshape(n_stages, G // n_stages, *x.shape[1:])
+    return jax.tree.map(r, stack)
+
+
+def pp_stack_specs(plan_stack: dict) -> dict:
+    """Prepend the stage axis ('pod') to the stack's PartitionSpecs."""
+    from jax.sharding import PartitionSpec as P
+
+    def r(spec):
+        return P("pod", *spec)
+    return jax.tree.map(r, plan_stack,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def make_pp_loss(model: Model, n_micro: int):
+    """Returns loss_fn(params_pp, batch) running the stack as a GPipe over
+    the pod axis. ``params_pp["stack"]`` must be stage-reshaped."""
+    cfg = model.cfg
+    dist = model.dist
+    assert dist is not None and dist.pod_axis, "PP needs the multi-pod mesh"
+    P_stages = dist.n_pod
+    group, G = tf.layer_groups(cfg)
+    assert G % P_stages == 0, f"{G} groups don't split over {P_stages} pods"
+
+    def stage_apply(stage_params, h, positions):
+        out, _, _ = tf.stack_apply(h, stage_params, cfg, None, mode="train",
+                                   positions=positions, group=group)
+        return out
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        assert B % n_micro == 0
+        Bm = B // n_micro
+        positions = jnp.arange(S)
+        x = model._embed_tokens(params, tokens)
+        xs = x.reshape(n_micro, Bm, S, -1)
+
+        buf0 = jnp.zeros((P_stages, Bm, S, x.shape[-1]), x.dtype)
+        n_steps = n_micro + P_stages - 1
+
+        def step(buf, t):
+            out = jax.vmap(lambda sp, h: stage_apply(sp, h, positions)
+                           )(params["stack"], buf)
+            y_t = out[-1]                                   # last stage
+            rolled = jnp.roll(out, 1, axis=0)               # pod hand-off
+            feed = xs[jnp.clip(t, 0, n_micro - 1)]
+            buf = rolled.at[0].set(feed.astype(buf.dtype))
+            return buf, y_t
+
+        # prime: at t the buffer row 0 receives microbatch t; row P-1 emits
+        # microbatch t-(P-1).
+        buf = buf0.at[0].set(xs[0])
+        _, ys = jax.lax.scan(step, buf,
+                             jnp.arange(1, n_steps + 1, dtype=jnp.int32))
+        ys = ys[P_stages - 1:]                              # drain window
+        ys = ys.reshape(n_micro * Bm, S, -1).reshape(B, S, -1)
+
+        h = rms_norm(ys, params["final_norm"], cfg.norm_eps)
+        loss, n_tok = model._chunked_xent(params, h, labels)
+        return loss, {"xent": loss, "tokens": n_tok}
+
+    return loss_fn

@@ -1,0 +1,69 @@
+"""Jittable step functions: train (with gradient accumulation), prefill,
+decode. These are what the dry-run lowers and what the drivers run."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, apply_adamw
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics). ``cfg.grad_accum`` microbatches via lax.scan (bounds MoE
+    routing buffers and activation memory; kimi-k2 uses 8)."""
+    cfg = model.cfg
+    n_micro = max(1, cfg.grad_accum)
+
+    def micro_loss(p, mb):
+        return model.loss_fn(p, mb)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, met), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % n_micro == 0, (B, n_micro)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n_micro, B // n_micro, *x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _met), g = jax.value_and_grad(
+                    micro_loss, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return (acc, loss_acc + loss), None
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            met = {}
+        params, opt_state, opt_met = apply_adamw(params, grads, opt_state,
+                                                 opt_cfg)
+        metrics = {"loss": loss, **opt_met}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, kv_len):
+        return model.decode_step(params, cache, tokens, kv_len)
+    return decode_step

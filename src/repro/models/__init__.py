@@ -1,0 +1,13 @@
+"""LLM substrate: composable model definitions for all assigned families.
+
+    config       — ArchConfig (dense / moe / hybrid / ssm / encdec / vlm)
+    layers       — norms, embeddings, rotary, MLP, inits
+    attention    — GQA attention (prefill + decode, window/softcap)
+    moe          — expert-parallel MoE (sort + all_to_all + ragged_dot)
+    mamba        — Mamba1 block (associative-scan prefill, stepwise decode)
+    transformer  — scanned decoder stack with heterogeneous layer patterns
+    model        — Model facade: init, loss_fn, prefill_step, decode_step
+"""
+
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models.model import Model  # noqa: F401

@@ -1,0 +1,123 @@
+"""Mamba1 block (falcon-mamba, jamba's SSM layers).
+
+Prefill/train: two-level scan — outer ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, N) state, inner ``associative_scan`` within the
+chunk. This bounds the materialized (B, chunk, d_inner, N) intermediate
+(the reason CUDA mamba needs a fused kernel; our Pallas ``mamba_scan``
+kernel is the TPU equivalent, and this jnp path is the portable/HLO-clean
+formulation with the same memory behavior).
+
+Decode: single recurrence step; carries {conv window, ssm state}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ssm_params(x: jax.Array, p: dict, cfg):
+    """x (B, L, di) → dt (B, L, di), B/C (B, L, N), A (di, N)."""
+    dt_rank = p["w_dt"].shape[0]
+    N = cfg.ssm_d_state
+    proj = jnp.einsum("bld,dk->blk", x, p["w_x_proj"].astype(x.dtype))
+    dt_in, Bc, Cc = jnp.split(proj.astype(jnp.float32),
+                              [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di, N)
+    return dt, Bc, Cc, A
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                   init: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x (B, L, di); w (K, di); init (B, K-1, di)."""
+    K = w.shape[0]
+    if init is None:
+        init = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def _chunk_scan(h0: jax.Array, dA: jax.Array, dBx: jax.Array):
+    """Associative scan within a chunk. h0 (B, di, N); dA/dBx (B, c, di, N).
+    Returns (states (B, c, di, N), h_final)."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+    A_acc, B_acc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    states = A_acc * h0[:, None] + B_acc
+    return states, states[:, -1]
+
+
+def mamba_mix(x: jax.Array, p: dict, cfg, h0=None, conv0=None,
+              chunk: int = 64):
+    """Core SSM mixer. x (B, L, di) (already in_proj'd 'x' half).
+    Returns (y (B, L, di), h_final (B, di, N), conv_tail (B, K-1, di))."""
+    B, L, di = x.shape
+    K = cfg.ssm_d_conv
+    xc = _conv1d_causal(x, p["conv_w"], p["conv_b"], conv0)
+    conv_tail = jnp.concatenate(
+        [conv0 if conv0 is not None else jnp.zeros((B, K - 1, di), x.dtype), x],
+        axis=1)[:, -(K - 1):]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, Bc, Cc, A = _ssm_params(xc, p, cfg)
+
+    dA = jnp.exp(dt[..., None] * A[None, None])                # (B,L,di,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    c = min(chunk, L)
+    if L % c:
+        c = L  # irregular tails fall back to one chunk (smoke-test sizes)
+    nchunk = L // c
+    h0 = (jnp.zeros((B, di, cfg.ssm_d_state), jnp.float32)
+          if h0 is None else h0.astype(jnp.float32))
+
+    def outer(h, inp):
+        dA_c, dBx_c, C_c = inp
+        states, h_next = _chunk_scan(h, dA_c, dBx_c)
+        y_c = jnp.einsum("bldn,bln->bld", states, C_c)
+        return h_next, y_c
+
+    dA_ch = dA.reshape(B, nchunk, c, di, -1).swapaxes(0, 1)
+    dBx_ch = dBx.reshape(B, nchunk, c, di, -1).swapaxes(0, 1)
+    C_ch = Cc.reshape(B, nchunk, c, -1).swapaxes(0, 1)
+    h_final, y_ch = jax.lax.scan(outer, h0, (dA_ch, dBx_ch, C_ch))
+    y = y_ch.swapaxes(0, 1).reshape(B, L, di)
+    y = y + p["D"][None, None, :] * xc.astype(jnp.float32)
+    return y.astype(x.dtype), h_final, conv_tail
+
+
+def mamba_block(x: jax.Array, p: dict, cfg, state: dict | None = None,
+                mode: str = "train"):
+    """Full Mamba block. x (B, L, d) → (B, L, d), new_state.
+
+    state = {"h": (B, di, N) fp32, "conv": (B, K-1, di)}.
+    """
+    B, L, d = x.shape
+    di = cfg.ssm_d_inner
+    xz = jnp.einsum("bld,dk->blk", x, p["w_in"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    h0 = state["h"] if state is not None else None
+    conv0 = state["conv"] if state is not None else None
+    y, h_final, conv_tail = mamba_mix(xs, p, cfg, h0=h0, conv0=conv0)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("blk,kd->bld", y, p["w_out"].astype(y.dtype))
+    new_state = {"h": h_final, "conv": conv_tail}
+    return out, new_state
+
+
+def mamba_decode_step(x: jax.Array, p: dict, cfg, state: dict):
+    """One-token decode. x (B, 1, d); state carried. Returns (y, state)."""
+    return mamba_block(x, p, cfg, state=state, mode="decode")
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    di = cfg.ssm_d_inner
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+    }

@@ -1,0 +1,8 @@
+"""Optimizer substrate (no optax): AdamW with quantized-state option."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    init_opt_state,
+    apply_adamw,
+    global_norm,
+)

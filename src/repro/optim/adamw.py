@@ -1,0 +1,196 @@
+"""AdamW from scratch, with optionally int8-blockwise-quantized moments.
+
+State layout per parameter leaf:
+    fp32  — m, v in fp32 (default; exact Adam)
+    bf16  — m, v in bf16 (half-memory, negligible quality delta)
+    int8  — m, v int8 with fp32 scales per 128-wide block of the last axis
+            (bitsandbytes-style). This is the distributed-optimization trick
+            that lets the 1T-param kimi-k2 config fit HBM: moments cost
+            2 B/param instead of 8 B/param. Requires last_dim % 128 == 0
+            (all kimi leaves satisfy this; checked at init).
+
+Because parameters are sharded 2-D/3-D by GSPMD (FSDP×TP; DESIGN.md §4),
+moments inherit the same sharding — the update is fully local (ZeRO-3-like
+without explicit machinery). Gradient clipping uses a global-norm psum that
+GSPMD derives from the shardings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    state_dtype: str = "fp32"          # fp32 | bf16 | int8
+    warmup_steps: int = 100
+    schedule: str = "cosine"           # cosine | constant
+    total_steps: int = 10000
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(1, self.warmup_steps))
+        if self.schedule == "constant":
+            return self.lr * warm
+        frac = jnp.clip((s - self.warmup_steps)
+                        / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+
+# -- int8 blockwise quantization ------------------------------------------------
+#
+# m (signed, smooth): linear symmetric per-block quant.
+# v (non-negative, 10^4+ dynamic range): LINEAR quant zeroes small entries
+# and 1/sqrt(v̂) then explodes — so v is quantized in log2 domain with
+# per-block (lo, span) scales; relative error ≤ ~6 % in v ⇒ ≤3 % in the
+# Adam denominator. Scales cost 2×4 B per 128 block ≈ 0.06 B/param.
+
+_V_FLOOR = 1e-24
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp32 (..., D) → (int8 (..., D), fp32 scales (..., D/QBLOCK))."""
+    D = x.shape[-1]
+    assert D % QBLOCK == 0, f"int8 state needs last dim % {QBLOCK} == 0, got {D}"
+    xb = x.reshape(*x.shape[:-1], D // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    D = q.shape[-1]
+    qb = q.reshape(*q.shape[:-1], D // QBLOCK, QBLOCK).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(q.shape)
+
+
+def _quantize_log(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Non-negative fp32 → int8 in log2 domain, scales (..., blocks, 2)."""
+    D = x.shape[-1]
+    assert D % QBLOCK == 0
+    xb = jnp.log2(x.reshape(*x.shape[:-1], D // QBLOCK, QBLOCK) + _V_FLOOR)
+    lo = jnp.min(xb, axis=-1)
+    span = jnp.maximum(jnp.max(xb, axis=-1) - lo, 1e-6)
+    q = jnp.round((xb - lo[..., None]) / span[..., None] * 254.0 - 127.0)
+    q = q.astype(jnp.int8)
+    return q.reshape(x.shape), jnp.stack([lo, span], axis=-1)
+
+
+def _dequantize_log(q: jax.Array, scale: jax.Array) -> jax.Array:
+    D = q.shape[-1]
+    qb = q.reshape(*q.shape[:-1], D // QBLOCK, QBLOCK).astype(jnp.float32)
+    lo, span = scale[..., 0], scale[..., 1]
+    x = jnp.exp2(lo[..., None] + (qb + 127.0) / 254.0 * span[..., None])
+    return jnp.maximum(x - _V_FLOOR, 0.0).reshape(q.shape)
+
+
+# -- state ------------------------------------------------------------------------
+
+def _moment_init(p: jax.Array, state_dtype: str, kind: str):
+    if state_dtype == "int8":
+        D = p.shape[-1] if p.ndim else 0
+        if p.ndim == 0 or D % QBLOCK:
+            # scalars/norm vectors stay fp32 (tiny)
+            return {"q": jnp.zeros_like(p, jnp.float32), "s": None}
+        blocks = (*p.shape[:-1], D // QBLOCK)
+        if kind == "v":   # log-domain: scales are (lo, span) pairs
+            return {"q": jnp.full(p.shape, -127, jnp.int8),
+                    "s": jnp.stack([jnp.full(blocks, jnp.log2(_V_FLOOR)),
+                                    jnp.full(blocks, 1e-6)], axis=-1)}
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(blocks, jnp.float32)}
+    dt = jnp.bfloat16 if state_dtype == "bf16" else jnp.float32
+    return {"q": jnp.zeros(p.shape, dt), "s": None}
+
+
+def _is_log_scale(q: jax.Array, s: jax.Array) -> bool:
+    return s.ndim == q.ndim + 1
+
+
+def _moment_read(mo: dict) -> jax.Array:
+    s = mo.get("s")
+    if s is None:
+        return mo["q"].astype(jnp.float32)
+    if _is_log_scale(mo["q"], s):
+        return _dequantize_log(mo["q"], s)
+    return _dequantize(mo["q"], s)
+
+
+def _moment_write(mo: dict, val: jax.Array) -> dict:
+    s = mo.get("s")
+    if s is None:
+        return {"q": val.astype(mo["q"].dtype), "s": None}
+    if _is_log_scale(mo["q"], s):
+        q, s = _quantize_log(val)
+    else:
+        q, s = _quantize(val)
+    return {"q": q, "s": s}
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> dict:
+    is_arr = lambda x: isinstance(x, jax.Array)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.state_dtype, "m"),
+                          params, is_leaf=is_arr),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.state_dtype, "v"),
+                          params, is_leaf=is_arr),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_adamw(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr_at(step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_mo = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def update(p, g, mo, vo):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * _moment_read(mo) + (1 - cfg.b1) * g
+        v = cfg.b2 * _moment_read(vo) + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                      # no decay on norms/biases
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _moment_write(mo, m), _moment_write(vo, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [update(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"step": step, "m": new_m, "v": new_v}, \
+        {"grad_norm": gnorm, "lr": lr}

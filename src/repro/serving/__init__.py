@@ -1,0 +1,9 @@
+"""Serving layer: the paper's system context.
+
+    simulator — discrete-event cache/LLM latency simulation (paper tables)
+    engine    — live batched serving with the semantic cache over real models
+    router    — multi-model routing + per-model adaptive policies (§7.5.5)
+"""
+
+from repro.serving.simulator import ServingSimulator, SimConfig, SimResult  # noqa: F401
+from repro.serving.router import ModelRouter, ModelBackend  # noqa: F401

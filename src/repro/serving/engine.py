@@ -1,0 +1,169 @@
+"""Live batched serving engine: semantic cache in front of a real JAX model.
+
+The end-to-end path (examples/serve_e2e.py):
+
+    submit(Request) → queue → step():
+        embed queries (feature-hash, 384-d)
+        cache.lookup_batch with per-request categories  (Algorithm 1)
+        hits  → respond from cache (no model tokens burned)
+        misses → batch → prefill → greedy decode loop → respond + insert
+
+Latency/queue-depth observations feed the ``AdaptiveController`` so cache
+policies relax under load (§7.5) — on a real deployment this is the same
+code path, just with a bigger mesh under ``Dist``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import SemanticCache
+from repro.core.embedding import FeatureHashEmbedder
+from repro.core.policy import AdaptiveController, LoadSignal
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    req_id: int
+    text: str
+    category: str
+    prompt_tokens: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    arrival: float = 0.0
+
+
+@dataclass
+class Response:
+    req_id: int
+    text: str
+    tokens: np.ndarray | None
+    cached: bool
+    latency_ms: float
+    category: str
+    reason: str = ""
+
+
+@dataclass
+class EngineStats:
+    served: int = 0
+    cache_hits: int = 0
+    model_tokens: int = 0
+    total_latency_ms: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.served if self.served else 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cache: SemanticCache,
+                 *, max_batch: int = 8, prompt_len: int = 64,
+                 max_new_tokens: int = 16,
+                 controller: AdaptiveController | None = None,
+                 model_name: str = "default"):
+        self.model = model
+        self.params = params
+        self.cache = cache
+        self.embedder = FeatureHashEmbedder()
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.max_new = max_new_tokens
+        self.controller = controller
+        self.model_name = model_name
+        self.queue: list[Request] = []
+        self.stats = EngineStats()
+        self._next_id = 0
+
+        cfg = model.cfg
+        max_len = prompt_len + max_new_tokens
+
+        def generate(params, tokens):
+            logits, cache_, kv_len = model.prefill(
+                params, {"tokens": tokens}, max_len)
+
+            def body(carry, _):
+                cache_, kv_len, tok = carry
+                logits, cache_, kv_len = model.decode_step(
+                    params, cache_, tok, kv_len)
+                tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1
+                                 ).astype(jnp.int32)
+                return (cache_, kv_len, tok), tok
+
+            tok0 = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1
+                              ).astype(jnp.int32)
+            (_, _, _), toks = jax.lax.scan(
+                body, (cache_, kv_len, tok0), None,
+                length=self.max_new - 1)
+            return jnp.concatenate([tok0[None], toks], axis=0).T  # (B, new)
+
+        self._generate = jax.jit(generate)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, text: str, category: str, prompt_tokens: np.ndarray,
+               max_new_tokens: int | None = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(
+            req_id=rid, text=text, category=category,
+            prompt_tokens=np.asarray(prompt_tokens, np.int32),
+            max_new_tokens=max_new_tokens or self.max_new,
+            arrival=time.monotonic()))
+        return rid
+
+    def step(self) -> list[Response]:
+        """Serve one batch from the queue. Returns completed responses."""
+        if not self.queue:
+            return []
+        batch = self.queue[:self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        t0 = time.monotonic()
+
+        embs = self.embedder.embed_batch([r.text for r in batch])
+        results = self.cache.lookup_batch(embs, [r.category for r in batch])
+
+        responses: list[Response] = []
+        misses: list[int] = []
+        for i, (req, res) in enumerate(zip(batch, results)):
+            if res.hit:
+                lat = (time.monotonic() - req.arrival) * 1e3
+                responses.append(Response(req.req_id, res.response, None,
+                                          True, lat, req.category,
+                                          reason=res.reason))
+                self.stats.served += 1
+                self.stats.cache_hits += 1
+                self.stats.total_latency_ms += lat
+            else:
+                misses.append(i)
+
+        if misses:
+            toks = np.zeros((len(misses), self.prompt_len), np.int32)
+            for j, i in enumerate(misses):
+                p = batch[i].prompt_tokens[:self.prompt_len]
+                toks[j, :len(p)] = p
+            out = np.asarray(self._generate(self.params, jnp.asarray(toks)))
+            for j, i in enumerate(misses):
+                req = batch[i]
+                text = "tok:" + ",".join(map(str, out[j]))
+                self.cache.insert(embs[i], req.category, req.text, text)
+                lat = (time.monotonic() - req.arrival) * 1e3
+                responses.append(Response(req.req_id, text, out[j], False,
+                                          lat, req.category, reason="model"))
+                self.stats.served += 1
+                self.stats.model_tokens += out.shape[1]
+                self.stats.total_latency_ms += lat
+                if self.controller is not None:
+                    self.controller.observe(self.model_name, LoadSignal(
+                        latency_ms=lat, queue_depth=len(self.queue)))
+        return responses
+
+    def drain(self) -> list[Response]:
+        out = []
+        while self.queue:
+            out.extend(self.step())
+        return out

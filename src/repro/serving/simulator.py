@@ -1,0 +1,258 @@
+"""Discrete-event serving simulator (reproduces the paper's tables).
+
+Runs a category-heterogeneous query stream (``repro.core.workload``) against
+one of three serving stacks on a simulated clock:
+
+    "hybrid" — the paper's architecture: local in-memory HNSW/flat search
+               (2 ms), external doc fetch on hit (5 ms), Algorithm 1 policy
+               enforcement, category-aware thresholds/TTLs/quotas
+    "vdb"    — the baseline: remote vector DB (30 ms search hit-or-miss,
+               post-search collection-level threshold, server-side TTL)
+    "none"   — no cache: every query pays T_llm
+
+Ground truth from the workload generator gives true hit-correctness
+(matched intent == query intent → else false positive) and staleness
+(content version advanced since caching). Model load can be driven by an
+exogenous α(t) profile; observed latencies feed the ``AdaptiveController``
+when adaptive policies are enabled (§7.5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.metrics import MetricsRegistry
+from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
+from repro.core.storage import Document, VectorDBEmulator
+from repro.core.workload import Query, WorkloadGenerator
+
+
+@dataclass
+class SimConfig:
+    architecture: str = "hybrid"        # hybrid | vdb | none
+    cache_capacity: int = 20000
+    index_kind: str = "hnsw"            # hybrid only: hnsw | flat
+    search_ms: float = 2.0
+    fetch_ms: float = 5.0
+    insert_ms: float = 1.0
+    vdb_search_ms: float = 30.0
+    vdb_threshold: float = 0.85
+    vdb_ttl_s: float = 3600.0
+    adaptive: bool = False
+    fp_rate_limit: float = 0.05     # §7.5.6 safety (1.0 disables feedback)
+    # exogenous load profile: list of (t_start_s, t_end_s, model, alpha)
+    load_spikes: list = field(default_factory=list)
+    l1_capacity: int = 0
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    per_category: dict
+    overall_hit_rate: float
+    mean_latency_ms: float
+    p95_latency_ms: float
+    model_calls: dict
+    model_cost: float
+    stale_served: int
+    false_positives: int
+    n_queries: int
+    traffic_to_models: dict              # per model, query counts
+    metrics: MetricsRegistry
+
+    def summary(self) -> dict:
+        return {
+            "overall_hit_rate": round(self.overall_hit_rate, 4),
+            "mean_latency_ms": round(self.mean_latency_ms, 2),
+            "p95_latency_ms": round(self.p95_latency_ms, 2),
+            "model_cost": round(self.model_cost, 2),
+            "stale_served": self.stale_served,
+            "false_positives": self.false_positives,
+            "n_queries": self.n_queries,
+        }
+
+
+class ServingSimulator:
+    def __init__(self, policies: PolicyEngine, sim: SimConfig,
+                 controller: AdaptiveController | None = None):
+        self.policies = policies
+        self.sim = sim
+        self.clock = SimClock()
+        self.controller = controller
+        if sim.adaptive and controller is None:
+            self.controller = AdaptiveController(
+                fp_rate_limit=sim.fp_rate_limit)
+        if self.controller is not None:
+            self.policies.controller = self.controller
+
+        if sim.architecture == "hybrid":
+            self.cache = SemanticCache(
+                policies, capacity=sim.cache_capacity, clock=self.clock,
+                index_kind=sim.index_kind, search_ms=sim.search_ms,
+                insert_ms=sim.insert_ms, l1_capacity=sim.l1_capacity,
+                seed=sim.seed)
+            # external fetch latency charged here (LatencyModelStore-like)
+            self._fetch_ms = sim.fetch_ms
+        elif sim.architecture == "vdb":
+            self.vdb = VectorDBEmulator(
+                dim=384, capacity=sim.cache_capacity, clock=self.clock,
+                collection_threshold=sim.vdb_threshold,
+                collection_ttl=sim.vdb_ttl_s,
+                search_ms=sim.vdb_search_ms, fetch_ms=sim.fetch_ms)
+        self.metrics = MetricsRegistry()
+        # §7.5.6 monitoring: windowed FP-rate feedback to the controller
+        self._fp_window: dict[str, list[int]] = {}
+        self.fp_window_size = 50
+        # cached ground truth per doc: doc_id -> (intent, version)
+        self._truth: dict[int, tuple[int, int]] = {}
+        self._latencies: list[float] = []
+        self._model_calls: dict[str, int] = {}
+        self._traffic: dict[str, int] = {}
+        self._cost = 0.0
+
+    # -- model serving -----------------------------------------------------
+    def _alpha(self, model: str) -> float:
+        t = self.clock.now()
+        for (t0, t1, m, a) in self.sim.load_spikes:
+            if m == model and t0 <= t < t1:
+                return a
+        return 1.0
+
+    def _call_model(self, q: Query) -> float:
+        alpha = self._alpha(q.model_name)
+        t_ms = q.t_llm_ms * alpha
+        self.clock.advance(t_ms / 1e3)
+        self._model_calls[q.model_name] = \
+            self._model_calls.get(q.model_name, 0) + 1
+        self._cost += q.cost_per_call
+        if self.controller is not None:
+            # queue depth proxy: spike multiplies effective queueing
+            qd = int((alpha - 1.0) * 20)
+            self.controller.observe(q.model_name,
+                                    LoadSignal(latency_ms=t_ms, queue_depth=qd))
+        return t_ms
+
+    # -- one query through the chosen stack ---------------------------------
+    def _serve_hybrid(self, q: Query, gen: WorkloadGenerator) -> float:
+        t0 = self.clock.now()
+        res = self.cache.lookup(q.embedding, q.category)
+        st = self.metrics.cat(q.category)
+        if res.hit:
+            if res.reason != "hit_l1":
+                self.clock.advance(self._fetch_ms / 1e3)
+            intent, version = self._truth.get(res.doc_id, (-1, -1))
+            is_fp = intent != q.intent_id
+            # §7.5.6: feed windowed FP observations back to the controller
+            # so relaxation backs off when accuracy degrades.
+            if self.controller is not None:
+                w = self._fp_window.setdefault(q.category, [])
+                w.append(1 if is_fp else 0)
+                if len(w) >= self.fp_window_size:
+                    self.controller.report_false_positive_rate(
+                        q.category, sum(w) / len(w))
+                    w.clear()
+            if is_fp:
+                st.false_positives += 1
+                self.cache.metrics.cat(q.category).false_positives += 1
+            else:
+                st.true_positives += 1
+                self.cache.metrics.cat(q.category).true_positives += 1
+                cur = gen.version_of(q.category, q.intent_id, self.clock.now())
+                if version < cur:
+                    st.stale_served += 1
+                    self.cache.metrics.cat(q.category).stale_served += 1
+        else:
+            self._call_model(q)
+            slot = self.cache.insert(q.embedding, q.category, q.text,
+                                     f"response:{q.text}")
+            if slot >= 0:
+                doc_id = int(self.cache.slot_doc[slot])
+                self._truth[doc_id] = (q.intent_id, q.content_version)
+        return (self.clock.now() - t0) * 1e3
+
+    def _serve_vdb(self, q: Query, gen: WorkloadGenerator) -> float:
+        t0 = self.clock.now()
+        doc = self.vdb.query(q.embedding)
+        st = self.metrics.cat(q.category)
+        st.lookups += 1
+        if doc is not None:
+            st.hits += 1
+            intent, version = self._truth.get(("vdb", doc.doc_id),
+                                              (-1, -1))
+            if intent != q.intent_id:
+                st.false_positives += 1
+            else:
+                st.true_positives += 1
+                cur = gen.version_of(q.category, q.intent_id, self.clock.now())
+                if version < cur:
+                    st.stale_served += 1
+        else:
+            st.misses += 1
+            self._call_model(q)
+            self.vdb.insert(q.embedding, Document(
+                0, q.text, f"response:{q.text}", 0.0, q.category))
+            did = self.vdb._next_doc - 1
+            self._truth[("vdb", did)] = (q.intent_id, q.content_version)
+        return (self.clock.now() - t0) * 1e3
+
+    def _serve_none(self, q: Query) -> float:
+        t0 = self.clock.now()
+        self._call_model(q)
+        st = self.metrics.cat(q.category)
+        st.lookups += 1
+        st.misses += 1
+        return (self.clock.now() - t0) * 1e3
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, gen: WorkloadGenerator, n_queries: int) -> SimResult:
+        queries = gen.generate(n_queries)
+        for q in queries:
+            # advance the sim clock to the arrival time if ahead
+            if q.timestamp > self.clock.now():
+                self.clock.advance(q.timestamp - self.clock.now())
+            self._traffic[q.model_name] = self._traffic.get(q.model_name, 0)
+            if self.sim.architecture == "hybrid":
+                lat = self._serve_hybrid(q, gen)
+                st = self.cache.metrics.cat(q.category)
+            elif self.sim.architecture == "vdb":
+                lat = self._serve_vdb(q, gen)
+            else:
+                lat = self._serve_none(q)
+            self._latencies.append(lat)
+            self.metrics.cat(q.category).latency_ms_sum += lat
+            if self.sim.architecture != "hybrid":
+                pass
+
+        lat = np.asarray(self._latencies)
+        reg = (self.cache.metrics if self.sim.architecture == "hybrid"
+               else self.metrics)
+        # merge ground-truth counters into the hybrid registry view
+        per_cat = {}
+        for name, st in reg.per_category.items():
+            d = st.to_dict()
+            if self.sim.architecture == "hybrid":
+                gt = self.metrics.cat(name)
+                d["false_positives"] = gt.false_positives
+                d["stale_served"] = gt.stale_served
+                tot = gt.false_positives + gt.true_positives
+                d["fp_rate"] = round(gt.false_positives / tot, 4) if tot else 0.0
+            per_cat[name] = d
+        return SimResult(
+            per_category=per_cat,
+            overall_hit_rate=reg.overall_hit_rate(),
+            mean_latency_ms=float(lat.mean()) if len(lat) else 0.0,
+            p95_latency_ms=float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            model_calls=dict(self._model_calls),
+            model_cost=self._cost,
+            stale_served=sum(d.get("stale_served", 0)
+                             for d in per_cat.values()),
+            false_positives=sum(d.get("false_positives", 0)
+                                for d in per_cat.values()),
+            n_queries=n_queries,
+            traffic_to_models=dict(self._model_calls),
+            metrics=reg,
+        )

@@ -1,0 +1,160 @@
+"""Algorithm 1 behavior: compliance, thresholds, TTL, quotas, eviction, L1."""
+
+import numpy as np
+import pytest
+
+from repro.core import SemanticCache, SimClock
+from dataclasses import replace as dc_replace
+
+from repro.core.embedding import make_dense_space, make_sparse_space
+
+
+def tight(space):
+    """Mixture-free variant: mechanics tests want deterministic hits."""
+    return dc_replace(space, loose_frac=0.0)
+from repro.core.hnsw import INVALID
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+
+def make_cache(capacity=512, index_kind="flat", l1=0, policies=None):
+    eng = policies or PolicyEngine([
+        CategoryConfig("dense_cat", threshold=0.90, ttl=3600.0, quota=0.5,
+                       priority=4.0),
+        CategoryConfig("sparse_cat", threshold=0.75, ttl=600.0, quota=0.3),
+        CategoryConfig("restricted", threshold=0.9, ttl=60.0, quota=0.1,
+                       allow_caching=False),
+    ])
+    clock = SimClock()
+    return SemanticCache(eng, capacity=capacity, clock=clock,
+                         index_kind=index_kind, l1_capacity=l1), clock
+
+
+def test_hit_on_paraphrase_miss_on_distinct_intent(rng):
+    cache, _ = make_cache()
+    sp = tight(make_dense_space(seed=3))
+    for i in range(50):
+        cache.insert(sp.sample(i, rng), "dense_cat", f"q{i}", f"r{i}")
+    hits = sum(cache.lookup(sp.sample(i, rng), "dense_cat").hit
+               for i in range(50))
+    assert hits >= 45                       # paraphrases above τ=0.90
+    miss = cache.lookup(sp.sample(1234, rng), "dense_cat")
+    assert not miss.hit and miss.reason in ("no_match", "category_mismatch")
+
+
+def test_compliance_never_stores_or_serves(rng):
+    cache, _ = make_cache()
+    emb = make_dense_space(seed=1).sample(0, rng)
+    assert cache.insert(emb, "restricted", "q", "r") == INVALID
+    assert len(cache) == 0                  # no temporary data presence
+    res = cache.lookup(emb, "restricted")
+    assert not res.hit and res.reason == "compliance"
+    assert cache.metrics.cat("restricted").compliance_rejects >= 1
+
+
+def test_ttl_validated_before_fetch(rng):
+    cache, clock = make_cache()
+    sp = tight(make_dense_space(seed=2))
+    cache.insert(sp.sample(0, rng), "sparse_cat", "q", "r")
+    assert cache.lookup(sp.sample(0, rng), "sparse_cat").hit
+    clock.advance(601.0)                    # sparse_cat ttl = 600
+    res = cache.lookup(sp.sample(0, rng), "sparse_cat")
+    assert not res.hit and res.reason == "expired"
+    # expired entry was evicted, not just skipped
+    assert cache.metrics.cat("sparse_cat").ttl_evictions == 1
+    assert len(cache) == 0
+
+
+def test_per_category_thresholds_applied(rng):
+    """Same geometric distance hits for the loose category only."""
+    eng = PolicyEngine([
+        CategoryConfig("tight", threshold=0.92, ttl=1e6, quota=0.5),
+        CategoryConfig("loose", threshold=0.70, ttl=1e6, quota=0.5),
+    ])
+    cache, _ = make_cache(policies=eng)
+    sp = make_sparse_space(seed=5)          # paraphrase cos ≈ 0.80
+    rng2 = np.random.default_rng(7)
+    # disjoint intents per category so top-1 stays within-category
+    for i in range(20):
+        cache.insert(sp.sample(i, rng2), "tight", f"q{i}", f"r{i}")
+        cache.insert(sp.sample(100 + i, rng2), "loose", f"q{i}", f"r{i}")
+    tight_hits = sum(cache.lookup(sp.sample(i, rng2), "tight").hit
+                     for i in range(20))
+    loose_hits = sum(cache.lookup(sp.sample(100 + i, rng2), "loose").hit
+                     for i in range(20))
+    assert loose_hits >= 15
+    assert tight_hits <= 6
+
+
+def test_quota_enforced_per_category(rng):
+    cache, _ = make_cache(capacity=100)
+    sp = make_dense_space(seed=4)
+    for i in range(80):
+        cache.insert(sp.sample(i, rng), "sparse_cat", f"q{i}", f"r{i}")
+    # quota 0.3 × 100 = 30
+    assert cache.category_count("sparse_cat") <= 30
+    assert cache.metrics.cat("sparse_cat").quota_evictions > 0
+
+
+def test_capacity_eviction_prefers_low_value(rng):
+    cache, clock = make_cache(capacity=60)
+    sp = make_dense_space(seed=6)
+    # dense_cat has priority 4.0, sparse_cat 1.0
+    for i in range(25):
+        cache.insert(sp.sample(i, rng), "dense_cat", f"dq{i}", f"dr{i}")
+    for i in range(25):
+        cache.insert(sp.sample(1000 + i, rng), "sparse_cat", f"sq{i}", f"sr{i}")
+    # hit the dense entries to raise their value
+    for i in range(25):
+        cache.lookup(sp.sample(i, rng), "dense_cat")
+    clock.advance(10.0)
+    for i in range(30):
+        cache.insert(sp.sample(2000 + i, rng), "dense_cat", f"x{i}", f"y{i}")
+    # sparse (low priority, unhit) should have lost more entries
+    assert cache.category_count("sparse_cat") < 25
+
+
+def test_l1_hot_documents_serve_without_store(rng):
+    cache, _ = make_cache(l1=8)
+    sp = tight(make_dense_space(seed=8))
+    cache.insert(sp.sample(0, rng), "dense_cat", "q", "r")
+    r1 = cache.lookup(sp.sample(0, rng), "dense_cat")
+    r2 = cache.lookup(sp.sample(0, rng), "dense_cat")
+    r3 = cache.lookup(sp.sample(0, rng), "dense_cat")
+    assert r1.hit and r2.hit and r3.hit
+    assert r3.reason == "hit_l1"            # promoted after ≥2 hits
+    assert r3.response == "r"
+
+
+def test_memory_report_matches_paper_budget(rng):
+    cache, _ = make_cache(index_kind="hnsw")
+    sp = make_dense_space(seed=9)
+    for i in range(64):
+        cache.insert(sp.sample(i, rng), "dense_cat", "q" * 100, "r" * 2000)
+    rep = cache.memory_report()
+    # §5.1: ~2 KB/entry in memory (384-d fp32 + graph + 112 B overhead)
+    assert 1536 <= rep["in_memory_bytes_per_entry"] <= 4096
+    assert rep["metadata_overhead_bytes"] == 112
+    # documents (≈2 KB here) stay external
+    assert rep["external_doc_bytes_per_entry"] > 1500
+
+
+def test_batch_lookup_mixed_categories(rng):
+    cache, _ = make_cache()
+    sp = tight(make_dense_space(seed=10))
+    cache.insert(sp.sample(0, rng), "dense_cat", "q0", "r0")
+    cache.insert(sp.sample(1, rng), "sparse_cat", "q1", "r1")
+    embs = np.stack([sp.sample(0, rng), sp.sample(1, rng), sp.sample(99, rng)])
+    res = cache.lookup_batch(
+        embs, ["dense_cat", "sparse_cat", "restricted"])
+    assert res[0].hit and res[0].response == "r0"
+    assert res[1].hit and res[1].response == "r1"
+    assert not res[2].hit and res[2].reason == "compliance"
+
+
+def test_category_isolation_no_cross_category_hits(rng):
+    """A cached entry in category A must not serve category B."""
+    cache, _ = make_cache()
+    sp = tight(make_dense_space(seed=11))
+    cache.insert(sp.sample(0, rng), "dense_cat", "q", "r")
+    res = cache.lookup(sp.sample(0, rng), "sparse_cat")
+    assert not res.hit

@@ -1,0 +1,88 @@
+"""Break-even economics: the paper's eqs (1)–(6) + properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.economics import (CostModel, HYBRID_COSTS, VDB_COSTS,
+                                  break_even_under_load, category_economics,
+                                  expected_latency, workload_report)
+
+
+def test_paper_break_even_numbers():
+    # §4.4: vdb needs h > 30/195 ≈ 15.4 % (fast), 30/495 ≈ 6.1 % (slow)
+    assert VDB_COSTS.break_even_hit_rate(200.0) == pytest.approx(0.154, abs=2e-3)
+    assert VDB_COSTS.break_even_hit_rate(500.0) == pytest.approx(0.061, abs=2e-3)
+    # §5.5: hybrid needs h > 2/195 ≈ 1.0 %, 2/495 ≈ 0.4 %
+    assert HYBRID_COSTS.break_even_hit_rate(200.0) == pytest.approx(0.010, abs=1e-3)
+    assert HYBRID_COSTS.break_even_hit_rate(500.0) == pytest.approx(0.004, abs=1e-3)
+
+
+def test_paper_52_latency_example():
+    """§5.2: 20 % hit rate → hybrid 3.0 ms vs vdb 31 ms (search+fetch only)."""
+    h = 0.2
+    hybrid = HYBRID_COSTS.search_ms + h * HYBRID_COSTS.hit_fetch_ms
+    vdb = VDB_COSTS.search_ms + h * VDB_COSTS.hit_fetch_ms
+    assert hybrid == pytest.approx(3.0)
+    assert vdb == pytest.approx(31.0)
+
+
+def test_break_even_under_load_eq6():
+    # §7.5.1: T_load = 1000 ms → h > 2/995 ≈ 0.2 %
+    assert break_even_under_load(500.0, 2.0) == pytest.approx(0.002, abs=5e-4)
+
+
+@given(st.floats(0.0, 1.0), st.floats(50.0, 2000.0))
+@settings(max_examples=300, deadline=None)
+def test_expected_latency_monotone_in_hit_rate(h, t_llm):
+    """More hits never hurt (as long as fetch < T_llm)."""
+    l1 = expected_latency(h, t_llm)
+    l2 = expected_latency(min(1.0, h + 0.05), t_llm)
+    assert l2 <= l1 + 1e-9
+
+
+@given(st.floats(0.0, 1.0), st.floats(50.0, 2000.0))
+@settings(max_examples=300, deadline=None)
+def test_hybrid_dominates_vdb(h, t_llm):
+    """Same hit rate → hybrid is always at least as fast as the vector DB."""
+    assert (HYBRID_COSTS.expected_latency_ms(h, t_llm)
+            <= VDB_COSTS.expected_latency_ms(h, t_llm))
+
+
+@given(st.floats(10.0, 2000.0))
+@settings(max_examples=200, deadline=None)
+def test_viability_threshold_consistency(t_llm):
+    m = HYBRID_COSTS
+    be = m.break_even_hit_rate(t_llm)
+    if be < 1.0:
+        assert m.viable(min(1.0, be + 0.01), t_llm)
+        assert not m.viable(max(0.0, be - 0.01), t_llm)
+
+
+def test_table1_viability_classification():
+    """Table 1: head viable on both; tail viable only on hybrid."""
+    rows = [
+        category_economics("code_generation", 0.35, 0.55, 500.0),
+        category_economics("api_documentation", 0.25, 0.45, 500.0),
+        category_economics("conversational_chat", 0.15, 0.12, 200.0),
+        category_economics("financial_data", 0.10, 0.08, 200.0),
+        category_economics("legal_queries", 0.08, 0.10, 500.0),
+        category_economics("medical_queries", 0.04, 0.06, 500.0),
+        category_economics("specialized_domains", 0.03, 0.07, 200.0),
+    ]
+    head = rows[:2]
+    tail = rows[2:]
+    assert all(r.vdb_viable and r.hybrid_viable for r in head)
+    assert all(r.hybrid_viable for r in tail)
+    # the fast-model tail categories are NOT viable on the vector DB
+    assert not rows[2].vdb_viable          # chat: 12 % < 15.4 %
+    assert not rows[3].vdb_viable          # financial: 8 % < 15.4 %
+    rep = workload_report(rows)
+    assert rep["coverage_hybrid"] == pytest.approx(1.0)
+    assert rep["coverage_vdb"] < 0.75
+    assert rep["mean_latency_hybrid_ms"] < rep["mean_latency_vdb_ms"]
+    assert rep["mean_latency_hybrid_ms"] < rep["mean_latency_none_ms"]
+
+
+def test_never_viable_when_model_faster_than_fetch():
+    m = CostModel("x", search_ms=2.0, hit_fetch_ms=5.0)
+    assert m.break_even_hit_rate(4.0) == float("inf")

@@ -1,0 +1,81 @@
+"""Fault tolerance: watchdog, preemption, retry."""
+
+import pytest
+
+from repro.distributed.fault import (PreemptionHandler, StepWatchdog,
+                                     retry_step)
+
+
+def test_watchdog_flags_stragglers():
+    events = []
+    wd = StepWatchdog(timeout_factor=3.0, min_history=5,
+                      on_straggler=lambda dt, med: events.append((dt, med)))
+    for _ in range(10):
+        wd.observe_for_test(0.1)
+    wd.observe_for_test(0.5)      # 5× median → straggler
+    assert wd.straggler_events == 1
+    assert events and events[0][0] == pytest.approx(0.5)
+    wd.observe_for_test(0.12)     # normal again
+    assert wd.straggler_events == 1
+
+
+def test_watchdog_needs_history():
+    wd = StepWatchdog(min_history=5)
+    wd.observe_for_test(10.0)     # first step slow (compile) — no event
+    assert wd.straggler_events == 0
+
+
+def test_preemption_flag_via_trigger():
+    h = PreemptionHandler().install()
+    assert not h.preempted
+    h.trigger_for_test()
+    assert h.preempted
+    h.uninstall()
+
+
+def test_preemption_triggers_emergency_checkpoint(tmp_path):
+    """SIGTERM-style preemption mid-run → checkpoint written + clean exit."""
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    import repro.distributed.fault as fault
+
+    cfg = get_config("llama3_2_3b").reduced(n_layers=2, d_model=64,
+                                            vocab_size=256)
+    orig_install = fault.PreemptionHandler.install
+
+    def install_and_fire(self):
+        orig_install(self)
+        self.trigger_for_test()
+        return self
+    fault.PreemptionHandler.install = install_and_fire
+    try:
+        res = run_training(cfg, steps=50, batch=2, seq=32,
+                           ckpt_dir=str(tmp_path), ckpt_every=1000,
+                           log=lambda *_: None)
+    finally:
+        fault.PreemptionHandler.install = orig_install
+    assert res["steps_run"] == 1          # stopped at first boundary
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_retry_step_retries_then_raises():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        raise RuntimeError("transient")
+
+    with pytest.raises(RuntimeError):
+        retry_step(flaky, retries=2)
+    assert len(calls) == 3
+
+    attempts = []
+
+    def ok_after_one():
+        attempts.append(1)
+        if len(attempts) < 2:
+            raise RuntimeError("once")
+        return "fine"
+
+    assert retry_step(ok_after_one, retries=2) == "fine"

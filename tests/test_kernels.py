@@ -1,0 +1,157 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Every kernel sweeps shapes + dtypes and must allclose its ref.py oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flat_topk import flat_topk
+from repro.kernels.gather_scores import gather_scores
+from repro.kernels.mamba_scan import mamba_scan
+
+
+def _unit_rows(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------- flat_topk
+@pytest.mark.parametrize("N,d,B,block", [
+    (1024, 384, 8, 256), (2048, 128, 16, 512), (512, 256, 8, 512),
+])
+def test_flat_topk_matches_ref(rng, N, d, B, block):
+    table = _unit_rows(rng, N, d)
+    valid = rng.random(N) > 0.2
+    q = _unit_rows(rng, B, d)
+    s, i = flat_topk(jnp.asarray(table), jnp.asarray(valid), jnp.asarray(q),
+                     block_n=block, interpret=True)
+    rs, ri = ref.flat_topk_ref(jnp.asarray(table), jnp.asarray(valid),
+                               jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_cache_topk_wrapper_pads_arbitrary_shapes(rng):
+    # N=1000 (not a tile multiple), B=5, d=384
+    table = _unit_rows(rng, 1000, 384)
+    valid = np.ones(1000, bool)
+    q = _unit_rows(rng, 5, 384)
+    s, i = ops.cache_topk(jnp.asarray(table), jnp.asarray(valid),
+                          jnp.asarray(q), block_n=256, interpret=True)
+    rs, ri = ref.flat_topk_ref(jnp.asarray(table), jnp.asarray(valid),
+                               jnp.asarray(q))
+    assert s.shape == (5,)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+
+# ------------------------------------------------------------ gather_scores
+@pytest.mark.parametrize("N,d,B,K", [(256, 128, 4, 8), (512, 384, 2, 16)])
+def test_gather_scores_matches_ref(rng, N, d, B, K):
+    table = rng.standard_normal((N, d)).astype(np.float32)
+    idx = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    out = gather_scores(jnp.asarray(table), jnp.asarray(idx), jnp.asarray(q),
+                        interpret=True)
+    want = ref.gather_scores_ref(jnp.asarray(table), jnp.asarray(idx),
+                                 jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False),
+    dict(causal=True, window=96), dict(causal=True, softcap=30.0),
+    dict(causal=True, kv_offset=64),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(rng, kwargs, dtype):
+    B, Hq, Hkv, Sq, Skv, dh = 2, 4, 2, 128, 192, 64
+    if kwargs.get("kv_offset"):
+        Skv = Sq + kwargs["kv_offset"]
+    q = (rng.standard_normal((B, Hq, Sq, dh)) * 0.3).astype(dtype)
+    k = (rng.standard_normal((B, Hkv, Skv, dh)) * 0.3).astype(dtype)
+    v = (rng.standard_normal((B, Hkv, Skv, dh)) * 0.3).astype(dtype)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          block_q=64, block_k=64, interpret=True, **kwargs)
+    want = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             **kwargs)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+# -------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_decode_attention_matches_ref(rng, softcap):
+    B, Hq, Hkv, S, dh = 3, 4, 2, 256, 64
+    q = (rng.standard_normal((B, Hq, dh)) * 0.3).astype(np.float32)
+    k = (rng.standard_normal((B, Hkv, S, dh)) * 0.3).astype(np.float32)
+    v = (rng.standard_normal((B, Hkv, S, dh)) * 0.3).astype(np.float32)
+    lens = np.array([256, 100, 7], np.int32)
+    out = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           jnp.asarray(lens), softcap=softcap, block_k=64,
+                           interpret=True)
+    want = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), kv_len=jnp.asarray(lens),
+                                    softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_decode_attention_ragged_skips_are_exact(rng):
+    """Tiles past kv_len are skipped — result must STILL be exact."""
+    B, Hq, Hkv, S, dh = 2, 2, 2, 512, 32
+    q = rng.standard_normal((B, Hq, dh)).astype(np.float32)
+    k = rng.standard_normal((B, Hkv, S, dh)).astype(np.float32)
+    v = rng.standard_normal((B, Hkv, S, dh)).astype(np.float32)
+    lens = np.array([3, 65], np.int32)
+    out = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           jnp.asarray(lens), block_k=64, interpret=True)
+    want = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), kv_len=jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+# -------------------------------------------------------------- mamba_scan
+@pytest.mark.parametrize("Bt,L,Dm,N,bd,bl", [
+    (2, 128, 64, 16, 32, 32), (1, 64, 128, 8, 64, 64), (2, 96, 32, 16, 32, 32),
+])
+def test_mamba_scan_matches_ref(rng, Bt, L, Dm, N, bd, bl):
+    x = (rng.standard_normal((Bt, L, Dm)) * 0.5).astype(np.float32)
+    dt = np.abs(rng.standard_normal((Bt, L, Dm))).astype(np.float32) * 0.1
+    A = -np.abs(rng.standard_normal((Dm, N))).astype(np.float32)
+    B = (rng.standard_normal((Bt, L, N)) * 0.5).astype(np.float32)
+    C = (rng.standard_normal((Bt, L, N)) * 0.5).astype(np.float32)
+    D = rng.standard_normal((Dm,)).astype(np.float32)
+    args = tuple(map(jnp.asarray, (x, dt, A, B, C, D)))
+    y, h = mamba_scan(*args, block_d=bd, block_l=bl, interpret=True)
+    yr, hr = ref.mamba_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_scan_state_carries_across_chunks(rng):
+    """Same input, different chunking → identical output (state carry)."""
+    Bt, L, Dm, N = 1, 128, 32, 8
+    x = (rng.standard_normal((Bt, L, Dm)) * 0.5).astype(np.float32)
+    dt = np.abs(rng.standard_normal((Bt, L, Dm))).astype(np.float32) * 0.1
+    A = -np.abs(rng.standard_normal((Dm, N))).astype(np.float32)
+    B = (rng.standard_normal((Bt, L, N)) * 0.5).astype(np.float32)
+    C = (rng.standard_normal((Bt, L, N)) * 0.5).astype(np.float32)
+    D = rng.standard_normal((Dm,)).astype(np.float32)
+    args = tuple(map(jnp.asarray, (x, dt, A, B, C, D)))
+    y1, h1 = mamba_scan(*args, block_d=32, block_l=16, interpret=True)
+    y2, h2 = mamba_scan(*args, block_d=32, block_l=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,120 @@
+"""Policy engine + adaptive controller (§7.5), with hypothesis properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.economics import traffic_reduction
+from repro.core.policy import (AdaptiveController, CategoryConfig,
+                               LoadSignal, ModelLoadTracker, PolicyEngine,
+                               paper_policies)
+
+
+def test_effective_policy_paper_example():
+    """§7.5.4: τ0=0.90 δmax=0.05 t0=7d βmax=2 → λ=1 gives 0.85 / 14d."""
+    cfg = CategoryConfig("code", threshold=0.90, ttl=7 * 86400, quota=0.4,
+                         delta_max=0.05, beta_max=2.0, tau_min=0.80)
+    e0 = cfg.effective(0.0)
+    e1 = cfg.effective(1.0)
+    assert e0.threshold == pytest.approx(0.90)
+    assert e0.ttl == pytest.approx(7 * 86400)
+    assert e1.threshold == pytest.approx(0.85)
+    assert e1.ttl == pytest.approx(14 * 86400)
+
+
+@given(st.floats(0, 1), st.floats(0.71, 0.99), st.floats(0, 0.2),
+       st.floats(1.0, 5.0))
+@settings(max_examples=200, deadline=None)
+def test_effective_policy_bounds_hold(lam, tau0, dmax, bmax):
+    cfg = CategoryConfig("c", threshold=tau0, ttl=100.0, quota=0.5,
+                         delta_max=dmax, beta_max=bmax, tau_min=0.70,
+                         ttl_max=150.0)
+    e = cfg.effective(lam)
+    assert 0.70 <= e.threshold <= tau0 + 1e-9         # safety bound
+    assert 100.0 - 1e-9 <= e.ttl <= 150.0 + 1e-9      # ttl cap
+    # monotone: more load never tightens the policy
+    e2 = cfg.effective(min(1.0, lam + 0.1))
+    assert e2.threshold <= e.threshold + 1e-12
+    assert e2.ttl >= e.ttl - 1e-9
+
+
+def test_load_factor_eq7():
+    tr = ModelLoadTracker(latency_target_ms=500, queue_target=32,
+                          w_latency=0.6, w_queue=0.4, hysteresis=0.0)
+    for _ in range(20):
+        tr.observe(LoadSignal(latency_ms=250, queue_depth=16))
+    # λ = 0.6·(250/500) + 0.4·(16/32) = 0.5
+    assert tr.raw_load_factor() == pytest.approx(0.5, abs=0.02)
+    for _ in range(50):
+        tr.observe(LoadSignal(latency_ms=5000, queue_depth=500))
+    assert tr.raw_load_factor() == 1.0                # clamped
+
+
+def test_hysteresis_damps_small_changes():
+    tr = ModelLoadTracker(latency_target_ms=500, queue_target=32,
+                          hysteresis=0.1)
+    for _ in range(10):
+        tr.observe(LoadSignal(latency_ms=100, queue_depth=2))
+    base = tr.load_factor()
+    # small drift: published value must NOT move
+    for _ in range(10):
+        tr.observe(LoadSignal(latency_ms=120, queue_depth=3))
+    assert tr.load_factor() == base
+    # big spike: it must move
+    for _ in range(64):
+        tr.observe(LoadSignal(latency_ms=2000, queue_depth=100))
+    assert tr.load_factor() > base + 0.1
+
+
+def test_controller_per_model_isolation():
+    """§7.5.5: load on model A relaxes only A's categories."""
+    ctl = AdaptiveController()
+    eng = PolicyEngine([
+        CategoryConfig("a_cat", threshold=0.9, ttl=100, quota=0.5,
+                       delta_max=0.05, tau_min=0.8, model_name="A"),
+        CategoryConfig("b_cat", threshold=0.9, ttl=100, quota=0.5,
+                       delta_max=0.05, tau_min=0.8, model_name="B"),
+    ], controller=ctl)
+    ctl.register_model("A", latency_target_ms=500, queue_target=32)
+    ctl.register_model("B", latency_target_ms=500, queue_target=32)
+    for _ in range(64):
+        ctl.observe("A", LoadSignal(latency_ms=3000, queue_depth=200))
+        ctl.observe("B", LoadSignal(latency_ms=50, queue_depth=0))
+    assert eng.effective("a_cat").threshold < 0.9
+    assert eng.effective("b_cat").threshold == pytest.approx(0.9)
+
+
+def test_fp_feedback_shrinks_delta():
+    """§7.5.6: FP rate above limit halves δ_max."""
+    ctl = AdaptiveController(fp_rate_limit=0.05)
+    eng = PolicyEngine([
+        CategoryConfig("c", threshold=0.9, ttl=100, quota=0.5,
+                       delta_max=0.08, tau_min=0.7, model_name="M")],
+        controller=ctl)
+    for _ in range(64):
+        ctl.observe("M", LoadSignal(latency_ms=5000, queue_depth=300))
+    relaxed = eng.effective("c").threshold
+    ctl.report_false_positive_rate("c", 0.10)
+    after = eng.effective("c").threshold
+    assert after > relaxed                      # relaxation halved
+
+
+def test_paper_policies_cover_table1():
+    eng = PolicyEngine(paper_policies())
+    assert not eng.get("phi_medical_records").allow_caching
+    assert eng.get("code_generation").threshold == 0.90
+    assert eng.get("conversational_chat").threshold == 0.75
+    assert eng.get("financial_data").ttl == 300.0
+
+
+@given(st.floats(0.0, 0.95), st.floats(0.0, 0.3))
+@settings(max_examples=200, deadline=None)
+def test_traffic_reduction_formula(h0, dh):
+    """§7.5.2 example: h0=0.40, Δh=0.10 → 16.7% reduction; general props."""
+    r = traffic_reduction(h0, dh)
+    assert r >= 0
+    if dh <= (1 - h0):
+        assert r <= 1.0 + 1e-9
+
+
+def test_traffic_reduction_paper_example():
+    assert traffic_reduction(0.40, 0.10) == pytest.approx(0.1667, abs=1e-3)

@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the paper's system: real model behind
+the category-aware cache, training loop, optimizer sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.policy import AdaptiveController, PolicyEngine, \
+    paper_policies
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig, apply_adamw, init_opt_state
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("llama3_2_3b").reduced(n_layers=2, d_model=64,
+                                            vocab_size=256)
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_engine_serves_hits_without_model(small_model, rng):
+    cfg, model, params = small_model
+    policies = PolicyEngine(paper_policies())
+    cache = SemanticCache(policies, capacity=1024, clock=SimClock(),
+                          index_kind="flat")
+    eng = ServingEngine(model, params, cache, max_batch=4, prompt_len=16,
+                        max_new_tokens=4)
+    toks = rng.integers(2, cfg.vocab_size, 16)
+    eng.submit("how do I sort a list in python", "code_generation", toks)
+    r1 = eng.drain()
+    assert len(r1) == 1 and not r1[0].cached
+    tokens_after_first = eng.stats.model_tokens
+    # paraphrase-identical resubmission → cache hit, no new model tokens
+    eng.submit("how do I sort a list in python", "code_generation", toks)
+    r2 = eng.drain()
+    assert r2[0].cached
+    assert eng.stats.model_tokens == tokens_after_first
+    assert r2[0].text == r1[0].text
+
+
+def test_engine_compliance_always_model(small_model, rng):
+    cfg, model, params = small_model
+    policies = PolicyEngine(paper_policies())
+    cache = SemanticCache(policies, capacity=128, clock=SimClock(),
+                          index_kind="flat")
+    eng = ServingEngine(model, params, cache, max_batch=2, prompt_len=16,
+                        max_new_tokens=4)
+    toks = rng.integers(2, cfg.vocab_size, 16)
+    for _ in range(2):
+        eng.submit("patient record 1234", "phi_medical_records", toks)
+    res = eng.drain()
+    assert all(not r.cached for r in res)
+    assert len(cache) == 0
+
+
+def test_training_loss_decreases():
+    from repro.launch.train import run_training
+    cfg = get_config("llama3_2_3b").reduced(n_layers=2, d_model=128,
+                                            vocab_size=512)
+    res = run_training(cfg, steps=40, batch=8, seq=64, lr=3e-3,
+                       log=lambda *_: None)
+    first = np.mean(res["losses"][:5])
+    last = np.mean(res["losses"][-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_adamw_moves_params_and_clips(rng):
+    params = {"w": jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)}
+    grads = {"w": jnp.full((8, 128), 100.0)}          # huge → clipped
+    cfg = AdamWConfig(lr=1e-2, clip_norm=1.0)
+    st = init_opt_state(params, cfg)
+    p2, st2, met = apply_adamw(params, grads, st, cfg)
+    assert float(met["grad_norm"]) > 1.0
+    assert not np.allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+    assert int(st2["step"]) == 1
+
+
+@pytest.mark.parametrize("state_dtype", ["fp32", "bf16", "int8"])
+def test_adamw_state_dtypes_converge(rng, state_dtype):
+    """Quantized moments still optimize a quadratic."""
+    target = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    params = {"w": jnp.zeros((4, 128))}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, state_dtype=state_dtype,
+                      schedule="constant", warmup_steps=1)
+    st = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": params["w"] - target}
+        params, st, _ = apply_adamw(params, grads, st, cfg)
+    err = float(jnp.mean(jnp.abs(params["w"] - target)))
+    assert err < 0.15, err
+
+
+def test_adaptive_integration_relaxes_threshold(small_model, rng):
+    cfg, model, params = small_model
+    ctl = AdaptiveController()
+    ctl.register_model("default", latency_target_ms=1.0, queue_target=1)
+    policies = PolicyEngine(paper_policies(), controller=ctl)
+    policies.update("code_generation", model_name="default")
+    base_tau = policies.effective("code_generation").threshold
+    cache = SemanticCache(policies, capacity=512, clock=SimClock(),
+                          index_kind="flat")
+    eng = ServingEngine(model, params, cache, max_batch=4, prompt_len=16,
+                        max_new_tokens=4, controller=ctl)
+    for i in range(12):                    # misses → model calls → load obs
+        toks = rng.integers(2, cfg.vocab_size, 16)
+        eng.submit(f"query number {i} entirely unique", "code_generation",
+                   toks)
+    eng.drain()
+    assert policies.effective("code_generation").threshold < base_tau
