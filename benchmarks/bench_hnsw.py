@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_callable
-from repro.core.hnsw import FlatIndex, HNSWIndex
+from repro.core.hnsw import FlatIndex, HNSWIndex, INVALID
 
 
 def run(sizes=(2000, 8000, 32000, 100000), seed: int = 0):
@@ -39,6 +39,52 @@ def run(sizes=(2000, 8000, 32000, 100000), seed: int = 0):
             for a, b in zip(ns, ns[1:])]
     emit("hnsw.us_per_doubling", float(np.mean(incs)),
          increments=";".join(f"{x:.1f}" for x in incs))
+    run_mixed_category()
+
+
+def run_mixed_category(n: int = 2000, n_clusters: int = 100, seed: int = 3):
+    """§5.3 false-miss scenario at the index level: two categories
+    interleave inside the same clusters, queries sit ON a category-0 point
+    but ask for category 1. Category-blind top-1 returns the cross-category
+    point (→ post-hoc reject = false miss); masked search must find the
+    same-cluster category-1 point. Reported for host and device paths,
+    plus the latency cost of masking."""
+    from repro.core.embedding import SyntheticCategorySpace
+    rng = np.random.default_rng(seed)
+    # same generator as bench_longtail's scenario, so hit rates compare:
+    # σ=0.015 → intra-cluster cos ≈ 0.92 (paraphrase-tight), τ=0.85 passes
+    sp = SyntheticCategorySpace(name="mixed", n_centers=n_clusters,
+                                sigma=0.015, loose_frac=0.0, seed=seed)
+    vecs = sp.sample_batch(rng.integers(0, n_clusters, n), rng)
+
+    idx = HNSWIndex(384, n + 64, seed=seed)
+    for j, v in enumerate(vecs):
+        idx.add(v, category=j % 2)
+
+    B = 64
+    picks = rng.choice(np.arange(0, n, 2), B, replace=False)   # category 0
+    q = vecs[picks]
+    qc = np.ones(B, np.int32)                                  # want cat 1
+    taus = np.full(B, 0.85, np.float32)
+
+    # seed behavior: global top-1, reject cross-category
+    gi, _ = idx.search_host(q, taus)
+    seed_hits = int(np.sum((gi != INVALID) &
+                           (idx.category[np.maximum(gi, 0)] == 1)))
+    hi, _ = idx.search_host(q, taus, categories=qc)
+    di, _ = idx.search_batch(q, taus, categories=qc)
+    emit("hnsw.mixed.seed_global_nn", 0.0, hit_rate=seed_hits / B)
+    emit("hnsw.mixed.masked_host", 0.0,
+         hit_rate=float(np.mean(hi != INVALID)))
+    emit("hnsw.mixed.masked_device", 0.0,
+         hit_rate=float(np.mean(di != INVALID)))
+
+    us_blind = time_callable(lambda: idx.search_host(q, taus), iters=5) / B
+    us_mask = time_callable(
+        lambda: idx.search_host(q, taus, categories=qc), iters=5) / B
+    emit("hnsw.mixed.mask_overhead", us_mask,
+         blind_us=us_blind, overhead_pct=(us_mask / max(us_blind, 1e-9) - 1)
+         * 100)
 
 
 if __name__ == "__main__":

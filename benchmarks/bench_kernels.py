@@ -55,6 +55,27 @@ def run(seed: int = 0):
              kv_bytes=kv_bytes, mem_ms_single_chip=kv_bytes / HBM * 1e3,
              mem_us_256chips=kv_bytes / 256 / HBM * 1e6)
 
+    # cache maintenance hot loops (vectorized sweep/eviction scoring):
+    # per-slot Python policy loops → numpy over per-category tables
+    from repro.core.cache import SemanticCache
+    from repro.core.policy import CategoryConfig, PolicyEngine
+    eng = PolicyEngine([
+        CategoryConfig(f"cat{i}", threshold=0.85, ttl=3600.0 * (i + 1),
+                       quota=1.0 / 8, priority=float(i + 1))
+        for i in range(8)])
+    cache = SemanticCache(eng, capacity=16384, index_kind="flat")
+    vecs = rng.standard_normal((8192, 384)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    for j in range(8192):
+        cache.insert(vecs[j], f"cat{j % 8}", f"q{j}", f"r{j}")
+    slots = np.where(cache.slot_valid)[0]
+    us_score = time_callable(lambda: cache._entry_score(slots), iters=20)
+    emit("cache.entry_score.n8192", us_score, entries=len(slots),
+         us_per_slot=us_score / max(1, len(slots)))
+    us_sweep = time_callable(cache.sweep_expired, iters=20)
+    emit("cache.sweep_expired.n8192", us_sweep, entries=len(cache),
+         us_per_slot=us_sweep / max(1, len(cache)))
+
     # interpret-mode correctness-scale timings (not perf numbers)
     q = (rng.standard_normal((1, 4, 64, 64)) * 0.3).astype(np.float32)
     k = (rng.standard_normal((1, 2, 64, 64)) * 0.3).astype(np.float32)

@@ -7,6 +7,10 @@ on fresh, above-threshold hits. Policy enforcement points (§5.4):
     compliance  — before anything (Algorithm 1 line 5): restricted
                   categories never enter the cache, no temporary presence
     threshold   — during traversal (per-query τ vector, §5.3)
+    isolation   — during traversal (per-query category vector, §5.3): the
+                  index masks results by category, so the best SAME-category
+                  match is returned — a nearer cross-category neighbor can
+                  route the search but never produce a false miss
     TTL         — after match, BEFORE external fetch (line 18): expired
                   entries evict without wasting a network call
     quota       — at insertion: per-category share of capacity
@@ -18,6 +22,7 @@ power-law head → hit latency 7 ms → 2 ms).
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -74,8 +79,11 @@ class SemanticCache:
         else:
             raise ValueError(f"unknown index_kind {index_kind!r}")
 
-        # Per-slot metadata (§5.1: ~112 B/entry overhead).
-        self.slot_category = np.full(capacity, -1, np.int32)
+        # Per-slot metadata (§5.1: ~112 B/entry overhead). The category
+        # table LIVES IN THE INDEX (it is a search input, §5.3 — masked
+        # during traversal); ``slot_category`` aliases it so cache-side
+        # bookkeeping and the index/device mirror never diverge.
+        self.slot_category = self.index.category
         self.slot_inserted = np.zeros(capacity, np.float64)
         self.slot_hits = np.zeros(capacity, np.int64)
         self.slot_doc = np.full(capacity, INVALID, np.int64)
@@ -83,10 +91,10 @@ class SemanticCache:
         self._cat_names: dict[int, str] = {}
         self._next_doc_id = 0
 
-        # §7.6 hot-document L1.
+        # §7.6 hot-document L1: doc_id -> response, LRU by insertion order
+        # (move-to-end on touch, evict from the front) — O(1) per hit.
         self.l1_capacity = l1_capacity
-        self._l1: dict[int, str] = {}           # doc_id -> response
-        self._l1_order: list[int] = []
+        self._l1: OrderedDict[int, str] = OrderedDict()
 
     # ------------------------------------------------------------------ utils
     def __len__(self) -> int:
@@ -127,14 +135,34 @@ class SemanticCache:
         if not active:
             return results
 
-        # Line 9-11: search with per-query thresholds DURING traversal.
+        # Line 9-11: search with per-query thresholds AND categories DURING
+        # traversal (§5.3). The index masks results by category, so the
+        # returned neighbor is the best SAME-category match — a globally
+        # nearer cross-category entry can route traffic but never shadows a
+        # valid match (the seed's "category_mismatch" false-miss path is
+        # gone by construction).
         self.clock.advance(self.search_ms / 1e3)
         q = embeddings[active]
         taus = np.asarray([effective[i].threshold for i in active], np.float32)
+        qcats = np.asarray([self._cat_id(categories[i]) for i in active],
+                           np.int32)
         if self.use_device and isinstance(self.index, HNSWIndex):
-            idxs, scores = self.index.search_batch(q, taus)
+            idxs, scores = self.index.search_batch(q, taus, categories=qcats)
         else:
-            idxs, scores = self.index.search_host(q, taus)
+            idxs, scores = self.index.search_host(q, taus, categories=qcats)
+
+        # Vectorized TTL/bookkeeping over the batch (Line 12-21): classify
+        # every result with numpy before any per-result Python runs. The
+        # search is category-masked, so a matched slot's TTL regime is the
+        # query's own.
+        idxs = np.asarray(idxs, np.int64)
+        scores = np.asarray(scores, np.float64)
+        safe = np.maximum(idxs, 0)
+        found = (idxs != INVALID) & self.slot_valid[safe]
+        ttls = np.asarray([effective[i].ttl for i in active], np.float64)
+        expired = found & ((now - self.slot_inserted[safe]) > ttls)
+        hit = found & ~expired
+        np.add.at(self.slot_hits, idxs[hit], 1)   # duplicate slots accumulate
 
         for pos, i in enumerate(active):
             cat = categories[i]
@@ -142,27 +170,19 @@ class SemanticCache:
             slot, score = int(idxs[pos]), float(scores[pos])
 
             # Line 12-14: miss → return immediately, no external access.
-            if slot == INVALID or not self.slot_valid[slot]:
+            if not found[pos]:
                 st.misses += 1
                 results[i] = CacheResult(False, score=score, category=cat,
                                          reason="no_match",
                                          latency_ms=self.search_ms)
                 continue
 
-            # Category isolation: a match from another category is a miss
-            # (its τ/TTL regime differs; cross-category reuse is unsound).
-            if self.slot_category[slot] != self._cat_id(cat):
-                st.misses += 1
-                results[i] = CacheResult(False, score=score, category=cat,
-                                         reason="category_mismatch",
-                                         latency_ms=self.search_ms)
-                continue
-
-            # Line 18-21: TTL validated BEFORE the external fetch.
-            age = now - self.slot_inserted[slot]
-            if age > effective[i].ttl:
-                self._evict_slot(slot, reason="ttl")
-                st.ttl_evictions += 1
+            # Line 18-21: TTL validated BEFORE the external fetch. Duplicate
+            # matches of one slot within a batch evict (and count) once.
+            if expired[pos]:
+                if self.slot_valid[slot]:
+                    self._evict_slot(slot, reason="ttl")
+                    st.ttl_evictions += 1
                 st.misses += 1
                 results[i] = CacheResult(False, score=score, category=cat,
                                          reason="expired",
@@ -171,7 +191,6 @@ class SemanticCache:
 
             # Line 23-25: fetch by ID (L1 first — §7.6 extension).
             doc_id = int(self.slot_doc[slot])
-            self.slot_hits[slot] += 1
             st.hits += 1
             if doc_id in self._l1:
                 self._l1_touch(doc_id)
@@ -231,8 +250,8 @@ class SemanticCache:
         now = self.clock.now()
         self.store.put(Document(doc_id, request, response, now, category,
                                 meta or {}))
-        slot = self.index.add(np.asarray(embedding, np.float32))
-        self.slot_category[slot] = cid
+        # The index owns the category table (slot_category aliases it).
+        slot = self.index.add(np.asarray(embedding, np.float32), category=cid)
         self.slot_inserted[slot] = now
         self.slot_hits[slot] = 0
         self.slot_doc[slot] = doc_id
@@ -241,14 +260,30 @@ class SemanticCache:
         return slot
 
     # ----------------------------------------------------------------- eviction
+    def _per_category_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Dense cid → (effective TTL, priority) lookup tables.
+
+        O(#categories) to build, then slot-level policy reads are pure
+        numpy indexing — the per-slot Python policy resolution the seed did
+        in ``_entry_score``/``sweep_expired`` loops is gone.
+        """
+        n = (max(self._cat_names) + 1) if self._cat_names else 0
+        ttl = np.full(n, np.inf, np.float64)
+        pri = np.ones(n, np.float64)
+        for cid, name in self._cat_names.items():
+            eff = self.policies.effective(name)
+            ttl[cid] = eff.ttl
+            pri[cid] = eff.priority
+        return ttl, pri
+
     def _entry_score(self, slots: np.ndarray) -> np.ndarray:
         """§5.4: score = priority × 1/age × hitRate (hits+1 so fresh entries
-        aren't instantly evicted). Higher = more valuable."""
+        aren't instantly evicted). Higher = more valuable. Vectorized over
+        ``slots`` via the per-category priority table."""
         now = self.clock.now()
         age = np.maximum(now - self.slot_inserted[slots], 1e-3)
-        pri = np.asarray([
-            self.policies.get(self._cat_names.get(int(c), "__default__")).priority
-            for c in self.slot_category[slots]])
+        _, pri_by_cid = self._per_category_arrays()
+        pri = pri_by_cid[self.slot_category[slots]]
         return pri * (1.0 / age) * (self.slot_hits[slots] + 1)
 
     def _lowest_score_slot(self, within_category: int | None = None) -> int:
@@ -264,41 +299,45 @@ class SemanticCache:
     def _evict_slot(self, slot: int, reason: str = "") -> None:
         if not self.slot_valid[slot]:
             return
-        self.index.remove(slot)
+        self.index.remove(slot)   # also resets the (aliased) category entry
         doc_id = int(self.slot_doc[slot])
         self.store.delete(doc_id)
         self._l1.pop(doc_id, None)
         self.slot_valid[slot] = False
-        self.slot_category[slot] = -1
         self.slot_doc[slot] = INVALID
 
     def sweep_expired(self) -> int:
-        """Background TTL sweep (complement to lookup-time validation)."""
+        """Background TTL sweep (complement to lookup-time validation).
+
+        Expiry detection is vectorized: one numpy compare over all valid
+        slots against the per-category TTL table; Python only touches the
+        (typically few) slots actually being evicted.
+        """
         now = self.clock.now()
-        n = 0
-        for slot in np.where(self.slot_valid)[0]:
-            cat = self._cat_names.get(int(self.slot_category[slot]), "__default__")
-            ttl = self.policies.effective(cat).ttl
-            if now - self.slot_inserted[slot] > ttl:
-                self._evict_slot(slot, reason="ttl_sweep")
-                self.metrics.cat(cat).ttl_evictions += 1
-                n += 1
-        return n
+        slots = np.where(self.slot_valid)[0]
+        if slots.size == 0:
+            return 0
+        ttl_by_cid, _ = self._per_category_arrays()
+        ttl = ttl_by_cid[self.slot_category[slots]]
+        expired = slots[(now - self.slot_inserted[slots]) > ttl]
+        for slot in expired:
+            cat = self._cat_names.get(int(self.slot_category[slot]),
+                                      "__default__")
+            self._evict_slot(int(slot), reason="ttl_sweep")
+            self.metrics.cat(cat).ttl_evictions += 1
+        return int(expired.size)
 
     # ----------------------------------------------------------------- L1 docs
     def _l1_touch(self, doc_id: int) -> None:
-        if doc_id in self._l1_order:
-            self._l1_order.remove(doc_id)
-        self._l1_order.append(doc_id)
+        self._l1.move_to_end(doc_id)
 
     def _l1_maybe_promote(self, doc_id: int, response: str, hits: int) -> None:
         if self.l1_capacity <= 0 or hits < 2:
             return
         if doc_id not in self._l1 and len(self._l1) >= self.l1_capacity:
-            victim = self._l1_order.pop(0)
-            self._l1.pop(victim, None)
+            self._l1.popitem(last=False)        # evict LRU
         self._l1[doc_id] = response
-        self._l1_touch(doc_id)
+        self._l1.move_to_end(doc_id)
 
     # ----------------------------------------------------------------- reports
     def memory_report(self) -> dict:

@@ -44,6 +44,12 @@ class FlatIndex:
     On TPU this is memory-bound at ~1.9 ms per 1M×384 fp32 scan (819 GB/s),
     which is *itself* within the paper's 2 ms local-search budget — see
     EXPERIMENTS.md. Kernel: ``repro.kernels.flat_topk``.
+
+    Search is category-masked (§5.3): each slot carries an int32 category
+    id and each query may carry one; a slot only qualifies as a result for
+    queries of the same category (query category < 0 = wildcard), so the
+    returned neighbor is the best *same-category* match, not the global
+    nearest.
     """
 
     def __init__(self, dim: int, capacity: int):
@@ -51,13 +57,14 @@ class FlatIndex:
         self.capacity = capacity
         self.emb = np.zeros((capacity, dim), dtype=np.float32)
         self.valid = np.zeros((capacity,), dtype=bool)
+        self.category = np.full((capacity,), -1, dtype=np.int32)
         self._n = 0
         self._free: list[int] = []
 
     def __len__(self) -> int:
         return int(self.valid.sum())
 
-    def add(self, vec: np.ndarray) -> int:
+    def add(self, vec: np.ndarray, category: int = -1) -> int:
         slot = self._free.pop() if self._free else self._n
         if slot >= self.capacity:
             raise RuntimeError("FlatIndex full — evict before inserting")
@@ -65,25 +72,40 @@ class FlatIndex:
             self._n += 1
         self.emb[slot] = vec
         self.valid[slot] = True
+        self.category[slot] = category
         return slot
 
     def remove(self, slot: int) -> None:
         if self.valid[slot]:
             self.valid[slot] = False
+            self.category[slot] = -1
             self._free.append(slot)
 
     def search_host(self, queries: np.ndarray, thresholds: np.ndarray,
-                    ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
-        """Returns (idx, score) per query; idx = -1 below threshold."""
+                    ef: int | None = None, *,
+                    categories: np.ndarray | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (idx, score) per query; idx = -1 below threshold.
+
+        ``categories`` (B,) int32 restricts each query's result set to its
+        own category (< 0 = no restriction).
+        """
         queries = np.atleast_2d(queries)
         if self._n == 0:
             B = queries.shape[0]
             return np.full(B, INVALID, np.int32), np.full(B, -np.inf, np.float32)
         sims = queries @ self.emb[:self._n].T                     # (B, n)
         sims = np.where(self.valid[None, :self._n], sims, -np.inf)
+        if categories is not None:
+            qc = np.asarray(categories, np.int32).reshape(-1, 1)  # (B, 1)
+            allowed = (qc < 0) | (self.category[None, :self._n] == qc)
+            sims = np.where(allowed, sims, -np.inf)
         idx = np.argmax(sims, axis=1)
         score = sims[np.arange(len(idx)), idx]
-        ok = score >= thresholds
+        # isfinite guard: with every slot masked out (empty category, all
+        # tombstones) argmax lands on an arbitrary -inf slot, and a -inf
+        # threshold would otherwise accept it (-inf >= -inf).
+        ok = (score >= thresholds) & np.isfinite(score)
         return (np.where(ok, idx, INVALID).astype(np.int32),
                 score.astype(np.float32))
 
@@ -99,6 +121,8 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
                 entries: jax.Array,      # (E,) int32 entry points
                 queries: jax.Array,      # (B, d) float32, L2-normalized
                 thresholds: jax.Array,   # (B,) float32 per-query τ (category)
+                slot_category: jax.Array | None = None,   # (cap,) int32
+                query_category: jax.Array | None = None,  # (B,) int32, -1 = any
                 *, beam: int = 32, max_hops: int = 12):
     """Batched fixed-width beam search with per-query threshold early exit.
 
@@ -107,7 +131,11 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
     paper Algorithm 1 line 12-14: return immediately, no external access).
 
     Tombstoned (invalid) nodes still route traffic (DiskANN-style) but are
-    excluded from results.
+    excluded from results. Cross-category nodes get the same treatment
+    (§5.3): when ``slot_category``/``query_category`` are given, a node only
+    qualifies as a result for queries of its own category (query category
+    < 0 = wildcard) — routing stays category-blind so dense regions still
+    carry traffic toward sparse ones.
     """
     B = queries.shape[0]
     E = entries.shape[0]
@@ -116,6 +144,14 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         vecs = jnp.take(emb, jnp.maximum(idx, 0), axis=0)          # (B,K,d)
         s = jnp.einsum("bkd,bd->bk", vecs, queries)
         return jnp.where(idx == INVALID, -jnp.inf, s)
+
+    def result_ok(idx):  # idx (B, K) -> bool: may this node be a result?
+        ok = jnp.take(valid, jnp.maximum(idx, 0)) & (idx != INVALID)
+        if slot_category is not None and query_category is not None:
+            cat = jnp.take(slot_category, jnp.maximum(idx, 0))
+            ok &= (query_category[:, None] < 0) | \
+                  (cat == query_category[:, None])
+        return ok
 
     # Initial frontier: entry points (same for all queries), padded to beam.
     if E >= beam:
@@ -126,8 +162,7 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
     f_idx = jnp.broadcast_to(f0[None, :], (B, beam))
     f_score = score_nodes(f_idx)
 
-    res_score = jnp.where(jnp.take(valid, jnp.maximum(f_idx, 0)) & (f_idx != INVALID),
-                          f_score, -jnp.inf)
+    res_score = jnp.where(result_ok(f_idx), f_score, -jnp.inf)
     best_score = jnp.max(res_score, axis=1)
     best_idx = jnp.take_along_axis(f_idx, jnp.argmax(res_score, axis=1)[:, None], axis=1)[:, 0]
     best_idx = jnp.where(jnp.isfinite(best_score), best_idx, INVALID)
@@ -150,9 +185,8 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         top_s, top_pos = jax.lax.top_k(all_score, beam)
         top_i = jnp.take_along_axis(all_idx, top_pos, axis=1)
 
-        # Result tracking only over valid (non-tombstoned) nodes.
-        res_s = jnp.where(jnp.take(valid, jnp.maximum(top_i, 0)) & (top_i != INVALID),
-                          top_s, -jnp.inf)
+        # Result tracking only over valid (non-tombstoned) same-category nodes.
+        res_s = jnp.where(result_ok(top_i), top_s, -jnp.inf)
         hop_best_s = jnp.max(res_s, axis=1)
         hop_best_i = jnp.take_along_axis(
             top_i, jnp.argmax(res_s, axis=1)[:, None], axis=1)[:, 0]
@@ -161,11 +195,17 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         new_best_i = jnp.where(improved, hop_best_i, best_i)
 
         # Early exit (paper §5.3): per-query done once τ reached; also stop
-        # queries whose beam no longer improves (converged).
+        # queries whose frontier reached a fixpoint (the merge returned the
+        # previous frontier unchanged — no new candidates route anywhere).
+        # Convergence is judged at the ROUTING level, not on the masked
+        # best: under category masking the result may stall for hops while
+        # the beam is still traversing a cross-category region toward the
+        # query's category.
+        converged = jnp.all(top_i == f_idx, axis=1)
         frozen = done[:, None]
         top_i = jnp.where(frozen, f_idx, top_i)
         top_s = jnp.where(frozen, f_score, top_s)
-        new_done = done | (new_best_s >= thresholds) | ~improved
+        new_done = done | (new_best_s >= thresholds) | converged
         return hop + 1, top_i, top_s, new_best_s, new_best_i, new_done
 
     done0 = best_score >= thresholds
@@ -209,6 +249,7 @@ class HNSWIndex:
 
         self.emb = np.zeros((capacity, dim), dtype=np.float32)
         self.valid = np.zeros((capacity,), dtype=bool)
+        self.category = np.full((capacity,), -1, dtype=np.int32)
         self.level = np.full((capacity,), -1, dtype=np.int8)
         # neighbors[0] is the device-visible level-0 graph.
         self.neighbors: list[np.ndarray] = [
@@ -303,11 +344,12 @@ class HNSWIndex:
                 np.asarray(res_sims, np.float32)[order])
 
     # -- insertion -------------------------------------------------------------
-    def add(self, vec: np.ndarray) -> int:
+    def add(self, vec: np.ndarray, category: int = -1) -> int:
         vec = np.asarray(vec, np.float32)
         slot = self._alloc_slot()
         self.emb[slot] = vec
         self.valid[slot] = True
+        self.category[slot] = category
         lvl = min(self._draw_level(), 8)
         self.level[slot] = lvl
         self._ensure_level_arrays(lvl)
@@ -353,6 +395,7 @@ class HNSWIndex:
         if not self.valid[slot]:
             return
         self.valid[slot] = False
+        self.category[slot] = -1
         self._free.append(slot)
         if slot == self.entry_point:
             alive = np.where(self.valid)[0]
@@ -368,10 +411,23 @@ class HNSWIndex:
 
     # -- host search (exact hierarchical; CPU latency benchmarks) --------------
     def search_host(self, queries: np.ndarray, thresholds: np.ndarray,
-                    ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+                    ef: int | None = None, *,
+                    categories: np.ndarray | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-query best match above threshold; -1 on miss.
+
+        ``categories`` (B,) int32 masks result tracking by category (< 0 =
+        wildcard): traversal stays category-blind — cross-category nodes
+        route traffic exactly like tombstones do — but only same-category
+        nodes can be returned, so a globally-nearer cross-category neighbor
+        no longer shadows a valid same-category match (§5.3).
+        """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         thresholds = np.broadcast_to(np.asarray(thresholds, np.float32),
                                      (queries.shape[0],))
+        if categories is not None:
+            categories = np.broadcast_to(
+                np.asarray(categories, np.int32), (queries.shape[0],))
         ef = ef or self.p.ef_search
         out_idx = np.full(queries.shape[0], INVALID, np.int32)
         out_sim = np.full(queries.shape[0], -np.inf, np.float32)
@@ -386,6 +442,8 @@ class HNSWIndex:
                 entries = [int(x) for x in ids_l[:8]] or entries
             ids, sims = self._search_level(q, entries, 0, ef)
             ok = self.valid[ids]
+            if categories is not None and categories[i] >= 0:
+                ok &= self.category[ids] == categories[i]
             ids, sims = ids[ok], sims[ok]
             if len(ids) and sims[0] >= thresholds[i]:
                 out_idx[i] = ids[0]
@@ -415,32 +473,51 @@ class HNSWIndex:
                 "emb": jnp.asarray(self.emb),
                 "neighbors": jnp.asarray(self.neighbors[0]),
                 "valid": jnp.asarray(self.valid),
+                "category": jnp.asarray(self.category),
                 "entries": jnp.asarray(self.entry_set()),
             }
             self._device_version = self._version
         return self._device
 
-    def search_batch(self, queries: np.ndarray, thresholds: np.ndarray
+    def search_batch(self, queries: np.ndarray, thresholds: np.ndarray, *,
+                     categories: np.ndarray | None = None
                      ) -> tuple[np.ndarray, np.ndarray]:
-        """Batched device beam search (jnp reference path)."""
+        """Batched device beam search (jnp reference path).
+
+        ``categories`` (B,) int32 per-query category mask (< 0 = wildcard);
+        None searches category-blind.
+        """
         t = self.device_tables()
         q = jnp.asarray(np.atleast_2d(queries).astype(np.float32))
+        B = q.shape[0]
         tau = jnp.asarray(np.broadcast_to(
-            np.asarray(thresholds, np.float32), (q.shape[0],)))
+            np.asarray(thresholds, np.float32), (B,)))
+        if categories is None:
+            qcat = np.full((B,), -1, np.int32)
+        else:
+            qcat = np.broadcast_to(np.asarray(categories, np.int32), (B,))
         idx, score, _ = beam_search(t["emb"], t["neighbors"], t["valid"],
                                     t["entries"], q, tau,
+                                    t["category"], jnp.asarray(qcat),
                                     beam=self.p.beam, max_hops=self.p.max_hops)
         return np.asarray(idx), np.asarray(score)
 
     # -- bulk build (benchmarks) -------------------------------------------------
     @classmethod
     def bulk_build(cls, vecs: np.ndarray, capacity: int | None = None,
-                   params: HNSWParams | None = None, seed: int = 0) -> "HNSWIndex":
+                   params: HNSWParams | None = None, seed: int = 0,
+                   categories: np.ndarray | None = None) -> "HNSWIndex":
         """Pivot-clustered approximate build: O(n·√n·d), for large benchmark
-        indexes where incremental insertion would dominate runtime."""
+        indexes where incremental insertion would dominate runtime.
+
+        ``categories`` (n,) int32 assigns per-slot categories (the masked
+        search input, §5.3); omitted → -1 (matched only by wildcard
+        queries, i.e. category-blind search still works)."""
         n, dim = vecs.shape
         capacity = capacity or int(n * 1.25) + 8
         idx = cls(dim, capacity, params, seed)
+        if categories is not None:
+            idx.category[:n] = np.asarray(categories, np.int32)
         p = idx.p
         n_piv = max(1, int(math.sqrt(n) * 2))
         rng = np.random.default_rng(seed)

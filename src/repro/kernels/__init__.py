@@ -4,9 +4,12 @@ The paper's data plane (cache similarity search) and the serving substrate
 (attention, SSM scan) each get a TPU kernel with explicit BlockSpec VMEM
 tiling, a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``:
 
-    flat_topk        — tiled cosine top-1 + threshold over the cache table
-                       (the hybrid cache's 2 ms local search, §5.2)
-    gather_scores    — scalar-prefetch gather + dot: one HNSW frontier hop
+    flat_topk        — tiled cosine top-1 + threshold over the cache table,
+                       category-masked in-kernel (the hybrid cache's 2 ms
+                       local search, §5.2/§5.3)
+    gather_scores    — scalar-prefetch gather + dot: one HNSW frontier hop;
+                       ``gather_scores_masked`` fuses the per-query category
+                       mask into the same gather (§5.3)
     flash_attention  — tiled prefill attention (causal / sliding-window /
                        logit softcap / GQA)
     decode_attention — single-token decode against a long KV cache

@@ -5,10 +5,18 @@ scores a resident (B, d) query block on the MXU, and keeps a running
 (best_score, best_idx) pair per query in VMEM scratch across grid steps
 (the TPU grid is sequential, so scratch acts as the reduction carry).
 
+The reduction is CATEGORY-MASKED (§5.3): each table row carries an int32
+category id streamed alongside the valid mask, each query carries one, and
+rows from another category are treated exactly like invalid rows — scored
+-inf so they can never win the top-1. A query category < 0 is a wildcard
+(category-blind scan), which is also the path used when no categories are
+supplied, so the masked kernel is the only kernel.
+
 At 1 M × 384 fp32 the table is 1.5 GB: the scan is HBM-bandwidth-bound at
 ~1.9 ms/batch on v5e (819 GB/s) — which is the paper's "2 ms local search"
 budget hit with *brute force*; HNSW beam search (``gather_scores``) cuts
-the bytes touched to O(hops · beam · M · d).
+the bytes touched to O(hops · beam · M · d). The category tile adds 4
+bytes/row to the 1540-byte row stream (+0.26 % bandwidth).
 
 Tiling: TN rows of the table per step (multiple of 8 for fp32 sublanes),
 d padded to a multiple of 128 (384 = 3×128 natively aligned). B is padded
@@ -25,7 +33,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _flat_topk_kernel(table_ref, valid_ref, q_ref,      # inputs
+def _flat_topk_kernel(table_ref, valid_ref, cat_ref,    # table-tile inputs
+                      q_ref, qcat_ref,                  # resident query inputs
                       score_out, idx_out,               # outputs
                       best_s, best_i):                  # VMEM scratch
     step = pl.program_id(0)
@@ -43,7 +52,11 @@ def _flat_topk_kernel(table_ref, valid_ref, q_ref,      # inputs
         q, tile, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
     valid = valid_ref[...]                               # (TN,) int8 mask
-    scores = jnp.where(valid[None, :] != 0, scores, -jnp.inf)
+    cat = cat_ref[...]                                   # (TN,) int32
+    qcat = qcat_ref[...]                                 # (B,) int32
+    ok = (valid[None, :] != 0) & \
+        ((qcat[:, None] < 0) | (cat[None, :] == qcat[:, None]))
+    scores = jnp.where(ok, scores, -jnp.inf)
 
     tile_best = jnp.max(scores, axis=1)                  # (B,)
     tile_arg = jnp.argmax(scores, axis=1).astype(jnp.int32)
@@ -62,10 +75,19 @@ def _flat_topk_kernel(table_ref, valid_ref, q_ref,      # inputs
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
+              categories: jax.Array | None = None,
+              query_categories: jax.Array | None = None,
               *, block_n: int = 1024, interpret: bool = False
               ) -> tuple[jax.Array, jax.Array]:
     """Top-1 cosine search. table (N, d) fp32, valid (N,) int8/bool,
     queries (B, d) fp32 → (best_score (B,), best_idx (B,) int32).
+
+    ``categories`` (N,) int32 + ``query_categories`` (B,) int32 restrict
+    each query's result to its own category (< 0 = wildcard). The pair
+    travels together — pass both or neither. Exactly one is a
+    ``ValueError``: silently degrading to a category-blind scan would be
+    a policy-isolation bypass (cross-category reuse is unsound, §5.4),
+    and a lone side would otherwise mask everything to -inf.
 
     Shape requirements (enforced by the ops.py wrapper): N % block_n == 0,
     d % 128 == 0, B % 8 == 0.
@@ -74,6 +96,14 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
     B = queries.shape[0]
     assert N % block_n == 0, (N, block_n)
     valid = valid.astype(jnp.int8)
+    if (categories is None) != (query_categories is None):
+        raise ValueError("flat_topk: categories and query_categories must "
+                         "be passed together (got exactly one)")
+    if categories is None:
+        categories = jnp.full((N,), -1, jnp.int32)
+        query_categories = jnp.full((B,), -1, jnp.int32)
+    categories = categories.astype(jnp.int32)
+    query_categories = query_categories.astype(jnp.int32)
     grid = (N // block_n,)
 
     score, idx = pl.pallas_call(
@@ -82,7 +112,9 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
         in_specs=[
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # table tile
             pl.BlockSpec((block_n,), lambda i: (i,)),       # valid tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),       # category tile
             pl.BlockSpec((B, d), lambda i: (0, 0)),         # queries resident
+            pl.BlockSpec((B,), lambda i: (0,)),             # query categories
         ],
         out_specs=[
             pl.BlockSpec((B,), lambda i: (0,)),
@@ -97,5 +129,5 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
             pltpu.VMEM((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(table, valid, queries)
+    )(table, valid, categories, queries, query_categories)
     return score, idx

@@ -10,6 +10,14 @@ pattern. Bytes touched: O(B·K·d) instead of the flat scan's O(N·d).
 Grid: (B, K). Step (b, k): table row idx[b,k] (1, d) + query row b (1, d)
 → VPU dot → out[b, k]. Tombstones/padding (idx < 0) clamp the DMA to row 0
 and the result is masked to -inf in the kernel body.
+
+``gather_scores_masked`` additionally fuses the per-query CATEGORY mask
+(§5.3) into the same kernel: each grid step also DMAs the gathered row's
+int32 category (block-index-mapped off the same prefetched ids, so the
+category table is never scanned) and compares it against the query's
+category in-kernel. Cross-category candidates score -inf — they can route
+the beam but never win result tracking — and the device data plane stays
+one kernel: gather + dot + category mask fused.
 """
 
 from __future__ import annotations
@@ -57,3 +65,53 @@ def gather_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
         interpret=interpret,
     )(indices.astype(jnp.int32), table, queries)
+
+
+def _gather_scores_masked_kernel(idx_ref,        # scalar-prefetched (B, K) int32
+                                 row_ref,        # (1, d) gathered table row
+                                 cat_ref,        # (1, 1) gathered row category
+                                 q_ref,          # (1, d) query row
+                                 qcat_ref,       # (1, 1) query category
+                                 out_ref):       # (1, 1)
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    raw = idx_ref[b, k]
+    dot = jnp.sum(row_ref[...].astype(jnp.float32)
+                  * q_ref[...].astype(jnp.float32))
+    qc = qcat_ref[0, 0]
+    ok = (raw >= 0) & ((qc < 0) | (cat_ref[0, 0] == qc))
+    out_ref[0, 0] = jnp.where(ok, dot, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_scores_masked(table: jax.Array, indices: jax.Array,
+                         queries: jax.Array, slot_categories: jax.Array,
+                         query_categories: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """Category-masked frontier hop. table (N, d) fp32; indices (B, K)
+    int32 (−1 = padding); queries (B, d) fp32; slot_categories (N,) int32;
+    query_categories (B,) int32 (−1 = wildcard) → scores (B, K) fp32
+    (−inf at padding and at cross-category candidates)."""
+    N, d = table.shape
+    B, K = indices.shape
+    slot_cat = slot_categories.astype(jnp.int32).reshape(N, 1)
+    query_cat = query_categories.astype(jnp.int32).reshape(B, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            # Row + its category share one block index map off the ids.
+            pl.BlockSpec((1, d), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
+            pl.BlockSpec((1, 1), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
+            pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, k)),
+    )
+    return pl.pallas_call(
+        _gather_scores_masked_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table, slot_cat, queries, query_cat)

@@ -40,26 +40,66 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> tuple[jax.Array, int
 
 
 def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
+               categories: jax.Array | None = None,
+               query_categories: jax.Array | None = None,
                *, block_n: int = 1024, interpret: bool | None = None
                ) -> tuple[jax.Array, jax.Array]:
-    """Cache-table cosine top-1 (the 2 ms local search). Any N, B, d."""
+    """Cache-table cosine top-1 (the 2 ms local search). Any N, B, d.
+
+    Optional ``categories`` (N,) + ``query_categories`` (B,) int32 restrict
+    each query's result to its own category (§5.3); pass both or neither
+    (exactly one raises — silent fallback would bypass isolation). Padding
+    rows/queries are filled with a category no real query can match.
+    """
     interpret = _on_cpu() if interpret is None else interpret
+    if (categories is None) != (query_categories is None):
+        raise ValueError("cache_topk: categories and query_categories must "
+                         "be passed together (got exactly one)")
     table, n0 = _pad_to(table, 0, block_n)
     valid = jnp.pad(valid.astype(jnp.int8), (0, table.shape[0] - n0))
+    if categories is not None:
+        # -2: never equals a real category AND is not the -1 wildcard
+        # (pad rows are already excluded by valid=0; this is belt-and-braces).
+        categories = jnp.pad(categories.astype(jnp.int32),
+                             (0, table.shape[0] - n0), constant_values=-2)
     table, d0 = _pad_to(table, 1, 128)
     queries, _ = _pad_to(queries, 1, 128)
     queries, b0 = _pad_to(queries, 0, 8)
-    score, idx = _ft.flat_topk(table, valid, queries, block_n=block_n,
+    if query_categories is not None:
+        # Query-side padding must be NON-negative: the kernel reads any
+        # qcat < 0 as a wildcard (full blind scan on the padded lane).
+        # int32 max never equals a real category, so pad lanes match
+        # nothing; their outputs are sliced off below regardless.
+        query_categories = jnp.pad(query_categories.astype(jnp.int32),
+                                   (0, queries.shape[0] - b0),
+                                   constant_values=jnp.iinfo(jnp.int32).max)
+    score, idx = _ft.flat_topk(table, valid, queries, categories,
+                               query_categories, block_n=block_n,
                                interpret=interpret)
     return score[:b0], idx[:b0]
 
 
 def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
+               slot_categories: jax.Array | None = None,
+               query_categories: jax.Array | None = None,
                *, interpret: bool | None = None) -> jax.Array:
-    """One HNSW frontier hop: gather + dot. indices (B, K), −1 padded."""
+    """One HNSW frontier hop: gather + dot. indices (B, K), −1 padded.
+
+    With ``slot_categories`` (N,) + ``query_categories`` (B,) the category
+    mask is fused into the gather+dot kernel (one-kernel data plane, §5.3).
+    Pass both or neither; exactly one raises (silent fallback to the
+    unmasked gather would bypass category isolation).
+    """
     interpret = _on_cpu() if interpret is None else interpret
+    if (slot_categories is None) != (query_categories is None):
+        raise ValueError("hop_scores: slot_categories and query_categories "
+                         "must be passed together (got exactly one)")
     table, _ = _pad_to(table, 1, 128)
     queries, _ = _pad_to(queries, 1, 128)
+    if slot_categories is not None and query_categories is not None:
+        return _gs.gather_scores_masked(table, indices, queries,
+                                        slot_categories, query_categories,
+                                        interpret=interpret)
     return _gs.gather_scores(table, indices, queries, interpret=interpret)
 
 

@@ -26,6 +26,22 @@ def flat_topk_ref(table: jax.Array, valid: jax.Array, queries: jax.Array
     return best_score, best_idx
 
 
+def flat_topk_masked_ref(table: jax.Array, valid: jax.Array,
+                         queries: jax.Array, categories: jax.Array,
+                         query_categories: jax.Array
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Category-masked exact top-1 (§5.3): a row qualifies only when valid
+    AND same-category as the query (query category < 0 = wildcard)."""
+    scores = queries.astype(jnp.float32) @ table.astype(jnp.float32).T  # (B,N)
+    ok = valid[None, :] & ((query_categories[:, None] < 0) |
+                           (categories[None, :] == query_categories[:, None]))
+    scores = jnp.where(ok, scores, -jnp.inf)
+    best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.take_along_axis(scores, best_idx[:, None].astype(jnp.int32),
+                                     axis=1)[:, 0]
+    return best_score, best_idx
+
+
 def gather_scores_ref(table: jax.Array, indices: jax.Array, queries: jax.Array
                       ) -> jax.Array:
     """scores[b,k] = <table[indices[b,k]], queries[b]>; -inf where idx < 0.
@@ -36,6 +52,17 @@ def gather_scores_ref(table: jax.Array, indices: jax.Array, queries: jax.Array
     s = jnp.einsum("bkd,bd->bk", vecs.astype(jnp.float32),
                    queries.astype(jnp.float32))
     return jnp.where(indices < 0, -jnp.inf, s)
+
+
+def gather_scores_masked_ref(table: jax.Array, indices: jax.Array,
+                             queries: jax.Array, slot_categories: jax.Array,
+                             query_categories: jax.Array) -> jax.Array:
+    """Category-masked frontier hop: -inf at padding (idx < 0) and where
+    the gathered row's category differs from the query's (< 0 = wildcard)."""
+    s = gather_scores_ref(table, indices, queries)
+    cat = jnp.take(slot_categories, jnp.maximum(indices, 0), axis=0)  # (B,K)
+    ok = (query_categories[:, None] < 0) | (cat == query_categories[:, None])
+    return jnp.where(ok, s, -jnp.inf)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

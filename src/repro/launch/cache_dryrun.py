@@ -37,11 +37,13 @@ from repro.launch.mesh import make_production_mesh
 RESULTS = "results/dryrun_cache"
 
 
-def flat_lookup(emb, valid, queries, thresholds):
-    """Pure-jnp tiled top-1 (XLA path of kernels/flat_topk)."""
+def flat_lookup(emb, valid, queries, thresholds, slot_cat, query_cat):
+    """Pure-jnp tiled top-1 (XLA path of kernels/flat_topk), category-masked."""
     scores = jnp.einsum("nd,bd->bn", emb, queries,
                         preferred_element_type=jnp.float32)
-    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    ok = valid[None, :] & ((query_cat[:, None] < 0) |
+                           (slot_cat[None, :] == query_cat[:, None]))
+    scores = jnp.where(ok, scores, -jnp.inf)
     best = jnp.argmax(scores, axis=1).astype(jnp.int32)
     best_s = jnp.take_along_axis(scores, best[:, None], axis=1)[:, 0]
     hit = best_s >= thresholds
@@ -62,31 +64,39 @@ def build(impl: str, multi_pod: bool, n_entries: int, batch: int,
     emb_dt = jnp.bfloat16 if dtype == "bf16" else jnp.float32
     emb = sds((n_entries, dim), emb_dt)
     valid = sds((n_entries,), jnp.bool_)
+    slot_cat = sds((n_entries,), jnp.int32)
     nbrs = sds((n_entries, m0), jnp.int32)
     entries = sds((8,), jnp.int32)
     queries = sds((batch, dim), jnp.float32)
     taus = sds((batch,), jnp.float32)
+    qcat = sds((batch,), jnp.int32)
 
     if impl == "flat":
         fn = jax.jit(flat_lookup,
                      in_shardings=(ns(table_spec), ns(P(table_spec[0])),
-                                   ns(P(b_axes, None)), ns(P(b_axes))),
+                                   ns(P(b_axes, None)), ns(P(b_axes)),
+                                   ns(P(table_spec[0])), ns(P(b_axes))),
                      out_shardings=(ns(P(b_axes)), ns(P(b_axes))))
-        lowered = fn.lower(emb, valid, queries, taus)
+        lowered = fn.lower(emb, valid, queries, taus, slot_cat, qcat)
     else:
         fn = jax.jit(
-            lambda e, nb, v, en, q, t: beam_search(e, nb, v, en, q, t,
-                                                   beam=32, max_hops=12),
+            lambda e, nb, v, en, q, t, sc, qc: beam_search(
+                e, nb, v, en, q, t, sc, qc, beam=32, max_hops=12),
             in_shardings=(ns(P(None, None)), ns(P(None, None)),
                           ns(P(None)), ns(P(None)),
-                          ns(P(b_axes, None)), ns(P(b_axes))),
+                          ns(P(b_axes, None)), ns(P(b_axes)),
+                          ns(P(None)), ns(P(b_axes))),
             out_shardings=(ns(P(b_axes)), ns(P(b_axes)), None))
-        lowered = fn.lower(emb, nbrs, valid, entries, queries, taus)
+        lowered = fn.lower(emb, nbrs, valid, entries, queries, taus,
+                           slot_cat, qcat)
 
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
-    cost = {k: float(v) for k, v in (compiled.cost_analysis() or {}).items()
+    raw_cost = compiled.cost_analysis() or {}
+    if isinstance(raw_cost, (list, tuple)):    # jax ≤ 0.4.x: list per device
+        raw_cost = raw_cost[0] if raw_cost else {}
+    cost = {k: float(v) for k, v in raw_cost.items()
             if isinstance(v, (int, float))}
     hlo = compiled.as_text()
     coll = rl.collective_bytes_from_hlo(hlo)

@@ -38,6 +38,36 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.context import Dist
 
 
+@jax.custom_vjp
+def _ragged_dot(lhs, rhs, group_sizes):
+    """``lax.ragged_dot`` with fp32 accumulation and DTYPE-CORRECT
+    cotangents: jax ≤ 0.4.x's ragged_dot transpose returns fp32 cts for
+    bf16 operands (it ignores the operand dtype under
+    ``preferred_element_type``), which trips the cotangent-addition
+    typecheck when the same activation also feeds a bf16 path (residual
+    stream + router). The custom bwd reuses the built-in transpose, then
+    casts each ct back to its operand dtype."""
+    return jax.lax.ragged_dot(lhs, rhs, group_sizes,
+                              preferred_element_type=jnp.float32)
+
+
+def _ragged_dot_fwd(lhs, rhs, group_sizes):
+    return _ragged_dot(lhs, rhs, group_sizes), (lhs, rhs, group_sizes)
+
+
+def _ragged_dot_bwd(res, ct):
+    lhs, rhs, group_sizes = res
+    _, vjp = jax.vjp(
+        lambda l, r: jax.lax.ragged_dot(
+            l, r, group_sizes, preferred_element_type=jnp.float32),
+        lhs, rhs)
+    dl, dr = vjp(ct)
+    return dl.astype(lhs.dtype), dr.astype(rhs.dtype), None
+
+
+_ragged_dot.defvjp(_ragged_dot_fwd, _ragged_dot_bwd)
+
+
 def padded_experts(n_experts: int, n_data: int) -> int:
     return int(math.ceil(n_experts / n_data) * n_data)
 
@@ -135,13 +165,10 @@ def _moe_local(x, ids, weights, w_gate, w_up, w_down, *, cfg, n_data: int,
     rows = rows[g_order]
     gs = jnp.bincount(leid, length=e_loc + 1)[:e_loc]           # valid only
 
-    h = jax.lax.ragged_dot(rows, w_gate.astype(rows.dtype), gs,
-                           preferred_element_type=jnp.float32)
-    u = jax.lax.ragged_dot(rows, w_up.astype(rows.dtype), gs,
-                           preferred_element_type=jnp.float32)
+    h = _ragged_dot(rows, w_gate.astype(rows.dtype), gs)
+    u = _ragged_dot(rows, w_up.astype(rows.dtype), gs)
     hidden = (jax.nn.silu(h) * u).astype(x.dtype)
-    part = jax.lax.ragged_dot(hidden, w_down.astype(hidden.dtype), gs,
-                              preferred_element_type=jnp.float32)  # (M, d)
+    part = _ragged_dot(hidden, w_down.astype(hidden.dtype), gs)  # (M, d)
     d_out = d
     if model_axis is not None:
         if rs_combine:

@@ -5,6 +5,9 @@ The end-to-end path (examples/serve_e2e.py):
     submit(Request) → queue → step():
         embed queries (feature-hash, 384-d)
         cache.lookup_batch with per-request categories  (Algorithm 1)
+          — the per-request category vector rides into the index search
+            (§5.3), so mixed-category batches resolve to same-category
+            matches with no cross-category false misses
         hits  → respond from cache (no model tokens burned)
         misses → batch → prefill → greedy decode loop → respond + insert
 
@@ -55,10 +58,17 @@ class EngineStats:
     cache_hits: int = 0
     model_tokens: int = 0
     total_latency_ms: float = 0.0
+    # per-reason serve counts ("hit", "hit_l1", "model", ...) — with the
+    # category-masked index there is no "category_mismatch" miss anymore;
+    # cross-category traffic shows up as genuine "no_match"/"model".
+    reasons: dict = field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
         return self.cache_hits / self.served if self.served else 0.0
+
+    def count_reason(self, reason: str) -> None:
+        self.reasons[reason] = self.reasons.get(reason, 0) + 1
 
 
 class ServingEngine:
@@ -138,6 +148,7 @@ class ServingEngine:
                 self.stats.served += 1
                 self.stats.cache_hits += 1
                 self.stats.total_latency_ms += lat
+                self.stats.count_reason(res.reason)
             else:
                 misses.append(i)
 
@@ -157,6 +168,7 @@ class ServingEngine:
                 self.stats.served += 1
                 self.stats.model_tokens += out.shape[1]
                 self.stats.total_latency_ms += lat
+                self.stats.count_reason("model")
                 if self.controller is not None:
                     self.controller.observe(self.model_name, LoadSignal(
                         latency_ms=lat, queue_depth=len(self.queue)))

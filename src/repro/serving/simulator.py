@@ -36,6 +36,7 @@ class SimConfig:
     architecture: str = "hybrid"        # hybrid | vdb | none
     cache_capacity: int = 20000
     index_kind: str = "hnsw"            # hybrid only: hnsw | flat
+    use_device: bool = False            # hybrid+hnsw: jitted beam search
     search_ms: float = 2.0
     fetch_ms: float = 5.0
     insert_ms: float = 1.0
@@ -92,9 +93,9 @@ class ServingSimulator:
         if sim.architecture == "hybrid":
             self.cache = SemanticCache(
                 policies, capacity=sim.cache_capacity, clock=self.clock,
-                index_kind=sim.index_kind, search_ms=sim.search_ms,
-                insert_ms=sim.insert_ms, l1_capacity=sim.l1_capacity,
-                seed=sim.seed)
+                index_kind=sim.index_kind, use_device=sim.use_device,
+                search_ms=sim.search_ms, insert_ms=sim.insert_ms,
+                l1_capacity=sim.l1_capacity, seed=sim.seed)
             # external fetch latency charged here (LatencyModelStore-like)
             self._fetch_ms = sim.fetch_ms
         elif sim.architecture == "vdb":

@@ -38,7 +38,9 @@ def test_hit_on_paraphrase_miss_on_distinct_intent(rng):
                for i in range(50))
     assert hits >= 45                       # paraphrases above τ=0.90
     miss = cache.lookup(sp.sample(1234, rng), "dense_cat")
-    assert not miss.hit and miss.reason in ("no_match", "category_mismatch")
+    # with category-masked search there is no "category_mismatch" anymore:
+    # a distinct intent is a plain no_match
+    assert not miss.hit and miss.reason == "no_match"
 
 
 def test_compliance_never_stores_or_serves(rng):
@@ -158,3 +160,85 @@ def test_category_isolation_no_cross_category_hits(rng):
     cache.insert(sp.sample(0, rng), "dense_cat", "q", "r")
     res = cache.lookup(sp.sample(0, rng), "sparse_cat")
     assert not res.hit
+
+
+def _two_entry_embeddings(dim=384):
+    """Query q, a cross-category entry at cos 1.0, a same-category entry
+    at cos ≈ 0.95 (above dense_cat's τ = 0.90 but NOT the global nearest)."""
+    q = np.zeros(dim, np.float32)
+    q[0] = 1.0
+    e_cross = q.copy()                       # global nearest, other category
+    e_same = np.zeros(dim, np.float32)       # runner-up, same category
+    e_same[0] = 0.95
+    e_same[1] = np.sqrt(1.0 - 0.95 ** 2)
+    return q, e_cross, e_same
+
+
+@pytest.mark.parametrize("index_kind", ["flat", "hnsw"])
+def test_same_category_hit_despite_nearer_cross_category(rng, index_kind):
+    """Regression for the seed's category_mismatch false miss: the global
+    nearest neighbor belongs to another category, but a same-category entry
+    above τ sits one position behind — it MUST hit (§5.3 category-masked
+    search), not be shadowed into a miss."""
+    cache, _ = make_cache(index_kind=index_kind)
+    q, e_cross, e_same = _two_entry_embeddings()
+    cache.insert(e_cross, "sparse_cat", "qx", "rx")
+    cache.insert(e_same, "dense_cat", "qs", "rs")
+    res = cache.lookup(q, "dense_cat")
+    assert res.hit, f"false miss (reason={res.reason!r}, score={res.score})"
+    assert res.response == "rs"
+    assert res.score == pytest.approx(0.95, abs=1e-3)
+    assert res.reason == "hit"
+    # the sparse query still gets its own entry, not the dense one
+    res2 = cache.lookup(q, "sparse_cat")
+    assert res2.hit and res2.response == "rx"
+
+
+def test_same_category_hit_device_beam_search(rng):
+    """Same regression through the jitted device beam search path."""
+    eng = PolicyEngine([
+        CategoryConfig("dense_cat", threshold=0.90, ttl=3600.0, quota=0.5),
+        CategoryConfig("sparse_cat", threshold=0.75, ttl=600.0, quota=0.5),
+    ])
+    cache = SemanticCache(eng, capacity=256, clock=SimClock(),
+                          index_kind="hnsw", use_device=True)
+    q, e_cross, e_same = _two_entry_embeddings()
+    cache.insert(e_cross, "sparse_cat", "qx", "rx")
+    cache.insert(e_same, "dense_cat", "qs", "rs")
+    # pad the graph so the beam search has something to traverse
+    sp = tight(make_dense_space(seed=12))
+    for i in range(30):
+        cache.insert(sp.sample(i, rng), "sparse_cat", f"p{i}", f"pr{i}")
+    res = cache.lookup_batch(np.stack([q, q]),
+                             ["dense_cat", "sparse_cat"])
+    assert res[0].hit, f"false miss (reason={res[0].reason!r})"
+    assert res[0].response == "rs"
+    assert res[1].hit and res[1].response == "rx"
+
+
+def test_batch_no_false_miss_across_interleaved_categories(rng):
+    """Mixed-category batch where every query's global nearest is the OTHER
+    category's entry: all queries must still hit their own category."""
+    cache, _ = make_cache()
+    dim = 384
+    B = 8
+    embs, cats = [], []
+    for k in range(B):
+        q = np.zeros(dim, np.float32)
+        q[2 * k] = 1.0
+        near = np.zeros(dim, np.float32)     # cross-category, cos ≈ 0.99
+        near[2 * k] = 0.99
+        near[2 * k + 1] = np.sqrt(1 - 0.99 ** 2)
+        own = np.zeros(dim, np.float32)      # same-category, cos ≈ 0.93
+        own[2 * k] = 0.93
+        own[2 * k + 1] = -np.sqrt(1 - 0.93 ** 2)
+        me, other = ("dense_cat", "sparse_cat") if k % 2 == 0 else \
+            ("sparse_cat", "dense_cat")
+        cache.insert(near, other, f"near{k}", f"nr{k}")
+        cache.insert(own, me, f"own{k}", f"or{k}")
+        embs.append(q)
+        cats.append(me)
+    results = cache.lookup_batch(np.stack(embs), cats)
+    for k, res in enumerate(results):
+        assert res.hit, f"query {k} false miss (reason={res.reason!r})"
+        assert res.response == f"or{k}"

@@ -97,8 +97,8 @@ def test_elastic_restore_into_mesh(tmp_path, rng):
         import jax, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import restore_checkpoint
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         sh = {{"params": {{"w": NamedSharding(mesh, P("data", "model")),
                            "b": NamedSharding(mesh, P(None))}},
               "opt": {{"step": NamedSharding(mesh, P())}}}}

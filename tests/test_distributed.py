@@ -56,8 +56,8 @@ def test_param_plan_on_real_mesh():
         from repro.configs import get_config
         from repro.distributed.context import Dist
         from repro.launch import sharding as shd
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         dist = Dist.from_mesh(mesh)
         cfg = get_config("deepseek_67b")
         plan = shd.param_plan(cfg, dist, training=True)
@@ -86,8 +86,8 @@ def test_moe_ep_matches_dense_on_mesh():
                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
                          n_experts=10, moe_top_k=3, d_ff_expert=32,
                          capacity_factor=4.0)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         dist = Dist.from_mesh(mesh)
         p = init_moe(jax.random.key(0), cfg)
         x = jnp.asarray(np.random.default_rng(3).standard_normal((64, 64)),
@@ -114,8 +114,8 @@ def test_train_step_runs_sharded():
         from repro.models.model import Model
         from repro.optim.adamw import AdamWConfig, init_opt_state
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         dist = Dist.from_mesh(mesh)
         cfg = get_config("granite_moe_3b_a800m").reduced(grad_accum=2)
         model = Model(cfg, dist)
@@ -191,8 +191,8 @@ def test_sharded_loss_equals_single_device():
         params = m_single.init_params(jax.random.key(0))
         loss_single, _ = jax.jit(m_single.loss_fn)(params, batch)
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         dist = Dist.from_mesh(mesh)
         m_mesh = Model(cfg, dist)
         pshard = shd.param_plan(cfg, dist, training=True).shardings(mesh)
@@ -229,8 +229,8 @@ def test_pipeline_over_pod_matches_sequential():
         params = m0.init_params(jax.random.key(0))
         loss_seq, _ = jax.jit(m0.loss_fn)(params, batch)
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         dist = Dist.from_mesh(mesh)
         m = Model(cfg, dist)
         pp_params = dict(params)

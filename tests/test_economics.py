@@ -1,7 +1,12 @@
-"""Break-even economics: the paper's eqs (1)–(6) + properties."""
+"""Break-even economics: the paper's eqs (1)–(6) + properties.
+
+Property tests need ``hypothesis`` (declared in requirements-dev.txt);
+without it they are skipped and the example-based tests still run.
+"""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.economics import (CostModel, HYBRID_COSTS, VDB_COSTS,
                                   break_even_under_load, category_economics,

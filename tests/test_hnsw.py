@@ -107,6 +107,111 @@ def test_bulk_build_recall(rng):
     assert close >= 0.85
 
 
+def test_flat_masked_search_matches_bruteforce_oracle(rng):
+    """FlatIndex with categories == numpy argmax over same-category rows."""
+    n, d = 400, 384
+    vecs = _unit(rng, n, d)
+    cats = (rng.integers(0, 3, n)).astype(np.int32)
+    flat = FlatIndex(d, 512)
+    for v, c in zip(vecs, cats):
+        flat.add(v, category=int(c))
+    q = _unit(rng, 32, d)
+    qc = rng.integers(-1, 3, 32).astype(np.int32)   # includes wildcards
+    taus = np.full(32, -np.inf, np.float32)
+    fi, fs = flat.search_host(q, taus, categories=qc)
+    sims = q @ vecs.T
+    for b in range(32):
+        allowed = np.ones(n, bool) if qc[b] < 0 else (cats == qc[b])
+        want = int(np.argmax(np.where(allowed, sims[b], -np.inf)))
+        assert fi[b] == want
+        assert fs[b] == pytest.approx(sims[b, want], abs=1e-5)
+
+
+def test_host_device_parity_mixed_category_batch(rng):
+    """Acceptance: over a mixed-category batch, host search and the jitted
+    device beam search must agree — every returned slot is same-category,
+    and exact-vector queries resolve to their own slot on both paths."""
+    n = 400
+    vecs = _unit(rng, n)
+    hnsw = HNSWIndex(384, 512, seed=6)
+    for j, v in enumerate(vecs):
+        hnsw.add(v, category=j % 2)
+    picks = rng.integers(0, n, 32)
+    queries = vecs[picks]
+    qc = (picks % 2).astype(np.int32)
+    taus = np.full(32, 0.99, np.float32)     # exact-vector lookups
+    hi, hs = hnsw.search_host(queries, taus, categories=qc)
+    di, ds = hnsw.search_batch(queries, taus, categories=qc)
+    for idx_arr in (hi, di):
+        found = idx_arr != INVALID
+        # every result is the query's own category
+        assert (hnsw.category[idx_arr[found]] == qc[found]).all()
+    assert float(np.mean(hi != INVALID)) >= 0.9
+    assert float(np.mean(di != INVALID)) >= 0.85      # ANN beam recall
+    both = (hi != INVALID) & (di != INVALID)
+    assert float(np.mean(hi[both] == di[both])) >= 0.9
+
+
+def test_cross_category_nodes_route_but_never_win(rng):
+    """DiskANN-style: the opposite category still routes the beam, but the
+    returned best is always same-category — even when a cross-category node
+    is strictly nearer to the query."""
+    n = 300
+    vecs = _unit(rng, n)
+    hnsw = HNSWIndex(384, 512, seed=7)
+    for j, v in enumerate(vecs):
+        hnsw.add(v, category=j % 2)
+    # query ON category-0 vectors, but ask for category 1
+    own = np.arange(0, 32, 2)                 # slots with category 0
+    q = vecs[own]
+    qc = np.ones(16, np.int32)
+    taus = np.full(16, -np.inf, np.float32)
+    hi, hs = hnsw.search_host(q, taus, categories=qc)
+    di, ds = hnsw.search_batch(q, taus, categories=qc)
+    assert (hnsw.category[hi[hi != INVALID]] == 1).all()
+    assert (hnsw.category[di[di != INVALID]] == 1).all()
+    # never the (category-0) exact match the query sits on
+    assert not np.any(hi == own)
+    assert not np.any(di == own)
+
+
+def test_flat_masked_empty_category_is_a_miss(rng):
+    """All slots masked out + τ = -inf must return INVALID, not an
+    arbitrary -inf-scored cross-category slot (-inf >= -inf)."""
+    flat = FlatIndex(384, 16)
+    for v in _unit(rng, 4):
+        flat.add(v, category=0)
+    i, s = flat.search_host(_unit(rng, 1), np.array([-np.inf], np.float32),
+                            categories=np.array([5], np.int32))
+    assert i[0] == INVALID
+    # same guard for the pre-existing all-tombstones variant
+    flat2 = FlatIndex(384, 16)
+    flat2.remove(flat2.add(_unit(rng, 1)[0]))
+    i, s = flat2.search_host(_unit(rng, 1), np.array([-np.inf], np.float32))
+    assert i[0] == INVALID
+
+
+def test_bulk_build_carries_categories(rng):
+    """bulk_build must accept per-slot categories so masked search works
+    on bulk-built indexes (host and device)."""
+    n, n_clusters, d = 1200, 40, 384
+    centers = _unit(rng, n_clusters, d)
+    assign = rng.integers(0, n_clusters, n)
+    vecs = centers[assign] + 0.015 * rng.standard_normal((n, d)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    cats = (np.arange(n) % 2).astype(np.int32)
+    idx = HNSWIndex.bulk_build(vecs, seed=7, categories=cats)
+    picks = rng.choice(np.arange(0, n, 2), 32, replace=False)  # cat-0 slots
+    qc = np.ones(32, np.int32)                                 # want cat 1
+    taus = np.full(32, 0.85, np.float32)
+    hi, _ = idx.search_host(vecs[picks], taus, categories=qc)
+    di, _ = idx.search_batch(vecs[picks], taus, categories=qc)
+    assert float(np.mean(hi != INVALID)) >= 0.9
+    assert float(np.mean(di != INVALID)) >= 0.85
+    assert (idx.category[hi[hi != INVALID]] == 1).all()
+    assert (idx.category[di[di != INVALID]] == 1).all()
+
+
 def test_density_profiles_match_paper(rng):
     """§3.1: dense 10NN dist ≈ 0.12, sparse ≈ 0.38."""
     d = make_dense_space(seed=0).nn_distance_profile()

@@ -12,7 +12,7 @@ from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flat_topk import flat_topk
-from repro.kernels.gather_scores import gather_scores
+from repro.kernels.gather_scores import gather_scores, gather_scores_masked
 from repro.kernels.mamba_scan import mamba_scan
 
 
@@ -51,6 +51,63 @@ def test_cache_topk_wrapper_pads_arbitrary_shapes(rng):
     assert np.array_equal(np.asarray(i), np.asarray(ri))
 
 
+@pytest.mark.parametrize("N,d,B,block", [(1024, 384, 8, 256), (512, 128, 8, 128)])
+def test_flat_topk_category_mask_matches_ref(rng, N, d, B, block):
+    """§5.3: rows from another category are masked exactly like invalid
+    rows; query category −1 is a wildcard (category-blind scan)."""
+    table = _unit_rows(rng, N, d)
+    valid = rng.random(N) > 0.2
+    cats = rng.integers(0, 4, N).astype(np.int32)
+    q = _unit_rows(rng, B, d)
+    qc = rng.integers(-1, 4, B).astype(np.int32)
+    s, i = flat_topk(jnp.asarray(table), jnp.asarray(valid), jnp.asarray(q),
+                     jnp.asarray(cats), jnp.asarray(qc),
+                     block_n=block, interpret=True)
+    rs, ri = ref.flat_topk_masked_ref(jnp.asarray(table), jnp.asarray(valid),
+                                      jnp.asarray(q), jnp.asarray(cats),
+                                      jnp.asarray(qc))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+    # results honor the mask
+    for b in range(B):
+        if qc[b] >= 0 and i[b] >= 0:
+            assert cats[int(i[b])] == qc[b]
+
+
+def test_category_args_must_travel_together(rng):
+    """Exactly one of (categories, query_categories) is a ValueError —
+    silently dropping the mask would bypass category isolation."""
+    table = jnp.asarray(_unit_rows(rng, 256, 128))
+    valid = jnp.ones(256, bool)
+    q = jnp.asarray(_unit_rows(rng, 8, 128))
+    qc = jnp.zeros(8, jnp.int32)
+    cats = jnp.zeros(256, jnp.int32)
+    idx = jnp.zeros((8, 4), jnp.int32)
+    with pytest.raises(ValueError):
+        flat_topk(table, valid, q, None, qc, block_n=64, interpret=True)
+    with pytest.raises(ValueError):
+        ops.cache_topk(table, valid, q, cats, None, interpret=True)
+    with pytest.raises(ValueError):
+        ops.hop_scores(table, idx, q, None, qc, interpret=True)
+
+
+def test_cache_topk_masked_wrapper_pads_arbitrary_shapes(rng):
+    table = _unit_rows(rng, 1000, 384)
+    valid = np.ones(1000, bool)
+    cats = (np.arange(1000) % 3).astype(np.int32)
+    q = _unit_rows(rng, 5, 384)
+    qc = np.array([0, 1, 2, -1, 0], np.int32)
+    s, i = ops.cache_topk(jnp.asarray(table), jnp.asarray(valid),
+                          jnp.asarray(q), jnp.asarray(cats), jnp.asarray(qc),
+                          block_n=256, interpret=True)
+    rs, ri = ref.flat_topk_masked_ref(jnp.asarray(table), jnp.asarray(valid),
+                                      jnp.asarray(q), jnp.asarray(cats),
+                                      jnp.asarray(qc))
+    assert s.shape == (5,)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+
 # ------------------------------------------------------------ gather_scores
 @pytest.mark.parametrize("N,d,B,K", [(256, 128, 4, 8), (512, 384, 2, 16)])
 def test_gather_scores_matches_ref(rng, N, d, B, K):
@@ -61,6 +118,50 @@ def test_gather_scores_matches_ref(rng, N, d, B, K):
                         interpret=True)
     want = ref.gather_scores_ref(jnp.asarray(table), jnp.asarray(idx),
                                  jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,d,B,K", [(256, 128, 4, 8), (512, 384, 2, 16)])
+def test_gather_scores_masked_matches_ref(rng, N, d, B, K):
+    """§5.3 fused hop mask: cross-category candidates and padding both
+    score -inf; query category −1 is a wildcard."""
+    table = rng.standard_normal((N, d)).astype(np.float32)
+    idx = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    cats = rng.integers(0, 3, N).astype(np.int32)
+    qc = rng.integers(-1, 3, B).astype(np.int32)
+    out = gather_scores_masked(jnp.asarray(table), jnp.asarray(idx),
+                               jnp.asarray(q), jnp.asarray(cats),
+                               jnp.asarray(qc), interpret=True)
+    want = ref.gather_scores_masked_ref(jnp.asarray(table), jnp.asarray(idx),
+                                        jnp.asarray(q), jnp.asarray(cats),
+                                        jnp.asarray(qc))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # cross-category positions really are -inf
+    out = np.asarray(out)
+    for b in range(B):
+        if qc[b] < 0:
+            continue
+        wrong = (idx[b] >= 0) & (cats[np.maximum(idx[b], 0)] != qc[b])
+        assert np.all(np.isneginf(out[b][wrong]))
+
+
+def test_hop_scores_dispatches_masked(rng):
+    """ops.hop_scores with categories must equal the masked oracle (and
+    the unmasked call must stay unchanged)."""
+    N, d, B, K = 256, 384, 4, 16
+    table = rng.standard_normal((N, d)).astype(np.float32)
+    idx = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    cats = rng.integers(0, 3, N).astype(np.int32)
+    qc = np.array([0, 1, 2, -1], np.int32)
+    out = ops.hop_scores(jnp.asarray(table), jnp.asarray(idx), jnp.asarray(q),
+                         jnp.asarray(cats), jnp.asarray(qc), interpret=True)
+    want = ref.gather_scores_masked_ref(jnp.asarray(table), jnp.asarray(idx),
+                                        jnp.asarray(q), jnp.asarray(cats),
+                                        jnp.asarray(qc))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 

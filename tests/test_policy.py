@@ -1,7 +1,12 @@
-"""Policy engine + adaptive controller (§7.5), with hypothesis properties."""
+"""Policy engine + adaptive controller (§7.5), with hypothesis properties.
+
+Property tests need ``hypothesis`` (declared in requirements-dev.txt);
+without it they are skipped and the example-based tests still run.
+"""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.economics import traffic_reduction
 from repro.core.policy import (AdaptiveController, CategoryConfig,
