@@ -1,0 +1,210 @@
+"""Steady-state serving cost of the device-resident index (delta sync).
+
+The paper's break-even argument (§4.4, §6) prices a local lookup at 2 ms;
+the seed gave that back under any realistic lookup/insert interleave by
+re-uploading the FULL index tables to device after every write
+(O(capacity·d) per serve step). This bench measures the steady state the
+delta protocol targets: batched lookups interleaved with batched miss
+write-backs, swept across cache capacities.
+
+    delta — dirty rows applied with the in-place scatter (the default):
+            per-step sync cost must be O(batch), so step time stays ~flat
+            as capacity grows
+    full  — rebuild_threshold < 0 forces the seed's full re-upload per
+            step: the O(capacity) contrast
+
+Emits CSV rows and ``results/BENCH_serve.json`` with per-(capacity, mode)
+hit rate, p50/p99 step latency and bytes synced per step, plus the
+``delta_p50_flatness`` ratio (max/min p50 across the capacity sweep) that
+CI's smoke job tracks.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.embedding import SyntheticCategorySpace
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+CAPACITIES = (4096, 8192, 16384, 32768)         # 8x sweep
+QUICK_CAPACITIES = (4096, 16384)                # 4x sweep (CI smoke)
+
+
+def _policies() -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig("steady", threshold=0.88, ttl=1e9, quota=1.0),
+    ])
+
+
+def _run_one(capacity: int, mode: str, *, steps: int, batch: int,
+             prefill: int, warmup: int, seed: int,
+             tag: str = "step") -> dict:
+    rng = np.random.default_rng(seed)
+    sp = SyntheticCategorySpace(name="steady", n_centers=200_000,
+                                sigma=0.015, loose_frac=0.0, seed=seed)
+    cache = SemanticCache(_policies(), capacity=capacity, clock=SimClock(),
+                          index_kind="hnsw", use_device=True, seed=seed)
+    if mode == "full":
+        cache.index.p.rebuild_threshold = -1.0   # seed behavior: always full
+
+    # Prefill the working set (intents 0..prefill-1), then one lookup to
+    # pay the initial upload + beam-search compile outside the timed loop.
+    ids = np.arange(prefill)
+    embs = np.stack([sp.sample(int(i), rng) for i in ids])
+    cache.insert_batch(embs, ["steady"] * prefill,
+                       [f"q{i}" for i in ids], [f"r{i}" for i in ids])
+    cache.lookup_batch(embs[:batch], ["steady"] * batch)
+
+    next_intent = prefill
+    last_bytes = cache.index.sync_stats["bytes_synced"]
+    step_s, sync_s, step_bytes, hits, lookups = [], [], [], 0, 0
+    for s in range(warmup + steps):
+        # half the batch revisits cached intents (hits), half is new
+        # traffic (misses -> one batched write-back)
+        hot = rng.integers(0, prefill, batch // 2)
+        cold = np.arange(next_intent, next_intent + batch - batch // 2)
+        next_intent += len(cold)
+        q = np.stack([sp.sample(int(i), rng)
+                      for i in np.concatenate([hot, cold])])
+        cats = ["steady"] * batch
+
+        t0 = time.perf_counter()
+        results = cache.lookup_batch(q, cats)
+        miss = [i for i, r in enumerate(results) if not r.hit]
+        if miss:
+            cache.insert_batch(q[miss], [cats[i] for i in miss],
+                               [f"mq{s}_{i}" for i in miss],
+                               [f"mr{s}_{i}" for i in miss])
+        # Flush the step's writes here so the sync cost is attributed to
+        # the step that produced it (and timed on its own: the sync is
+        # what the capacity sweep is ABOUT — total step time on a 1-CPU
+        # container is dominated by host graph wiring + its noise).
+        t1 = time.perf_counter()
+        cache.index.device_tables()
+        t2 = time.perf_counter()
+
+        if s >= warmup:
+            step_s.append(t2 - t0)
+            sync_s.append(t2 - t1)
+            synced = cache.index.sync_stats["bytes_synced"]
+            step_bytes.append(synced - last_bytes)
+            hits += batch - len(miss)
+            lookups += batch
+        last_bytes = cache.index.sync_stats["bytes_synced"]
+
+    lat_ms = np.asarray(step_s) * 1e3
+    sync_ms = np.asarray(sync_s) * 1e3
+    out = {
+        "capacity": capacity,
+        "mode": mode,
+        "hit_rate": round(hits / max(1, lookups), 4),
+        "p50_step_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_step_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "p50_sync_ms": round(float(np.percentile(sync_ms, 50)), 3),
+        "p99_sync_ms": round(float(np.percentile(sync_ms, 99)), 3),
+        "bytes_synced_per_step": int(np.mean(step_bytes)),
+        "full_uploads": cache.index.sync_stats["full_uploads"]
+        - (1 if mode == "delta" else 0),      # initial upload not steady
+        "delta_updates": cache.index.sync_stats["delta_updates"],
+    }
+    emit(f"serve.{tag}.{mode}.cap{capacity}", float(np.mean(lat_ms)) * 1e3,
+         p50_ms=out["p50_step_ms"], p99_ms=out["p99_step_ms"],
+         sync_ms=out["p50_sync_ms"], hit_rate=out["hit_rate"],
+         sync_bytes=out["bytes_synced_per_step"])
+    return out
+
+
+def run(capacities=CAPACITIES, steps: int = 30, batch: int = 16,
+        prefill: int = 1500, warmup: int = 5, seed: int = 0,
+        modes=("delta", "full"), repeats: int = 1,
+        out_dir: str = "results") -> dict:
+    # Throwaway process warm-up (BLAS threads, page cache, jit caches):
+    # without it the sweep's first configuration measures the process, not
+    # the capacity.
+    _run_one(min(capacities), modes[0], steps=3, batch=batch,
+             prefill=min(200, prefill), warmup=2, seed=seed, tag="warmup")
+    # Best-of-N sweeps: shared-machine load drifts on a timescale longer
+    # than one run, so per-config medians of a single sweep measure the
+    # neighbor's workload; the min over repeated sweeps is robust.
+    best: dict = {}
+    for rep in range(repeats):
+        for m in modes:
+            for c in capacities:
+                r = _run_one(c, m, steps=steps, batch=batch,
+                             prefill=prefill, warmup=warmup, seed=seed,
+                             tag=f"step{rep}" if repeats > 1 else "step")
+                key = (m, c)
+                if key not in best or r["p50_step_ms"] < \
+                        best[key]["p50_step_ms"]:
+                    best[key] = r
+    runs = [best[(m, c)] for m in modes for c in capacities]
+    payload = {
+        "batch": batch, "steps": steps, "prefill": prefill,
+        "repeats": repeats, "capacities": list(capacities), "runs": runs,
+    }
+    for mode in modes:
+        p50 = [r["p50_step_ms"] for r in runs if r["mode"] == mode]
+        sy = [r["p50_sync_ms"] for r in runs if r["mode"] == mode]
+        by = [r["bytes_synced_per_step"] for r in runs if r["mode"] == mode]
+        payload[f"{mode}_p50_flatness"] = round(max(p50) / max(min(p50),
+                                                              1e-9), 3)
+        payload[f"{mode}_sync_flatness"] = round(max(sy) / max(min(sy),
+                                                              1e-9), 3)
+        payload[f"{mode}_bytes_ratio"] = round(max(by) / max(min(by), 1), 3)
+    if "delta" in modes:
+        emit("serve.delta_flatness", 0.0,
+             step_ratio=payload["delta_p50_flatness"],
+             sync_ratio=payload["delta_sync_flatness"],
+             bytes_ratio=payload["delta_bytes_ratio"],
+             sweep=f"{min(capacities)}-{max(capacities)}")
+    write_bench_json("serve", payload, out_dir=out_dir)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 capacities (4x), fewer steps")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--prefill", type=int, default=None)
+    ap.add_argument("--modes", default="delta,full")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless delta-mode bytes synced "
+                         "per step are flat across the capacity sweep "
+                         "(the O(delta) acceptance gate; byte counts are "
+                         "deterministic, so the bound is tight)")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.quick:
+        caps, steps, prefill, warmup, reps = QUICK_CAPACITIES, 12, 600, 3, 1
+    else:
+        caps, steps, prefill, warmup, reps = CAPACITIES, 30, 1500, 5, 2
+    payload = run(capacities=caps,
+                  steps=steps if args.steps is None else args.steps,
+                  batch=args.batch,
+                  prefill=prefill if args.prefill is None else args.prefill,
+                  warmup=warmup, repeats=reps,
+                  modes=tuple(args.modes.split(",")), out_dir=args.out)
+    if args.check:
+        ratio = payload.get("delta_bytes_ratio")
+        if ratio is None or ratio > 1.5:
+            raise SystemExit(
+                f"O(delta) sync regression: delta-mode bytes synced per "
+                f"step vary {ratio}x across the capacity sweep "
+                f"(expected ~1.0 — per-step sync must not scale with "
+                f"cache capacity)")
+        print(f"# check ok: delta bytes ratio {ratio} across "
+              f"{min(caps)}-{max(caps)}")
+
+
+if __name__ == "__main__":
+    main()

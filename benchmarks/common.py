@@ -1,8 +1,12 @@
 """Shared benchmark helpers. Every bench emits ``name,us_per_call,derived``
-CSV rows via ``emit`` (derived = semicolon-separated key=value pairs)."""
+CSV rows via ``emit`` (derived = semicolon-separated key=value pairs);
+benches with tracked acceptance numbers also write a machine-readable
+``results/BENCH_<name>.json`` via ``write_bench_json`` (consumed by CI)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -17,6 +21,17 @@ def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
+
+
+def write_bench_json(name: str, payload: dict, out_dir: str = "results"
+                     ) -> str:
+    """Write ``results/BENCH_<name>.json`` and return its path."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 def time_callable(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -12,6 +12,8 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
     bench_adaptive    — §7.5 load-adaptive traffic reduction (9–17 %)
     bench_routing     — §7.5.5 multi-model per-hit value
     bench_kernels     — kernel microbench + TPU roofline projections
+    bench_serve       — steady-state device-sync cost: O(delta) vs
+                        O(capacity) across a cache-capacity sweep
 """
 
 from __future__ import annotations
@@ -23,7 +25,8 @@ import traceback
 
 from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
                         bench_kernels, bench_latency, bench_longtail,
-                        bench_memory, bench_routing, bench_thresholds)
+                        bench_memory, bench_routing, bench_serve,
+                        bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -35,6 +38,7 @@ ALL = {
     "adaptive": bench_adaptive.run,
     "routing": bench_routing.run,
     "kernels": bench_kernels.run,
+    "serve": bench_serve.run,
 }
 
 

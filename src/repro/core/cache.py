@@ -18,6 +18,12 @@ on fresh, above-threshold hits. Policy enforcement points (§5.4):
 
 Extensions implemented from §7.6: hot-document L1 (in-memory docs for the
 power-law head → hit latency 7 ms → 2 ms).
+
+The write path is batched end-to-end: ``insert_batch`` runs one eviction
+scoring pass, one ``store.put_many`` pass and one ``index.add_batch`` pass
+for B entries, whose dirty rows coalesce into a single device delta flush
+on the next search (see core/hnsw.py device residency). ``insert`` is a
+B=1 wrapper — there is only one write path.
 """
 
 from __future__ import annotations
@@ -75,6 +81,11 @@ class SemanticCache:
         if index_kind == "hnsw":
             self.index: HNSWIndex | FlatIndex = HNSWIndex(dim, capacity, seed=seed)
         elif index_kind == "flat":
+            if use_device:
+                # silently falling back to the host scan would let callers
+                # believe they benchmarked the device data plane
+                raise ValueError("use_device requires index_kind='hnsw' "
+                                 "(the flat index has no device path)")
             self.index = FlatIndex(dim, capacity)
         else:
             raise ValueError(f"unknown index_kind {index_kind!r}")
@@ -220,44 +231,183 @@ class SemanticCache:
                response: str, meta: dict | None = None) -> int:
         """Insert one (query → response) pair. Returns slot id or INVALID.
 
-        Enforcement: compliance pre-insertion (§5.4 — restricted categories
-        never create temporary data presence), per-category quota, global
-        capacity eviction by economic score.
+        Thin wrapper over ``insert_batch`` — the batched write path is the
+        ONLY write path, so single inserts and batch inserts share policy
+        enforcement, store writes and the index delta log.
         """
-        eff = self.policies.effective(category)
-        st = self.metrics.cat(category)
-        if not eff.allow_caching or eff.quota <= 0.0:
-            st.insert_rejects += 1
-            return INVALID
+        return self.insert_batch(np.asarray(embedding)[None, :], [category],
+                                 [request], [response], [meta])[0]
 
-        cid = self._cat_id(category)
-        cat_quota = int(eff.quota * self.capacity)
-        if self.category_count(category) >= max(1, cat_quota):
-            victim = self._lowest_score_slot(within_category=cid)
-            if victim != INVALID:
-                self._evict_slot(victim, reason="quota")
-                st.quota_evictions += 1
-        if len(self) >= self.capacity:
-            victim = self._lowest_score_slot()
-            if victim != INVALID:
-                vic_cat = self._cat_names.get(int(self.slot_category[victim]), "?")
-                self._evict_slot(victim, reason="capacity")
-                self.metrics.cat(vic_cat).capacity_evictions += 1
+    def insert_batch(self, embeddings: np.ndarray,
+                     categories: Sequence[str], requests: Sequence[str],
+                     responses: Sequence[str],
+                     metas: Sequence[dict | None] | None = None) -> list[int]:
+        """Insert B (query → response) pairs in one write round.
 
-        self.clock.advance(self.insert_ms / 1e3)
-        doc_id = self._next_doc_id
-        self._next_doc_id += 1
+        Enforcement matches the sequential semantics item by item —
+        compliance pre-insertion (§5.4: restricted categories never create
+        temporary data presence), per-category quota, global capacity
+        eviction by economic score — but the batch pays batched costs:
+
+        * ONE eviction-scoring pass (§5.4 score = priority × 1/age ×
+          hitRate) over the live slots, updated incrementally as victims
+          fall, instead of a per-item rescore;
+        * ONE ``store.put_many`` pass for all accepted documents;
+        * ONE index write pass (``index.add_batch``) whose touched rows
+          coalesce into a single device delta flush on the next search.
+
+        Returns a slot id per item; INVALID for compliance-rejected items
+        and for items evicted *within the batch* by a later item's quota or
+        capacity pressure (they count as inserted-then-evicted in metrics,
+        matching the sequential path, but never touch the store or index).
+        """
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        B = embeddings.shape[0]
+        metas = list(metas) if metas is not None else [None] * B
+        if not (len(categories) == len(requests) == len(responses)
+                == len(metas) == B):
+            raise ValueError("insert_batch: ragged batch")
+        slots_out = [INVALID] * B
+
+        # Compliance gate (one policy resolution per distinct category).
+        eff = {c: self.policies.effective(c) for c in dict.fromkeys(categories)}
+        admitted = []
+        for i, c in enumerate(categories):
+            if not eff[c].allow_caching or eff[c].quota <= 0.0:
+                self.metrics.cat(c).insert_rejects += 1
+            else:
+                admitted.append(i)
+        if not admitted:
+            return slots_out
+
+        self.clock.advance(self.insert_ms / 1e3)   # one batched write round
         now = self.clock.now()
-        self.store.put(Document(doc_id, request, response, now, category,
-                                meta or {}))
+        cids = {c: self._cat_id(c) for c in eff}
+
+        # Occupancy bookkeeping is one cheap pass; the eviction SCORING
+        # pass (+inf marks non-candidates so victim selection is a masked
+        # argmin, updated as evictions land) is built lazily — a batch
+        # under no quota/capacity pressure never pays it.
+        live_mask = self.slot_valid.copy()
+        cat_snapshot = self.slot_category.copy()
+        cat_counts = {cid: int((live_mask & (cat_snapshot == cid)).sum())
+                      for cid in cids.values()}
+        live_count = int(live_mask.sum())
+        _, pri_by_cid = self._per_category_arrays()
+        scores: np.ndarray | None = None
+
+        def ensure_scores() -> np.ndarray:
+            nonlocal scores
+            if scores is None:
+                scores = np.full(self.capacity, np.inf, np.float64)
+                live = np.where(live_mask)[0]
+                if live.size:
+                    scores[live] = self._entry_score(live)
+            return scores
+
+        # pending: admitted items not yet materialized, as (batch_i, cid,
+        # score) — a fresh entry's score is pri × 1/age_clamp × 1, so a
+        # later item's quota pressure can evict an earlier batch item
+        # exactly like the sequential path would.
+        pending: list[list] = []
+        pending_counts: dict[int, int] = {}
+
+        def evict_existing(slot: int, reason: str) -> int:
+            nonlocal live_count
+            vic_cid = int(cat_snapshot[slot])
+            self._evict_slot(slot, reason=reason)
+            live_mask[slot] = False
+            ensure_scores()[slot] = np.inf
+            cat_counts[vic_cid] = cat_counts.get(vic_cid, 1) - 1
+            live_count -= 1
+            return vic_cid
+
+        def pick_victim(cid: int | None):
+            """Lowest-score candidate among live slots (optionally one
+            category) and pending batch items. Returns (slot, pending_pos);
+            exactly one is valid (INVALID / -1 for the other)."""
+            s = ensure_scores()
+            mask = live_mask if cid is None else \
+                live_mask & (cat_snapshot == cid)
+            cand = np.where(mask)[0]
+            best_slot, best_score = INVALID, np.inf
+            if cand.size:
+                j = int(np.argmin(s[cand]))
+                best_slot = int(cand[j])
+                best_score = float(s[best_slot])
+            best_pos = -1
+            for pos, (_, p_cid, p_score) in enumerate(pending):
+                if cid is not None and p_cid != cid:
+                    continue
+                if p_score < best_score:
+                    best_pos, best_score = pos, p_score
+                    best_slot = INVALID
+            return best_slot, best_pos
+
+        def drop_pending(pos: int, reason_counter: str) -> None:
+            """A batch item fell to a later item's pressure before ever
+            reaching the index: account it as inserted-then-evicted (the
+            sequential outcome) without a store/index round trip."""
+            p_i, p_cid, _ = pending.pop(pos)
+            pending_counts[p_cid] -= 1
+            p_st = self.metrics.cat(categories[p_i])
+            p_st.inserts += 1
+            setattr(p_st, reason_counter,
+                    getattr(p_st, reason_counter) + 1)
+
+        for i in admitted:
+            c = categories[i]
+            e = eff[c]
+            cid = cids[c]
+            st = self.metrics.cat(c)
+            cat_quota = int(e.quota * self.capacity)
+            n_cat = cat_counts.get(cid, 0) + pending_counts.get(cid, 0)
+            if n_cat >= max(1, cat_quota):
+                slot, pos = pick_victim(cid)
+                if slot != INVALID:
+                    evict_existing(slot, "quota")
+                    st.quota_evictions += 1
+                elif pos >= 0:
+                    # seed attributes quota evictions to the inserting
+                    # category — here victim and inserter share it
+                    drop_pending(pos, "quota_evictions")
+            if live_count + len(pending) >= self.capacity:
+                slot, pos = pick_victim(None)
+                if slot != INVALID:
+                    vic_cat = self._cat_names.get(evict_existing(
+                        slot, "capacity"), "?")
+                    self.metrics.cat(vic_cat).capacity_evictions += 1
+                elif pos >= 0:
+                    drop_pending(pos, "capacity_evictions")
+            pending.append([i, cid, float(pri_by_cid[cid]) * 1e3])
+            pending_counts[cid] = pending_counts.get(cid, 0) + 1
+
+        if not pending:
+            return slots_out
+
+        # One store pass, one index pass; the index's dirty rows coalesce
+        # into a single device delta flush on the next search_batch.
+        docs = []
+        for p_i, _, _ in pending:
+            doc_id = self._next_doc_id
+            self._next_doc_id += 1
+            docs.append(Document(doc_id, requests[p_i], responses[p_i], now,
+                                 categories[p_i], metas[p_i] or {}))
+        self.store.put_many(docs)
+        order = [p_i for p_i, _, _ in pending]
         # The index owns the category table (slot_category aliases it).
-        slot = self.index.add(np.asarray(embedding, np.float32), category=cid)
-        self.slot_inserted[slot] = now
-        self.slot_hits[slot] = 0
-        self.slot_doc[slot] = doc_id
-        self.slot_valid[slot] = True
-        st.inserts += 1
-        return slot
+        slots = self.index.add_batch(
+            embeddings[order],
+            np.asarray([cid for _, cid, _ in pending], np.int32))
+        for (p_i, _, _), slot, doc in zip(pending, slots, docs):
+            slot = int(slot)
+            self.slot_inserted[slot] = now
+            self.slot_hits[slot] = 0
+            self.slot_doc[slot] = doc.doc_id
+            self.slot_valid[slot] = True
+            self.metrics.cat(categories[p_i]).inserts += 1
+            slots_out[p_i] = slot
+        return slots_out
 
     # ----------------------------------------------------------------- eviction
     def _per_category_arrays(self) -> tuple[np.ndarray, np.ndarray]:
@@ -285,16 +435,6 @@ class SemanticCache:
         _, pri_by_cid = self._per_category_arrays()
         pri = pri_by_cid[self.slot_category[slots]]
         return pri * (1.0 / age) * (self.slot_hits[slots] + 1)
-
-    def _lowest_score_slot(self, within_category: int | None = None) -> int:
-        mask = self.slot_valid.copy()
-        if within_category is not None:
-            mask &= self.slot_category == within_category
-        slots = np.where(mask)[0]
-        if slots.size == 0:
-            return INVALID
-        scores = self._entry_score(slots)
-        return int(slots[int(np.argmin(scores))])
 
     def _evict_slot(self, slot: int, reason: str = "") -> None:
         if not self.slot_valid[slot]:

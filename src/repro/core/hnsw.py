@@ -19,6 +19,24 @@ device-side search is re-blocked for the MXU (see DESIGN.md §3):
 
 Capacity is fixed at construction: tables are preallocated so the jitted
 search never recompiles as the cache fills.
+
+**Device residency (delta synchronization).** The device tables are
+persistent, not a lazily re-uploaded mirror: every host-side mutation
+(insert, evict/tombstone, level-0 neighbor rewire) records its touched
+rows in a compact dirty-row log, and ``device_tables()`` applies the log
+with donated in-place row scatters (``repro.kernels.ops.scatter_rows``:
+the Pallas ``scatter_update`` kernel for the lane-aligned embedding
+table, XLA scatter for the narrow/flag tables) instead of
+re-materializing the full O(capacity·d) tables. A full upload happens only on first use and when
+the dirty fraction exceeds ``HNSWParams.rebuild_threshold``. The tiny
+entry-point set is re-uploaded on every sync. ``sync_stats`` counts
+uploads, rows and bytes moved — the steady-state serve benchmark
+(benchmarks/bench_serve.py) asserts sync cost is O(delta) from these.
+
+Callers must treat ``device_tables()`` as the *live* mirror: the returned
+buffers are donated to the next delta flush, so do not hold references
+to them across index mutations — re-fetch per search (``search_batch``
+does).
 """
 
 from __future__ import annotations
@@ -31,7 +49,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 INVALID = -1
+
+
+def _batched_add(index, vecs: np.ndarray,
+                 categories: np.ndarray | None) -> np.ndarray:
+    """Shared add_batch body: normalize the batch, loop ``index.add``,
+    return the (B,) assigned slot ids."""
+    vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+    B = vecs.shape[0]
+    cats = (np.full(B, -1, np.int32) if categories is None
+            else np.broadcast_to(np.asarray(categories, np.int32), (B,)))
+    slots = np.empty(B, np.int32)
+    for i in range(B):
+        slots[i] = index.add(vecs[i], category=int(cats[i]))
+    return slots
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +108,12 @@ class FlatIndex:
         self.valid[slot] = True
         self.category[slot] = category
         return slot
+
+    def add_batch(self, vecs: np.ndarray,
+                  categories: np.ndarray | None = None) -> np.ndarray:
+        """Multi-insert (same signature as HNSWIndex.add_batch).
+        Returns the (B,) assigned slot ids."""
+        return _batched_add(self, vecs, categories)
 
     def remove(self, slot: int) -> None:
         if self.valid[slot]:
@@ -229,14 +269,22 @@ class HNSWParams:
     beam: int = 32              # device-search beam width F
     max_hops: int = 12          # device-search hop cap
     n_entries: int = 8          # device-search entry set size E
+    # Delta-sync protocol: apply dirty rows in place until their fraction
+    # of capacity exceeds this, then re-upload the full tables (a graph
+    # that churned that much is cheaper to rebuild than to scatter).
+    # Negative forces a full upload on every sync (the pre-delta behavior,
+    # kept as the O(capacity) contrast for benchmarks).
+    rebuild_threshold: float = 0.25
 
 
 class HNSWIndex:
     """Hierarchical build on host; batched beam search on device.
 
     Fixed ``capacity``; slots are recycled through a freelist on removal
-    (cache eviction). Device tables are mirrored lazily: ``device_tables()``
-    re-uploads only when the host copy changed (``_version`` bump).
+    (cache eviction). The device tables are persistent: mutations log
+    their touched rows in ``_dirty`` and ``device_tables()`` flushes the
+    log with an in-place scatter (see module docstring — sync cost is
+    O(delta), not O(capacity)).
     """
 
     def __init__(self, dim: int, capacity: int, params: HNSWParams | None = None,
@@ -262,6 +310,14 @@ class HNSWIndex:
         self._version = 0
         self._device_version = -1
         self._device: dict | None = None
+        # Delta log: level-0 rows whose emb/neighbors/valid/category changed
+        # since the last device sync. A set — rows touched repeatedly within
+        # one serve step coalesce to one scattered row.
+        self._dirty: set[int] = set()
+        self._entries_cache: np.ndarray | None = None
+        self._entries_version = -1
+        self.sync_stats = {"full_uploads": 0, "delta_updates": 0,
+                           "rows_synced": 0, "bytes_synced": 0}
 
     # -- basic bookkeeping ---------------------------------------------------
     def __len__(self) -> int:
@@ -355,6 +411,7 @@ class HNSWIndex:
         self._ensure_level_arrays(lvl)
         for l in range(len(self.neighbors)):
             self.neighbors[l][slot] = INVALID
+        self._dirty.add(slot)
 
         if self.entry_point == INVALID:
             self.entry_point = slot
@@ -382,6 +439,8 @@ class HNSWIndex:
                     sims = self.emb[cand] @ self.emb[nb]
                     keep = cand[np.argsort(sims)[::-1][:m]]
                     self.neighbors[l][nb] = keep
+            if l == 0:     # only the level-0 graph is device-visible
+                self._dirty.update(int(nb) for nb in chosen)
             entries = list(ids[:1]) if len(ids) else entries
 
         if lvl > self.max_level:
@@ -390,6 +449,17 @@ class HNSWIndex:
         self._version += 1
         return slot
 
+    def add_batch(self, vecs: np.ndarray,
+                  categories: np.ndarray | None = None) -> np.ndarray:
+        """Insert a batch of vectors. Returns the (B,) assigned slot ids.
+
+        Graph wiring stays host-sequential (HNSW insertion is inherently
+        so), but the whole batch's touched rows coalesce in the delta log,
+        so the device pays ONE scatter flush on the next search instead of
+        B full-table uploads.
+        """
+        return _batched_add(self, vecs, categories)
+
     def remove(self, slot: int) -> None:
         """Tombstone: stays routable until slot reuse, excluded from results."""
         if not self.valid[slot]:
@@ -397,6 +467,7 @@ class HNSWIndex:
         self.valid[slot] = False
         self.category[slot] = -1
         self._free.append(slot)
+        self._dirty.add(int(slot))
         if slot == self.entry_point:
             alive = np.where(self.valid)[0]
             if alive.size:
@@ -454,29 +525,93 @@ class HNSWIndex:
 
     # -- device search ----------------------------------------------------------
     def entry_set(self) -> np.ndarray:
-        """Multi-entry start set: entry point + highest-level live nodes."""
+        """Multi-entry start set: entry point + highest-level live nodes.
+
+        Cached on ``_version``: a delta flush re-derives this at most once
+        per mutation batch, and selection is O(n) ``argpartition`` (top-E
+        by level, order within the set is irrelevant to the beam), not a
+        full argsort of all live nodes.
+        """
+        if self._entries_version == self._version and \
+                self._entries_cache is not None:
+            return self._entries_cache
         E = self.p.n_entries
         ents = np.full((E,), INVALID, np.int32)
-        if self.entry_point == INVALID:
-            return ents
-        alive = np.where(self.valid)[0]
-        order = np.argsort(self.level[alive])[::-1]
-        chosen = alive[order[:E]].astype(np.int32)
-        ents[:len(chosen)] = chosen
-        if self.entry_point not in chosen:
-            ents[0] = self.entry_point
+        if self.entry_point != INVALID:
+            alive = np.where(self.valid)[0]
+            if alive.size > E:
+                top = np.argpartition(self.level[alive], alive.size - E)[-E:]
+                chosen = alive[top].astype(np.int32)
+            else:
+                chosen = alive.astype(np.int32)
+            ents[:len(chosen)] = chosen
+            if self.entry_point not in chosen:
+                ents[0] = self.entry_point
+        self._entries_cache = ents
+        self._entries_version = self._version
         return ents
 
+    def _row_nbytes(self) -> int:
+        """Bytes one synced delta row moves (emb + nbrs + valid + cat + id)."""
+        return (self.emb.itemsize * self.dim
+                + self.neighbors[0].itemsize * self.p.M0
+                + self.valid.itemsize + self.category.itemsize + 4)
+
     def device_tables(self) -> dict:
-        if self._device is None or self._device_version != self._version:
+        """The persistent device mirror, synced to the host state.
+
+        Protocol: no mutation since last sync → returned as-is. Otherwise
+        the dirty-row log is applied with one donated in-place scatter
+        (O(delta) bytes); a full O(capacity) upload happens only on first
+        use or when the dirty fraction exceeds ``rebuild_threshold``. The
+        entry set (E ints) rides along on every sync. Returned buffers are
+        donated to the NEXT flush — re-fetch after any mutation, never
+        cache them caller-side.
+        """
+        if self._device is not None and self._device_version == self._version:
+            return self._device
+        if self._device is None or len(self._dirty) > \
+                self.p.rebuild_threshold * self.capacity:
             self._device = {
                 "emb": jnp.asarray(self.emb),
                 "neighbors": jnp.asarray(self.neighbors[0]),
                 "valid": jnp.asarray(self.valid),
                 "category": jnp.asarray(self.category),
-                "entries": jnp.asarray(self.entry_set()),
             }
-            self._device_version = self._version
+            self.sync_stats["full_uploads"] += 1
+            self.sync_stats["rows_synced"] += self.capacity
+            self.sync_stats["bytes_synced"] += \
+                self.capacity * self._row_nbytes()
+        elif self._dirty:
+            rows = np.fromiter(self._dirty, np.int64, len(self._dirty))
+            rows.sort()
+            # Bucket the row count (next power of two) so the jit cache
+            # holds O(log capacity) entries; padding repeats row 0 of the
+            # delta with identical payload — a deterministic no-op.
+            bucket = max(8, 1 << (len(rows) - 1).bit_length())
+            rows = np.concatenate(
+                [rows, np.full(bucket - len(rows), rows[0])]).astype(np.int32)
+            d = self._device
+            rows_j = jnp.asarray(rows)
+            self._device = {
+                "emb": ops.scatter_rows(
+                    d["emb"], rows_j, jnp.asarray(self.emb[rows])),
+                "neighbors": ops.scatter_rows(
+                    d["neighbors"], rows_j,
+                    jnp.asarray(self.neighbors[0][rows])),
+                "valid": ops.scatter_rows(
+                    d["valid"], rows_j, jnp.asarray(self.valid[rows])),
+                "category": ops.scatter_rows(
+                    d["category"], rows_j, jnp.asarray(self.category[rows])),
+            }
+            self.sync_stats["delta_updates"] += 1
+            self.sync_stats["rows_synced"] += len(rows)
+            self.sync_stats["bytes_synced"] += len(rows) * self._row_nbytes()
+        entries = self.entry_set()
+        self._device["entries"] = jnp.asarray(entries)
+        self.sync_stats["bytes_synced"] += entries.nbytes
+        self._dirty.clear()
+        self._device_version = self._version
         return self._device
 
     def search_batch(self, queries: np.ndarray, thresholds: np.ndarray, *,

@@ -61,6 +61,15 @@ class DocumentStore:
     def put(self, doc: Document) -> None:
         raise NotImplementedError
 
+    def put_many(self, docs: list[Document]) -> None:
+        """Batched write — ONE store pass for a whole insert batch.
+
+        Default loops ``put``; stores with per-call round-trip cost
+        (network, fsync) override this to amortize it.
+        """
+        for doc in docs:
+            self.put(doc)
+
     def get(self, doc_id: int) -> Document | None:
         raise NotImplementedError
 
@@ -77,6 +86,9 @@ class InMemoryStore(DocumentStore):
 
     def put(self, doc: Document) -> None:
         self._docs[doc.doc_id] = doc
+
+    def put_many(self, docs: list[Document]) -> None:
+        self._docs.update((d.doc_id, d) for d in docs)
 
     def get(self, doc_id: int) -> Document | None:
         return self._docs.get(doc_id)
@@ -149,6 +161,11 @@ class LatencyModelStore(DocumentStore):
     def put(self, doc: Document) -> None:
         self.clock.advance(self.put_ms / 1e3)
         self.inner.put(doc)
+
+    def put_many(self, docs: list[Document]) -> None:
+        # one batched round trip, not one per document
+        self.clock.advance(self.put_ms / 1e3)
+        self.inner.put_many(docs)
 
     def get(self, doc_id: int) -> Document | None:
         self.clock.advance(self.get_ms / 1e3)

@@ -22,6 +22,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import flat_topk as _ft
 from repro.kernels import gather_scores as _gs
 from repro.kernels import mamba_scan as _ms
+from repro.kernels import scatter_update as _su
 
 
 @functools.cache
@@ -101,6 +102,44 @@ def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
                                         slot_categories, query_categories,
                                         interpret=interpret)
     return _gs.gather_scores(table, indices, queries, interpret=interpret)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows_xla(table: jax.Array, rows: jax.Array, vals: jax.Array
+                      ) -> jax.Array:
+    # XLA in-place scatter (donated buffer) — what the Pallas kernel lowers
+    # to conceptually; used directly where interpret-mode Pallas would only
+    # add per-row interpreter overhead (CPU).
+    return table.at[rows].set(vals.astype(table.dtype))
+
+
+def scatter_rows(table: jax.Array, rows: jax.Array, vals: jax.Array,
+                 *, interpret: bool | None = None) -> jax.Array:
+    """Delta flush: write ``vals[r]`` into ``table[rows[r]]`` in place.
+
+    The device-residency sync primitive (``HNSWIndex.device_tables`` is
+    the production caller): the input table buffer is donated and
+    aliased, so only the R delta rows move — O(delta·d) HBM traffic
+    instead of a full O(N·d) re-upload. Dispatch: the Pallas kernel
+    serves lane-aligned 2-D tables (row width a multiple of 128 — the
+    embedding table, where ~90 % of the bytes live) on compiled backends;
+    1-D flag tables (valid/category, routed through a column view) and
+    narrow tables use the XLA in-place scatter, which is already optimal
+    for them and avoids off-lane blocks.
+
+    Contract (enforced by callers that pad the delta to a bucket size):
+    rows >= 0, duplicate row ids carry identical vals rows.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    squeeze = table.ndim == 1
+    if squeeze:
+        table = table[:, None]
+        vals = vals[:, None]
+    if interpret or table.shape[1] % 128 != 0:
+        out = _scatter_rows_xla(table, rows.astype(jnp.int32), vals)
+    else:
+        out = _su.scatter_rows(table, rows.astype(jnp.int32), vals)
+    return out[:, 0] if squeeze else out
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -65,6 +65,15 @@ def gather_scores_masked_ref(table: jax.Array, indices: jax.Array,
     return jnp.where(ok, s, -jnp.inf)
 
 
+def scatter_rows_ref(table: jax.Array, rows: jax.Array, vals: jax.Array
+                     ) -> jax.Array:
+    """Row scatter: out[rows[r]] = vals[r], all other rows unchanged.
+
+    table (N, d); rows (R,) int32 >= 0; vals (R, d). Duplicate row ids must
+    carry identical vals rows (matching the kernel's contract)."""
+    return table.at[rows].set(vals.astype(table.dtype))
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int | None = None,
                   softcap: float | None = None, kv_offset: int = 0,

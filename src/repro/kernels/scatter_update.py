@@ -1,0 +1,72 @@
+"""Row-scatter update kernel — the device-residency delta flush (§5.2).
+
+The index tables (``emb``, ``neighbors``, ``valid``, ``category``) live
+persistently in device HBM; host-side mutations (insert, evict, neighbor
+rewires) accumulate in a compact dirty-row log and are applied in place.
+A full re-upload is O(capacity·d) HBM traffic per serve step; the scatter
+is O(delta·d) — the difference between per-capacity and per-batch sync
+cost, which is what keeps the 2 ms local-search budget (§4.4) intact
+under a realistic lookup/insert interleave.
+
+Grid: (R,) over delta rows. Step r DMAs the staged row ``vals[r]``
+VMEM→HBM into table row ``rows[r]`` — the row ids are scalar-prefetched
+(available before the grid runs) and drive the *output* block index map,
+the write-side mirror of the gather pattern in ``gather_scores``. The
+table operand is aliased to the output (``input_output_aliases``), so
+untouched rows are never copied: the kernel is a true in-place HBM
+update, not a rebuild.
+
+Contract: row ids must be non-negative, and duplicate ids must carry
+identical ``vals`` rows (the grid writes them in order, so identical
+payloads make the result deterministic). The ``repro.kernels.ops``
+wrapper enforces both when padding the delta to a bucketed size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_rows_kernel(rows_ref,      # scalar-prefetched (R,) int32
+                         table_ref,     # (1, d) aliased table row (unread)
+                         val_ref,       # (1, d) staged delta row
+                         out_ref):      # (1, d) table row rows[r], in place
+    del rows_ref, table_ref
+    out_ref[...] = val_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_rows(table: jax.Array, rows: jax.Array, vals: jax.Array,
+                 *, interpret: bool = False) -> jax.Array:
+    """In-place row scatter: ``table[rows[r]] = vals[r]`` for each delta row.
+
+    table (N, d); rows (R,) int32, all >= 0; vals (R, d) same dtype as
+    table. Returns the updated table — the input buffer is donated and
+    aliased, so on device this touches only the R scattered rows.
+    """
+    N, d = table.shape
+    R = rows.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[
+            # Aliased table operand: block-mapped to the same row the step
+            # writes (never read — present only to carry the alias).
+            pl.BlockSpec((1, d), lambda r, rows_ref: (rows_ref[r], 0)),
+            pl.BlockSpec((1, d), lambda r, rows_ref: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda r, rows_ref: (rows_ref[r], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, d), table.dtype),
+        input_output_aliases={1: 0},      # table (after the prefetched rows)
+        interpret=interpret,
+    )(rows.astype(jnp.int32), table, vals.astype(table.dtype))

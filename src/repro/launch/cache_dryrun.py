@@ -3,11 +3,18 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Dry-run of the PAPER'S OWN data plane: the batched semantic-cache
-lookup, lowered + compiled on the production serving mesh.
+lookup + index maintenance, lowered + compiled on the production mesh.
 
 Two implementations of the 2 ms local search (§5.2):
     flat — tiled cosine top-1 over the whole table (O(N·d) HBM stream)
     beam — HNSW batched-frontier beam search (O(hops·beam·M·d) gathers)
+
+Plus the write side of the device-resident index:
+    delta — the per-step delta flush (donated in-place row scatter over
+            emb/neighbors/valid/category). Its "bytes accessed" must scale
+            with --delta-rows, not --entries: the dry-run proof that
+            steady-state sync cost is O(delta) while the seed's full
+            re-upload was O(capacity).
 
 Sharding: the index is replicated per data-group (reads need no
 collectives); queries shard over (pod, data). A category-sharded variant
@@ -50,9 +57,17 @@ def flat_lookup(emb, valid, queries, thresholds, slot_cat, query_cat):
     return jnp.where(hit, best, -1), best_s
 
 
+def delta_flush(emb, nbrs, valid, cat, rows, emb_rows, nbr_rows,
+                valid_rows, cat_rows):
+    """Donated in-place scatter of R dirty rows into the resident tables
+    (the XLA form of kernels/scatter_update, as HNSWIndex applies it)."""
+    return (emb.at[rows].set(emb_rows), nbrs.at[rows].set(nbr_rows),
+            valid.at[rows].set(valid_rows), cat.at[rows].set(cat_rows))
+
+
 def build(impl: str, multi_pod: bool, n_entries: int, batch: int,
           dim: int = 384, m0: int = 32, shard_table: bool = False,
-          dtype="f32"):
+          dtype="f32", delta_rows: int = 256):
     mesh = make_production_mesh(multi_pod=multi_pod)
     dist = Dist.from_mesh(mesh)
     ns = lambda s: NamedSharding(mesh, s)
@@ -71,7 +86,18 @@ def build(impl: str, multi_pod: bool, n_entries: int, batch: int,
     taus = sds((batch,), jnp.float32)
     qcat = sds((batch,), jnp.int32)
 
-    if impl == "flat":
+    if impl == "delta":
+        R = delta_rows
+        rep2, rep1 = ns(P(None, None)), ns(P(None))
+        fn = jax.jit(delta_flush, donate_argnums=(0, 1, 2, 3),
+                     in_shardings=(rep2, rep2, rep1, rep1, rep1,
+                                   rep2, rep2, rep1, rep1),
+                     out_shardings=(rep2, rep2, rep1, rep1))
+        lowered = fn.lower(emb, nbrs, valid, slot_cat,
+                           sds((R,), jnp.int32),
+                           sds((R, dim), emb_dt), sds((R, m0), jnp.int32),
+                           sds((R,), jnp.bool_), sds((R,), jnp.int32))
+    elif impl == "flat":
         fn = jax.jit(flat_lookup,
                      in_shardings=(ns(table_spec), ns(P(table_spec[0])),
                                    ns(P(b_axes, None)), ns(P(b_axes)),
@@ -107,9 +133,12 @@ def build(impl: str, multi_pod: bool, n_entries: int, batch: int,
                 ("argument_size_in_bytes", "output_size_in_bytes",
                  "temp_size_in_bytes") if hasattr(mem, a)}
     n_dev = 512 if multi_pod else 256
+    esz = 2 if dtype == "bf16" else 4
+    row_bytes = dim * esz + m0 * 4 + 1 + 4
     payload = {
         "arch": f"cache_{impl}" + ("_sharded" if shard_table else ""),
-        "shape": f"lookup_b{batch}_n{n_entries}",
+        "shape": (f"delta_r{delta_rows}_n{n_entries}" if impl == "delta"
+                  else f"lookup_b{batch}_n{n_entries}"),
         "mesh": "multi" if multi_pod else "single",
         "n_devices": n_dev,
         "compile_s": round(t_compile, 2),
@@ -117,11 +146,14 @@ def build(impl: str, multi_pod: bool, n_entries: int, batch: int,
         "cost_analysis": cost,
         "collectives": coll,
         "hlo_cost": parsed,
-        # ideal: stream the (replicated) table once per query batch
-        "model_flops": 2.0 * n_entries * dim * batch,
+        # ideal: stream the (replicated) table once per query batch;
+        # the delta flush streams only the dirty rows
+        "model_flops": 0.0 if impl == "delta"
+        else 2.0 * n_entries * dim * batch,
         "active_params": 0,
         "cache_bytes": 0,
-        "table_bytes": n_entries * dim * (2 if dtype == "bf16" else 4),
+        "table_bytes": n_entries * dim * esz,
+        "delta_bytes": delta_rows * row_bytes if impl == "delta" else 0,
     }
     return payload
 
@@ -130,13 +162,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--entries", type=int, default=1 << 20)
     ap.add_argument("--batch", type=int, default=128)
-    ap.add_argument("--impl", default="both")
+    ap.add_argument("--impl", default="both",
+                    help="flat | beam | delta | both (flat+beam) | all")
+    ap.add_argument("--delta-rows", type=int, default=256,
+                    help="delta impl: dirty rows per flush")
     ap.add_argument("--shard-table", action="store_true")
     ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--out", default=RESULTS)
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
-    impls = ["flat", "beam"] if args.impl == "both" else [args.impl]
+    impls = {"both": ["flat", "beam"],
+             "all": ["flat", "beam", "delta"]}.get(args.impl, [args.impl])
     for impl in impls:
         for mp in (False, True):
             name = impl + ("_sharded" if args.shard_table else "") + \
@@ -144,7 +180,8 @@ def main():
             tag = f"cache__{name}__{'multi' if mp else 'single'}"
             print(f"[cache-dryrun] {tag} ...", flush=True)
             payload = build(impl, mp, args.entries, args.batch,
-                            shard_table=args.shard_table, dtype=args.dtype)
+                            shard_table=args.shard_table, dtype=args.dtype,
+                            delta_rows=args.delta_rows)
             with open(os.path.join(args.out, tag + ".json"), "w") as f:
                 json.dump(payload, f, indent=1)
             cost = payload["cost_analysis"]

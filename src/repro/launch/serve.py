@@ -29,15 +29,17 @@ from repro.serving.engine import ServingEngine
 
 def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
                 max_batch: int = 8, prompt_len: int = 32,
-                max_new_tokens: int = 8, seed: int = 0, log=print) -> dict:
+                max_new_tokens: int = 8, seed: int = 0,
+                index_kind: str = "flat", use_device: bool = False,
+                log=print) -> dict:
     model = Model(cfg)
     params = model.init_params(jax.random.key(seed))
     controller = AdaptiveController()
     policies = PolicyEngine(paper_policies(), controller=controller)
 
     cache = SemanticCache(policies, capacity=max(4096, n_requests),
-                          clock=WallClock(), index_kind="flat",
-                          l1_capacity=256)
+                          clock=WallClock(), index_kind=index_kind,
+                          use_device=use_device, l1_capacity=256)
     if cache_kind == "none":
         for name in policies.categories():
             policies.update(name, allow_caching=False)
@@ -63,9 +65,15 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
         f"model_tokens={st.model_tokens}, "
         f"mean_latency={st.total_latency_ms / max(1, st.served):.1f}ms, "
         f"wall={wall:.1f}s")
+    sync = getattr(cache.index, "sync_stats", None)
+    if sync is not None:
+        log(f"[serve] index sync: {sync['full_uploads']} full / "
+            f"{sync['delta_updates']} delta uploads, "
+            f"{sync['bytes_synced'] / 1e6:.2f} MB synced")
     return {"served": st.served, "hit_rate": st.hit_rate,
             "model_tokens": st.model_tokens, "wall_s": wall,
-            "per_category": cache.metrics.snapshot()}
+            "per_category": cache.metrics.snapshot(),
+            "index_sync": dict(sync) if sync is not None else None}
 
 
 def main():
@@ -75,13 +83,22 @@ def main():
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--cache", choices=["hybrid", "none"], default="hybrid")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--index", choices=["flat", "hnsw"], default="flat",
+                    help="cache index; hnsw enables the graph index")
+    ap.add_argument("--use-device", action="store_true",
+                    help="route lookups through the jitted beam search "
+                         "over the device-resident (delta-synced) index")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.use_device and args.index != "hnsw":
+        print("[serve] --use-device implies --index hnsw")
+        args.index = "hnsw"
     run_serving(cfg, n_requests=args.requests, cache_kind=args.cache,
-                max_batch=args.max_batch)
+                max_batch=args.max_batch, index_kind=args.index,
+                use_device=args.use_device)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,10 @@ The end-to-end path (examples/serve_e2e.py):
             (§5.3), so mixed-category batches resolve to same-category
             matches with no cross-category false misses
         hits  → respond from cache (no model tokens burned)
-        misses → batch → prefill → greedy decode loop → respond + insert
+        misses → batch → prefill → greedy decode loop → respond +
+                 ONE cache.insert_batch for the whole batch's write-backs
+                 (one store pass, one index delta flush — the device
+                 tables sync O(batch) bytes, not O(capacity))
 
 Latency/queue-depth observations feed the ``AdaptiveController`` so cache
 policies relax under load (§7.5) — on a real deployment this is the same
@@ -158,10 +161,15 @@ class ServingEngine:
                 p = batch[i].prompt_tokens[:self.prompt_len]
                 toks[j, :len(p)] = p
             out = np.asarray(self._generate(self.params, jnp.asarray(toks)))
+            texts = ["tok:" + ",".join(map(str, out[j]))
+                     for j in range(len(misses))]
+            # one batched write-back for every miss in this step
+            self.cache.insert_batch(
+                embs[misses], [batch[i].category for i in misses],
+                [batch[i].text for i in misses], texts)
             for j, i in enumerate(misses):
                 req = batch[i]
-                text = "tok:" + ",".join(map(str, out[j]))
-                self.cache.insert(embs[i], req.category, req.text, text)
+                text = texts[j]
                 lat = (time.monotonic() - req.arrival) * 1e3
                 responses.append(Response(req.req_id, text, out[j], False,
                                           lat, req.category, reason="model"))

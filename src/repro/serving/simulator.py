@@ -10,6 +10,11 @@ one of three serving stacks on a simulated clock:
                post-search collection-level threshold, server-side TTL)
     "none"   — no cache: every query pays T_llm
 
+Cache writes go through the unified batched write path
+(``SemanticCache.insert_batch``, B=1 per simulated miss) and, with
+``use_device``, lookups sync the device-resident index per-delta; the
+per-run sync accounting is surfaced as ``SimResult.index_sync``.
+
 Ground truth from the workload generator gives true hit-correctness
 (matched intent == query intent → else false positive) and staleness
 (content version advanced since caching). Model load can be driven by an
@@ -25,6 +30,7 @@ import numpy as np
 
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
+from repro.core.hnsw import HNSWIndex
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
 from repro.core.storage import Document, VectorDBEmulator
@@ -64,6 +70,10 @@ class SimResult:
     n_queries: int
     traffic_to_models: dict              # per model, query counts
     metrics: MetricsRegistry
+    # hybrid + hnsw only: device-sync accounting (full vs delta uploads,
+    # bytes moved) — the data-plane cost "Rethinking Caching" argues
+    # decides viability alongside hit rate
+    index_sync: dict | None = None
 
     def summary(self) -> dict:
         return {
@@ -256,4 +266,8 @@ class ServingSimulator:
             n_queries=n_queries,
             traffic_to_models=dict(self._model_calls),
             metrics=reg,
+            index_sync=(dict(self.cache.index.sync_stats)
+                        if self.sim.architecture == "hybrid"
+                        and isinstance(self.cache.index, HNSWIndex)
+                        else None),
         )

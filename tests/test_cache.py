@@ -216,6 +216,108 @@ def test_same_category_hit_device_beam_search(rng):
     assert res[1].hit and res[1].response == "rx"
 
 
+def test_insert_batch_matches_sequential_inserts(rng):
+    """One insert_batch must leave the cache in the same state as the
+    equivalent sequence of single inserts: same occupancy, same category
+    counts, same hits on lookup."""
+    sp = tight(make_dense_space(seed=20))
+    rng2 = np.random.default_rng(20)
+    embs = np.stack([sp.sample(i, rng2) for i in range(40)])
+    cats = ["dense_cat" if i % 2 == 0 else "sparse_cat" for i in range(40)]
+
+    seq, _ = make_cache()
+    for i in range(40):
+        seq.insert(embs[i], cats[i], f"q{i}", f"r{i}")
+    bat, _ = make_cache()
+    slots = bat.insert_batch(embs, cats, [f"q{i}" for i in range(40)],
+                             [f"r{i}" for i in range(40)])
+    assert len(bat) == len(seq)
+    assert all(s >= 0 for s in slots)
+    for c in ("dense_cat", "sparse_cat"):
+        assert bat.category_count(c) == seq.category_count(c)
+        assert bat.metrics.cat(c).inserts == seq.metrics.cat(c).inserts
+    for i in range(40):
+        r = bat.lookup(embs[i], cats[i])
+        assert r.hit and r.response == f"r{i}"
+
+
+def test_insert_batch_compliance_rejected_items_get_invalid(rng):
+    cache, _ = make_cache()
+    sp = tight(make_dense_space(seed=21))
+    embs = np.stack([sp.sample(i, rng) for i in range(3)])
+    slots = cache.insert_batch(embs, ["dense_cat", "restricted", "sparse_cat"],
+                               ["a", "b", "c"], ["ra", "rb", "rc"])
+    assert slots[0] >= 0 and slots[2] >= 0
+    assert slots[1] == INVALID
+    assert len(cache) == 2          # no temporary presence for restricted
+    assert cache.metrics.cat("restricted").insert_rejects == 1
+
+
+def test_insert_batch_quota_enforced_within_one_batch(rng):
+    """A single batch that overflows a category quota must end at the
+    quota, evicting earlier batch items (seed semantics: each overflowing
+    insert evicts the lowest-scored same-category entry)."""
+    cache, _ = make_cache(capacity=100)
+    sp = make_dense_space(seed=22)
+    n = 80                          # quota 0.3 x 100 = 30
+    embs = np.stack([sp.sample(i, rng) for i in range(n)])
+    cache.insert_batch(embs, ["sparse_cat"] * n,
+                       [f"q{i}" for i in range(n)],
+                       [f"r{i}" for i in range(n)])
+    assert cache.category_count("sparse_cat") <= 30
+    assert cache.metrics.cat("sparse_cat").quota_evictions > 0
+    assert cache.metrics.cat("sparse_cat").inserts == n
+    # the store holds exactly the surviving documents
+    assert len(cache.store) == len(cache)
+
+
+def test_insert_batch_one_store_pass_and_one_delta_flush(rng):
+    """B inserts = one put_many call and one device sync."""
+    from repro.core.storage import InMemoryStore
+
+    class CountingStore(InMemoryStore):
+        def __init__(self):
+            super().__init__()
+            self.put_calls = 0
+            self.put_many_calls = 0
+
+        def put(self, doc):
+            self.put_calls += 1
+            super().put(doc)
+
+        def put_many(self, docs):
+            self.put_many_calls += 1
+            super().put_many(docs)
+
+    eng = PolicyEngine([
+        CategoryConfig("dense_cat", threshold=0.90, ttl=3600.0, quota=1.0),
+    ])
+    store = CountingStore()
+    cache = SemanticCache(eng, capacity=4096, clock=SimClock(),
+                          index_kind="hnsw", use_device=True, store=store)
+    sp = tight(make_dense_space(seed=23))
+    warm = np.stack([sp.sample(1000 + i, rng) for i in range(32)])
+    cache.insert_batch(warm, ["dense_cat"] * 32,
+                       [f"w{i}" for i in range(32)],
+                       [f"wr{i}" for i in range(32)])
+    cache.lookup_batch(warm[:4], ["dense_cat"] * 4)   # initial upload
+    syncs0 = (cache.index.sync_stats["full_uploads"]
+              + cache.index.sync_stats["delta_updates"])
+    calls0 = store.put_many_calls
+
+    embs = np.stack([sp.sample(i, rng) for i in range(16)])
+    cache.insert_batch(embs, ["dense_cat"] * 16,
+                       [f"q{i}" for i in range(16)],
+                       [f"r{i}" for i in range(16)])
+    res = cache.lookup_batch(embs, ["dense_cat"] * 16)
+    syncs1 = (cache.index.sync_stats["full_uploads"]
+              + cache.index.sync_stats["delta_updates"])
+    assert store.put_many_calls == calls0 + 1
+    assert store.put_calls == 0                 # batched, not looped
+    assert syncs1 == syncs0 + 1                 # ONE flush for 16 inserts
+    assert sum(r.hit for r in res) >= 12        # ANN beam recall
+
+
 def test_batch_no_false_miss_across_interleaved_categories(rng):
     """Mixed-category batch where every query's global nearest is the OTHER
     category's entry: all queries must still hit their own category."""

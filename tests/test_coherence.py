@@ -1,0 +1,123 @@
+"""Host/device coherence of the delta-synced index (seeded random
+interleaves — property-style but hypothesis-free so they always run).
+
+The device tables are persistent and mutated in place by scatter flushes;
+these tests drive long random interleaves of the write path
+(``insert_batch`` / ``remove`` / ``sweep_expired``) with syncs injected at
+random points — crossing the delta/rebuild boundary repeatedly — and
+assert the device mirror stays EXACTLY equal to the host tables, and that
+host and device searches agree.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SemanticCache, SimClock
+from repro.core.hnsw import HNSWIndex, INVALID
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+DIM = 64
+
+
+def _unit(rng, n):
+    x = rng.standard_normal((n, DIM)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _assert_mirror_exact(idx: HNSWIndex) -> None:
+    t = idx.device_tables()
+    for key, host in (("emb", idx.emb), ("neighbors", idx.neighbors[0]),
+                      ("valid", idx.valid), ("category", idx.category)):
+        assert np.array_equal(np.asarray(t[key]), host), \
+            f"device {key} diverged from host"
+    assert np.array_equal(np.asarray(t["entries"]), idx.entry_set())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_index_mirror_exact_under_random_interleave(seed):
+    """Random add_batch/remove interleave with syncs at random points:
+    after every flush the device tables equal the host tables exactly."""
+    rng = np.random.default_rng(seed)
+    idx = HNSWIndex(DIM, 512, seed=seed)
+    live: list[int] = []
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.55 or not live:
+            b = int(rng.integers(1, 9))
+            cats = rng.integers(0, 3, b).astype(np.int32)
+            live.extend(int(s) for s in idx.add_batch(_unit(rng, b), cats))
+        elif op < 0.85:
+            k = min(len(live), int(rng.integers(1, 5)))
+            for _ in range(k):
+                live.remove(victim := live[int(rng.integers(len(live)))])
+                idx.remove(victim)
+        else:
+            _assert_mirror_exact(idx)       # sync mid-interleave
+    _assert_mirror_exact(idx)
+    assert idx.sync_stats["delta_updates"] > 0, \
+        "interleave never exercised the delta path"
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_search_host_device_agree_after_interleave(seed):
+    """After a mutation storm, exact-vector searches agree between the
+    host hierarchical search and the device beam search over the synced
+    tables (every device result same-category and above threshold)."""
+    rng = np.random.default_rng(seed)
+    idx = HNSWIndex(DIM, 512, seed=seed)
+    vecs = _unit(rng, 200)
+    cats = (np.arange(200) % 2).astype(np.int32)
+    idx.add_batch(vecs[:150], cats[:150])
+    idx.search_batch(vecs[:8], np.full(8, 0.99, np.float32))  # first upload
+    removed = rng.choice(150, 30, replace=False)
+    for s in removed:
+        idx.remove(int(s))
+    reused = idx.add_batch(vecs[150:], cats[150:])
+    stale = np.setdiff1d(removed, reused)    # tombstones never recycled
+
+    alive = np.setdiff1d(np.arange(200), removed)
+    picks = rng.choice(alive, 32, replace=False)
+    q = vecs[picks]
+    qc = cats[picks]
+    taus = np.full(32, 0.99, np.float32)
+    hi, _ = idx.search_host(q, taus, categories=qc)
+    di, _ = idx.search_batch(q, taus, categories=qc)
+    assert float(np.mean(hi != INVALID)) >= 0.9
+    assert float(np.mean(di != INVALID)) >= 0.85
+    both = (hi != INVALID) & (di != INVALID)
+    assert float(np.mean(hi[both] == di[both])) >= 0.9
+    for arr in (hi, di):
+        found = arr != INVALID
+        assert (idx.category[arr[found]] == qc[found]).all()
+        assert not np.isin(arr[found], stale).any()
+
+
+def test_cache_mirror_exact_under_insert_remove_sweep(rng):
+    """Cache-level interleave: insert_batch / TTL sweep_expired / lookups
+    (which evict expired matches) keep the device mirror exact."""
+    eng = PolicyEngine([
+        CategoryConfig("a", threshold=0.90, ttl=50.0, quota=0.6),
+        CategoryConfig("b", threshold=0.90, ttl=1e6, quota=0.6),
+    ])
+    clock = SimClock()
+    cache = SemanticCache(eng, dim=DIM, capacity=512, clock=clock,
+                          index_kind="hnsw", use_device=True, seed=9)
+    rng2 = np.random.default_rng(9)
+    vecs = _unit(rng2, 120)
+    for step in range(6):
+        lo, hi = step * 20, (step + 1) * 20
+        cats = ["a" if i % 2 else "b" for i in range(lo, hi)]
+        cache.insert_batch(vecs[lo:hi], cats,
+                           [f"q{i}" for i in range(lo, hi)],
+                           [f"r{i}" for i in range(lo, hi)])
+        clock.advance(20.0)
+        if step % 2:
+            cache.sweep_expired()           # expires "a" entries (ttl 50)
+        res = cache.lookup_batch(vecs[lo:hi], cats)
+        _assert_mirror_exact(cache.index)
+        # device search never serves an expired/evicted slot
+        for r in res:
+            if r.hit:
+                assert cache.slot_valid[r.slot]
+    assert cache.metrics.cat("a").ttl_evictions > 0
+    assert cache.index.sync_stats["delta_updates"] > 0

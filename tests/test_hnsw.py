@@ -212,6 +212,95 @@ def test_bulk_build_carries_categories(rng):
     assert (idx.category[di[di != INVALID]] == 1).all()
 
 
+def _device_matches_host(idx: HNSWIndex) -> None:
+    t = idx.device_tables()
+    for key, host in (("emb", idx.emb), ("neighbors", idx.neighbors[0]),
+                      ("valid", idx.valid), ("category", idx.category)):
+        assert np.array_equal(np.asarray(t[key]), host), key
+    assert np.array_equal(np.asarray(t["entries"]), idx.entry_set())
+
+
+def test_delta_sync_small_mutation_is_not_a_full_upload(rng):
+    """Steady-state contract: after the initial upload, a small mutation
+    batch flushes as ONE in-place delta (rows ≪ capacity) and the device
+    tables match the host tables exactly."""
+    idx = HNSWIndex(64, 2048, seed=1)
+    idx.add_batch(_unit(rng, 100, 64), np.arange(100) % 3)
+    _device_matches_host(idx)
+    assert idx.sync_stats["full_uploads"] == 1
+    before = dict(idx.sync_stats)
+    idx.add_batch(_unit(rng, 4, 64), np.full(4, 1))
+    idx.remove(5)
+    _device_matches_host(idx)
+    after = idx.sync_stats
+    assert after["full_uploads"] == before["full_uploads"]
+    assert after["delta_updates"] == before["delta_updates"] + 1
+    rows_moved = after["rows_synced"] - before["rows_synced"]
+    assert 0 < rows_moved < idx.capacity // 4
+    # sync cost is O(delta): far below a full-table upload
+    assert (after["bytes_synced"] - before["bytes_synced"]) < \
+        0.25 * idx.capacity * idx._row_nbytes()
+
+
+def test_delta_sync_rebuild_threshold_falls_back_to_full(rng):
+    """A churn burst past rebuild_threshold re-uploads the full tables
+    instead of scattering thousands of rows."""
+    idx = HNSWIndex(64, 128, seed=2)
+    idx.add_batch(_unit(rng, 20, 64))
+    idx.device_tables()
+    assert idx.sync_stats["full_uploads"] == 1
+    idx.add_batch(_unit(rng, 60, 64))      # dirties > 25% of capacity
+    _device_matches_host(idx)
+    assert idx.sync_stats["full_uploads"] == 2
+    assert idx.sync_stats["delta_updates"] == 0
+
+
+def test_add_batch_coalesces_to_one_flush(rng):
+    """B inserts between searches must cost one sync, not B."""
+    idx = HNSWIndex(64, 4096, seed=3)
+    idx.add_batch(_unit(rng, 64, 64))
+    idx.device_tables()
+    n0 = idx.sync_stats["full_uploads"] + idx.sync_stats["delta_updates"]
+    vecs = _unit(rng, 16, 64)
+    slots = idx.add_batch(vecs, np.zeros(16, np.int32))
+    assert len(set(slots.tolist())) == 16
+    di, _ = idx.search_batch(vecs, np.full(16, 0.99, np.float32),
+                             categories=np.zeros(16, np.int32))
+    n1 = idx.sync_stats["full_uploads"] + idx.sync_stats["delta_updates"]
+    assert n1 == n0 + 1
+    assert float(np.mean(di != INVALID)) >= 0.85
+
+
+def test_forced_full_resync_mode(rng):
+    """rebuild_threshold < 0 restores the pre-delta behavior (the
+    benchmark's O(capacity) contrast): every sync is a full upload."""
+    idx = HNSWIndex(32, 256, seed=4)
+    idx.p.rebuild_threshold = -1.0
+    idx.add_batch(_unit(rng, 10, 32))
+    idx.device_tables()
+    idx.add(_unit(rng, 1, 32)[0])
+    idx.device_tables()
+    assert idx.sync_stats["full_uploads"] == 2
+    assert idx.sync_stats["delta_updates"] == 0
+
+
+def test_entry_set_cached_on_version(rng):
+    idx = HNSWIndex(32, 256, seed=5)
+    idx.add_batch(_unit(rng, 40, 32))
+    e0 = idx.entry_set()
+    assert idx.entry_set() is e0               # no recompute, same version
+    assert idx.entry_point in e0
+    assert (idx.level[e0[e0 != INVALID]] >= 0).all()
+    # top-E selection: no live node outranks the chosen set's minimum level
+    chosen = e0[e0 != INVALID]
+    alive = np.where(idx.valid)[0]
+    others = np.setdiff1d(alive, chosen)
+    if others.size and chosen.size == idx.p.n_entries:
+        assert idx.level[others].max() <= idx.level[chosen].max()
+    idx.add(_unit(rng, 1, 32)[0])
+    assert idx.entry_set() is not e0           # version bump invalidates
+
+
 def test_density_profiles_match_paper(rng):
     """§3.1: dense 10NN dist ≈ 0.12, sparse ≈ 0.38."""
     d = make_dense_space(seed=0).nn_distance_profile()
