@@ -8,6 +8,7 @@ paper's constants and the measured cost.
 
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import emit, time_callable
@@ -24,18 +25,23 @@ def run(n_entries: int = 20000, seed: int = 0):
     for v in vecs:
         flat.add(v)
     q = vecs[rng.integers(0, n_entries, 16)]
-    taus = np.full(16, 0.9, np.float32)
+    B = q.shape[0]
+    taus = np.full(B, 0.9, np.float32)
 
     us_hnsw = time_callable(lambda: hnsw.search_host(q[:1], taus[:1]), iters=20)
-    us_flat = time_callable(lambda: flat.search_host(q, taus), iters=20) / 16
-    # batched device-style search (jitted beam search, per query amortized)
-    hnsw.search_batch(q, taus)  # compile
-    us_beam = time_callable(lambda: hnsw.search_batch(q, taus), iters=10) / 16
+    us_flat = time_callable(lambda: flat.search_host(q, taus), iters=20) / B
+    # Batched device-style search (jitted beam search), amortized over the
+    # ACTUAL query-batch size. search_batch returns device arrays, so the
+    # timed call must block — otherwise it measures dispatch, not search.
+    jax.block_until_ready(hnsw.search_batch(q, taus))  # compile
+    us_beam = time_callable(
+        lambda: jax.block_until_ready(hnsw.search_batch(q, taus)),
+        iters=10) / B
 
     emit("breakeven.local_search.hnsw_host", us_hnsw, entries=n_entries)
     emit("breakeven.local_search.flat_np", us_flat, entries=n_entries)
     emit("breakeven.local_search.beam_jax", us_beam, entries=n_entries,
-         batch=16)
+         batch=B)
 
     for t_llm, tag in ((200.0, "fast_model"), (500.0, "slow_model")):
         for model, name in ((VDB_COSTS, "vdb"), (HYBRID_COSTS, "hybrid")):

@@ -1,0 +1,189 @@
+"""Lookup-side data plane: the per-request hot loop, counter-gated.
+
+The paper's economics hinge on the in-memory search staying ~2 ms
+(break-even at 3-5 % hit rate vs 15-20 % for a 30 ms remote search); this
+bench tracks the lookup path the way the serve bench tracks the write
+path. Wall-clock p50/p99 are *reported* (vs capacity and batch size), but
+every acceptance gate rides DETERMINISTIC counters — this container has
+~30 % wall-clock noise:
+
+    compilations  — bucketed batch shapes: one compiled program must
+                    serve every engine drain size B = 1..max_batch
+    hops          — beam hops actually run (early exit working)
+    rows_gathered — embedding rows fetched per query; the done-query
+                    freeze means a query that hits its τ early STOPS
+                    issuing gather DMAs, so easy (cache-hit) traffic must
+                    gather strictly fewer rows than miss traffic
+
+Emits CSV rows and ``results/BENCH_lookup.json``; ``--check`` is the CI
+smoke gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_lookup [--quick] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.embedding import SyntheticCategorySpace
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+CAPACITIES = (4096, 8192, 16384)
+QUICK_CAPACITIES = (2048, 8192)
+MAX_BATCH = 8                   # the engine's default queue-drain ceiling
+
+
+def _policies() -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig("lookup", threshold=0.88, ttl=1e9, quota=1.0),
+    ])
+
+
+def _build_cache(capacity: int, prefill: int, seed: int
+                 ) -> tuple[SemanticCache, SyntheticCategorySpace]:
+    rng = np.random.default_rng(seed)
+    sp = SyntheticCategorySpace(name="lookup", n_centers=200_000,
+                                sigma=0.015, loose_frac=0.0, seed=seed)
+    cache = SemanticCache(_policies(), capacity=capacity, clock=SimClock(),
+                          index_kind="hnsw", use_device=True, seed=seed)
+    embs = np.stack([sp.sample(i, rng) for i in range(prefill)])
+    cache.insert_batch(embs, ["lookup"] * prefill,
+                       [f"q{i}" for i in range(prefill)],
+                       [f"r{i}" for i in range(prefill)])
+    return cache, sp
+
+
+def _run_capacity(capacity: int, *, prefill: int, lookups_per_batch: int,
+                  repeats: int, seed: int) -> dict:
+    cache, sp = _build_cache(capacity, prefill, seed)
+    rng = np.random.default_rng(seed + 1)
+    runs = []
+    # Batch-size sweep 1..MAX_BATCH: ONE compilation must serve them all
+    # (bucketing pads to the 8-lane sublane minimum). Wall clock is
+    # best-of-``repeats`` per the container-noise note; counters are
+    # deterministic and taken from the first pass.
+    for batch in sorted({1, 2, 3, MAX_BATCH // 2, MAX_BATCH}):
+        q = np.stack([sp.sample(int(i), rng)
+                      for i in rng.integers(0, prefill, batch)])
+        cache.lookup_batch(q, ["lookup"] * batch)          # warm the shape
+        stats0 = dict(cache.last_lookup_stats)
+        best = None
+        for _ in range(repeats):
+            lat = []
+            for _i in range(lookups_per_batch):
+                t0 = time.perf_counter()
+                res = cache.lookup_batch(q, ["lookup"] * batch)
+                lat.append(time.perf_counter() - t0)
+            lat_ms = np.asarray(lat) * 1e3
+            cur = {"p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                   "p99_ms": round(float(np.percentile(lat_ms, 99)), 3)}
+            if best is None or cur["p50_ms"] < best["p50_ms"]:
+                best = cur
+        hit_rate = float(np.mean([r.hit for r in res]))
+        row = {
+            "capacity": capacity, "batch": batch,
+            "hit_rate": round(hit_rate, 3),
+            "hops": stats0["hops"],
+            "rows_per_query": round(stats0["rows_gathered"] / batch, 1),
+            "compilations": cache.index.search_stats["compilations"],
+            **best,
+        }
+        runs.append(row)
+        emit(f"lookup.cap{capacity}.b{batch}", row["p50_ms"] * 1e3,
+             p99_ms=row["p99_ms"], hops=row["hops"],
+             rows_per_q=row["rows_per_query"],
+             compilations=row["compilations"], hit_rate=row["hit_rate"])
+    compilations = cache.index.search_stats["compilations"]
+
+    # Done-query freeze: exact cached vectors reach τ immediately and must
+    # stop issuing gather DMAs, so their rows-gathered-per-query sits far
+    # below miss traffic that walks the beam to convergence. Both counts
+    # are deterministic (same graph, same queries).
+    B = MAX_BATCH
+    easy = np.stack([sp.sample(int(i), rng)
+                     for i in rng.integers(0, prefill, B)])
+    hard = rng.standard_normal((B, easy.shape[1])).astype(np.float32)
+    hard /= np.linalg.norm(hard, axis=1, keepdims=True)
+    cache.lookup_batch(easy, ["lookup"] * B)
+    rows_easy = cache.last_lookup_stats["rows_gathered"] / B
+    hops_easy = cache.last_lookup_stats["hops"]
+    cache.lookup_batch(hard, ["lookup"] * B)
+    rows_hard = cache.last_lookup_stats["rows_gathered"] / B
+    hops_hard = cache.last_lookup_stats["hops"]
+    freeze = {"capacity": capacity, "batch": B,
+              "rows_per_query_easy": round(rows_easy, 1),
+              "rows_per_query_hard": round(rows_hard, 1),
+              "hops_easy": int(hops_easy), "hops_hard": int(hops_hard)}
+    emit(f"lookup.freeze.cap{capacity}", 0.0, **{
+        k: v for k, v in freeze.items() if k != "capacity"})
+    return {"runs": runs, "freeze": freeze, "compilations": compilations}
+
+
+def run(capacities=CAPACITIES, prefill: int = 1000,
+        lookups_per_batch: int = 20, repeats: int = 2, seed: int = 0,
+        out_dir: str = "results") -> dict:
+    payload = {"max_batch": MAX_BATCH, "prefill": prefill,
+               "capacities": list(capacities), "runs": [], "freeze": [],
+               "compilations_per_capacity": {}}
+    for cap in capacities:
+        r = _run_capacity(cap, prefill=min(prefill, cap // 2),
+                          lookups_per_batch=lookups_per_batch,
+                          repeats=repeats, seed=seed)
+        payload["runs"].extend(r["runs"])
+        payload["freeze"].append(r["freeze"])
+        payload["compilations_per_capacity"][str(cap)] = r["compilations"]
+    write_bench_json("lookup", payload, out_dir=out_dir)
+    return payload
+
+
+def check(payload: dict) -> None:
+    """The counter gates (deterministic — no wall-clock tolerance)."""
+    for cap, n in payload["compilations_per_capacity"].items():
+        if n != 1:
+            raise SystemExit(
+                f"bucketing regression: capacity {cap} compiled {n} "
+                f"programs for batch sizes 1..{payload['max_batch']} "
+                f"(expected 1 — bucketed batch shapes)")
+    for f in payload["freeze"]:
+        if not f["rows_per_query_easy"] < f["rows_per_query_hard"]:
+            raise SystemExit(
+                f"done-query freeze regression at capacity "
+                f"{f['capacity']}: easy traffic gathered "
+                f"{f['rows_per_query_easy']} rows/query vs "
+                f"{f['rows_per_query_hard']} for miss traffic — finished "
+                f"queries are still issuing gathers")
+    print(f"# check ok: 1 compilation serves B=1..{payload['max_batch']} "
+          f"at every capacity; freeze cuts rows/query "
+          + ", ".join(f"{f['rows_per_query_hard']}→"
+                      f"{f['rows_per_query_easy']} (cap {f['capacity']})"
+                      for f in payload["freeze"]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 capacities, fewer timed lookups")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the deterministic gates "
+                         "hold: one compilation per capacity across the "
+                         "batch sweep, and easy (early-finish) traffic "
+                         "gathers fewer rows/query than miss traffic")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.quick:
+        payload = run(capacities=QUICK_CAPACITIES, prefill=600,
+                      lookups_per_batch=8, repeats=1, out_dir=args.out)
+    else:
+        payload = run(out_dir=args.out)
+    if args.check:
+        check(payload)
+
+
+if __name__ == "__main__":
+    main()

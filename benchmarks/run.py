@@ -14,6 +14,8 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
     bench_kernels     — kernel microbench + TPU roofline projections
     bench_serve       — steady-state device-sync cost: O(delta) vs
                         O(capacity) across a cache-capacity sweep
+    bench_lookup      — lookup hot-loop p50/p99 vs capacity and batch
+                        size, counter-gated (bucketing, done-query freeze)
 """
 
 from __future__ import annotations
@@ -25,8 +27,8 @@ import traceback
 
 from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
                         bench_kernels, bench_latency, bench_longtail,
-                        bench_memory, bench_routing, bench_serve,
-                        bench_thresholds)
+                        bench_lookup, bench_memory, bench_routing,
+                        bench_serve, bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -39,6 +41,7 @@ ALL = {
     "routing": bench_routing.run,
     "kernels": bench_kernels.run,
     "serve": bench_serve.run,
+    "lookup": bench_lookup.run,
 }
 
 

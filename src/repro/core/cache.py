@@ -32,10 +32,12 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Sequence
 
+import jax
 import numpy as np
 
 from repro.core.clock import Clock, SimClock
-from repro.core.hnsw import FlatIndex, HNSWIndex, INVALID
+from repro.core.hnsw import CLS_EXPIRED, CLS_HIT, CLS_MISS, FlatIndex, \
+    HNSWIndex, INVALID
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import PolicyEngine
 from repro.core.storage import Document, DocumentStore, InMemoryStore
@@ -81,26 +83,35 @@ class SemanticCache:
         if index_kind == "hnsw":
             self.index: HNSWIndex | FlatIndex = HNSWIndex(dim, capacity, seed=seed)
         elif index_kind == "flat":
-            if use_device:
-                # silently falling back to the host scan would let callers
-                # believe they benchmarked the device data plane
-                raise ValueError("use_device requires index_kind='hnsw' "
-                                 "(the flat index has no device path)")
+            # FlatIndex has a first-class device path too (the flat_topk
+            # kernel via ops.cache_topk), so use_device is legal here.
             self.index = FlatIndex(dim, capacity)
         else:
             raise ValueError(f"unknown index_kind {index_kind!r}")
 
         # Per-slot metadata (§5.1: ~112 B/entry overhead). The category
-        # table LIVES IN THE INDEX (it is a search input, §5.3 — masked
-        # during traversal); ``slot_category`` aliases it so cache-side
+        # and insertion-time tables LIVE IN THE INDEX (category is a
+        # search input, §5.3; insertion time feeds the on-device TTL
+        # classification and rides the same delta-sync protocol);
+        # ``slot_category``/``slot_inserted`` alias them so cache-side
         # bookkeeping and the index/device mirror never diverge.
         self.slot_category = self.index.category
-        self.slot_inserted = np.zeros(capacity, np.float64)
+        self.slot_inserted = self.index.inserted
+        # The inserted table is float32 (the device dtype — jax runs with
+        # x64 disabled), whose spacing at epoch-scale absolute times
+        # (~1.7e9 s) is minutes. All cache-internal timestamps are
+        # therefore REBASED to the cache's construction instant: ages and
+        # TTL comparisons only ever see small relative values, so float32
+        # keeps sub-millisecond resolution for any realistic clock.
+        self._t0 = self.clock.now()
         self.slot_hits = np.zeros(capacity, np.int64)
         self.slot_doc = np.full(capacity, INVALID, np.int64)
         self.slot_valid = np.zeros(capacity, bool)
         self._cat_names: dict[int, str] = {}
         self._next_doc_id = 0
+        # Device-search observability (hops, rows gathered) from the last
+        # lookup_batch, materialized at the single host-conversion point.
+        self.last_lookup_stats: dict = {}
 
         # §7.6 hot-document L1: doc_id -> response, LRU by insertion order
         # (move-to-end on touch, evict from the front) — O(1) per hit.
@@ -110,6 +121,11 @@ class SemanticCache:
     # ------------------------------------------------------------------ utils
     def __len__(self) -> int:
         return int(self.slot_valid.sum())
+
+    def _now(self) -> float:
+        """Cache-relative time (see ``_t0``): what slot_inserted stores
+        and every TTL/age comparison uses, host and device alike."""
+        return self.clock.now() - self._t0
 
     def _cat_id(self, name: str) -> int:
         cid = self.policies.category_id(name)
@@ -129,7 +145,8 @@ class SemanticCache:
         """Vectorized Algorithm 1 over a mixed-category batch."""
         B = embeddings.shape[0]
         assert len(categories) == B
-        now = self.clock.now()
+        now = self._now()
+        self.last_lookup_stats = {}
         results: list[CacheResult] = [None] * B  # type: ignore[list-item]
 
         # Line 4-7: per-category config + compliance gate.
@@ -157,22 +174,36 @@ class SemanticCache:
         taus = np.asarray([effective[i].threshold for i in active], np.float32)
         qcats = np.asarray([self._cat_id(categories[i]) for i in active],
                            np.int32)
-        if self.use_device and isinstance(self.index, HNSWIndex):
-            idxs, scores = self.index.search_batch(q, taus, categories=qcats)
+        ttls = np.asarray([effective[i].ttl for i in active], np.float64)
+        if self.use_device:
+            # Line 12-21 classification runs INSIDE the jitted search (the
+            # synced ``inserted`` table + per-query TTL/now), so the only
+            # host sync is this single device_get — the Python below then
+            # touches actual hits (doc fetch) and expirations (evict), not
+            # all B results.
+            d_idx, d_score, d_cls = self.index.search_classified(
+                q, taus, categories=qcats, ttls=ttls, now=now)
+            ls = self.index.last_search
+            idxs, scores, cls, hops, rows = jax.device_get(
+                (d_idx, d_score, d_cls, ls.get("hops", 0),
+                 ls.get("rows_gathered", 0)))
+            idxs = np.asarray(idxs, np.int64)
+            scores = np.asarray(scores, np.float64)
+            cls = np.asarray(cls)
+            self.last_lookup_stats = {
+                "batch": len(active), "hops": int(hops),
+                "rows_gathered": int(np.sum(rows))}
         else:
             idxs, scores = self.index.search_host(q, taus, categories=qcats)
-
-        # Vectorized TTL/bookkeeping over the batch (Line 12-21): classify
-        # every result with numpy before any per-result Python runs. The
-        # search is category-masked, so a matched slot's TTL regime is the
-        # query's own.
-        idxs = np.asarray(idxs, np.int64)
-        scores = np.asarray(scores, np.float64)
-        safe = np.maximum(idxs, 0)
-        found = (idxs != INVALID) & self.slot_valid[safe]
-        ttls = np.asarray([effective[i].ttl for i in active], np.float64)
-        expired = found & ((now - self.slot_inserted[safe]) > ttls)
-        hit = found & ~expired
+            # Host path: same vectorized classification in numpy.
+            idxs = np.asarray(idxs, np.int64)
+            scores = np.asarray(scores, np.float64)
+            safe = np.maximum(idxs, 0)
+            found = (idxs != INVALID) & self.slot_valid[safe]
+            expired = found & ((now - self.slot_inserted[safe]) > ttls)
+            cls = np.where(expired, CLS_EXPIRED,
+                           np.where(found, CLS_HIT, CLS_MISS))
+        hit = cls == CLS_HIT
         np.add.at(self.slot_hits, idxs[hit], 1)   # duplicate slots accumulate
 
         for pos, i in enumerate(active):
@@ -181,7 +212,7 @@ class SemanticCache:
             slot, score = int(idxs[pos]), float(scores[pos])
 
             # Line 12-14: miss → return immediately, no external access.
-            if not found[pos]:
+            if cls[pos] == CLS_MISS:
                 st.misses += 1
                 results[i] = CacheResult(False, score=score, category=cat,
                                          reason="no_match",
@@ -190,7 +221,7 @@ class SemanticCache:
 
             # Line 18-21: TTL validated BEFORE the external fetch. Duplicate
             # matches of one slot within a batch evict (and count) once.
-            if expired[pos]:
+            if cls[pos] == CLS_EXPIRED:
                 if self.slot_valid[slot]:
                     self._evict_slot(slot, reason="ttl")
                     st.ttl_evictions += 1
@@ -281,7 +312,7 @@ class SemanticCache:
             return slots_out
 
         self.clock.advance(self.insert_ms / 1e3)   # one batched write round
-        now = self.clock.now()
+        now = self._now()
         cids = {c: self._cat_id(c) for c in eff}
 
         # Occupancy bookkeeping is one cheap pass; the eviction SCORING
@@ -387,12 +418,18 @@ class SemanticCache:
 
         # One store pass, one index pass; the index's dirty rows coalesce
         # into a single device delta flush on the next search_batch.
+        # Persisted documents keep ABSOLUTE clock time: the rebased ``now``
+        # exists only for the float32 index table, and a restart-durable
+        # store must not serialize timestamps relative to this process's
+        # private _t0.
+        created_at = self.clock.now()
         docs = []
         for p_i, _, _ in pending:
             doc_id = self._next_doc_id
             self._next_doc_id += 1
-            docs.append(Document(doc_id, requests[p_i], responses[p_i], now,
-                                 categories[p_i], metas[p_i] or {}))
+            docs.append(Document(doc_id, requests[p_i], responses[p_i],
+                                 created_at, categories[p_i],
+                                 metas[p_i] or {}))
         self.store.put_many(docs)
         order = [p_i for p_i, _, _ in pending]
         # The index owns the category table (slot_category aliases it).
@@ -430,7 +467,7 @@ class SemanticCache:
         """§5.4: score = priority × 1/age × hitRate (hits+1 so fresh entries
         aren't instantly evicted). Higher = more valuable. Vectorized over
         ``slots`` via the per-category priority table."""
-        now = self.clock.now()
+        now = self._now()
         age = np.maximum(now - self.slot_inserted[slots], 1e-3)
         _, pri_by_cid = self._per_category_arrays()
         pri = pri_by_cid[self.slot_category[slots]]
@@ -453,7 +490,7 @@ class SemanticCache:
         slots against the per-category TTL table; Python only touches the
         (typically few) slots actually being evicted.
         """
-        now = self.clock.now()
+        now = self._now()
         slots = np.where(self.slot_valid)[0]
         if slots.size == 0:
             return 0

@@ -9,16 +9,24 @@ device-side search is re-blocked for the MXU (see DESIGN.md §3):
   level assignment, neighbor wiring, tombstoning, entry-point maintenance.
   Also an exact hierarchical search used for CPU latency benchmarks.
 * **Device data plane** (JAX): *batched fixed-width beam search* over the
-  level-0 graph from a multi-entry start set. One hop = gather (B,F,M)
-  neighbor ids → gather embeddings → one (B, F·M, d)×(B, d) contraction on
-  the MXU → top-F merge. Early exit is the `while_loop` predicate
-  ``best_score ≥ τ_q`` with a per-query threshold vector — the paper's
-  threshold-during-traversal, vectorized. The gather+score primitive has a
-  Pallas kernel (``repro.kernels.gather_scores``); the pure-jnp path here is
-  the portable reference used on CPU.
+  level-0 graph from a multi-entry start set. One hop is the FUSED
+  frontier-hop primitive (``repro.kernels.frontier_hop`` via
+  ``ops.frontier_hop``): the scalar-prefetched frontier ids drive an
+  in-kernel neighbor-row fetch, per-candidate embedding DMAs and the
+  masked dot — no XLA-materialized (B, F·M, d) gather — followed by a
+  top-F merge. Early exit is the `while_loop` predicate ``best_score ≥
+  τ_q`` with a per-query threshold vector — the paper's
+  threshold-during-traversal, vectorized — and a *done* query's lanes
+  clamp to INVALID inside the hop, so it stops issuing gather DMAs
+  entirely. The pure-jnp path here is the portable reference used on CPU
+  (``HNSWParams.hop_impl`` selects; None = auto per backend).
 
 Capacity is fixed at construction: tables are preallocated so the jitted
-search never recompiles as the cache fills.
+search never recompiles as the cache fills, and the batch dimension is
+bucketed to powers of two so every serve batch size B = 1..max_batch
+shares one compiled program. ``search_classified`` additionally runs
+Algorithm 1's TTL check on device (the ``inserted`` table rides the
+delta-sync protocol) and returns {hit, expired, miss} classes.
 
 **Device residency (delta synchronization).** The device tables are
 persistent, not a lazily re-uploaded mirror: every host-side mutation
@@ -50,8 +58,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.kernels.frontier_hop import TOMBSTONE
 
 INVALID = -1
+
+# Lookup classification (paper Algorithm 1 lines 12-21), computed ON DEVICE
+# inside the jitted search so the cache's Python loop only touches actual
+# hits (doc fetch) and expirations (evict):
+CLS_MISS, CLS_EXPIRED, CLS_HIT = 0, 1, 2
+
+
+def _bucket_batch(n: int) -> int:
+    """Pad serve batches to the next power of two (min 8 — the fp32
+    sublane): engine queue drains produce B = 1..max_batch, and without
+    bucketing every distinct B compiles its own program."""
+    return max(8, 1 << (max(1, n) - 1).bit_length())
+
+
+def _pad_query_batch(queries: np.ndarray, thresholds, categories, ttls
+                     ) -> tuple[int, int, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]:
+    """Bucket the batch dimension. Padding lanes get τ = -inf, so they
+    are born *done*: beyond the one-time entry-set scoring every query
+    pays at init, the frozen hop emits INVALID candidates for them — zero
+    per-hop gather DMAs, not just zero result updates."""
+    q = np.atleast_2d(np.asarray(queries, np.float32))
+    B = q.shape[0]
+    Bp = _bucket_batch(B)
+    qp = np.zeros((Bp, q.shape[1]), np.float32)
+    qp[:B] = q
+    taup = np.full(Bp, -np.inf, np.float32)
+    taup[:B] = np.broadcast_to(np.asarray(thresholds, np.float32), (B,))
+    qcp = np.full(Bp, -1, np.int32)
+    if categories is not None:
+        qcp[:B] = np.broadcast_to(np.asarray(categories, np.int32), (B,))
+    tp = np.full(Bp, np.inf, np.float32)
+    if ttls is not None:
+        tp[:B] = np.broadcast_to(np.asarray(ttls, np.float32), (B,))
+    return B, Bp, qp, taup, qcp, tp
+
+
+def _flush_device_tables(device: dict | None, host: dict[str, np.ndarray],
+                         dirty: set, capacity: int, rebuild_threshold: float,
+                         row_nbytes: int, sync_stats: dict) -> dict:
+    """The delta-sync protocol, shared by FlatIndex and HNSWIndex: apply
+    the dirty-row log with donated in-place scatters (O(delta) bytes), or
+    re-upload everything on first use / past ``rebuild_threshold``
+    (negative = always full, the benchmark contrast)."""
+    if device is None or len(dirty) > rebuild_threshold * capacity:
+        device = {k: jnp.asarray(v) for k, v in host.items()}
+        sync_stats["full_uploads"] += 1
+        sync_stats["rows_synced"] += capacity
+        sync_stats["bytes_synced"] += capacity * row_nbytes
+    elif dirty:
+        rows = np.fromiter(dirty, np.int64, len(dirty))
+        rows.sort()
+        # Bucket the row count (same power-of-two policy as the batch
+        # dimension) so the jit cache holds O(log capacity) entries;
+        # padding repeats row 0 of the delta with identical payload — a
+        # deterministic no-op.
+        bucket = _bucket_batch(len(rows))
+        rows = np.concatenate(
+            [rows, np.full(bucket - len(rows), rows[0])]).astype(np.int32)
+        rows_j = jnp.asarray(rows)
+        device = {k: ops.scatter_rows(device[k], rows_j,
+                                      jnp.asarray(host[k][rows]))
+                  for k in host}
+        sync_stats["delta_updates"] += 1
+        sync_stats["rows_synced"] += len(rows)
+        sync_stats["bytes_synced"] += len(rows) * row_nbytes
+    return device
 
 
 def _batched_add(index, vecs: np.ndarray,
@@ -69,10 +145,91 @@ def _batched_add(index, vecs: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Shared device-residency protocol.
+# ---------------------------------------------------------------------------
+
+class DeviceResidentIndex:
+    """Device-residency + search-observability protocol shared by
+    ``FlatIndex`` and ``HNSWIndex``: the version counter, dirty-row log,
+    persistent mirror with delta flush (``_flush_device_tables``), sync
+    accounting, and the searches/compilations/last-search counters. A
+    subclass provides ``_host_tables()``, ``_row_nbytes()``,
+    ``_rebuild_threshold()`` and (optionally) ``_finish_sync()`` for
+    state that rides along on every sync (the HNSW entry set)."""
+
+    def _init_residency(self) -> None:
+        self._version = 0
+        self._device: dict | None = None
+        self._device_version = -1
+        # Delta log: rows whose host tables changed since the last device
+        # sync. A set — rows touched repeatedly within one serve step
+        # coalesce to one scattered row.
+        self._dirty: set[int] = set()
+        self.sync_stats = {"full_uploads": 0, "delta_updates": 0,
+                           "rows_synced": 0, "bytes_synced": 0}
+        self.search_stats = {"searches": 0, "compilations": 0}
+        self._compiled_keys: set = set()
+        self.last_search: dict = {}
+
+    # -- subclass hooks --------------------------------------------------------
+    def _host_tables(self) -> dict:
+        raise NotImplementedError
+
+    def _row_nbytes(self) -> int:
+        raise NotImplementedError
+
+    def _rebuild_threshold(self) -> float:
+        raise NotImplementedError
+
+    def _finish_sync(self, device: dict) -> None:
+        pass
+
+    # -- the protocol ----------------------------------------------------------
+    def device_tables(self) -> dict:
+        """The persistent device mirror, synced to the host state.
+
+        Protocol: no mutation since last sync → returned as-is. Otherwise
+        the dirty-row log is applied with one donated in-place scatter
+        (O(delta) bytes); a full O(capacity) upload happens only on first
+        use or when the dirty fraction exceeds the rebuild threshold.
+        Returned buffers are donated to the NEXT flush — re-fetch after
+        any mutation, never cache them caller-side.
+        """
+        if self._device is not None and self._device_version == self._version:
+            return self._device
+        self._device = _flush_device_tables(
+            self._device, self._host_tables(), self._dirty, self.capacity,
+            self._rebuild_threshold(), self._row_nbytes(), self.sync_stats)
+        self._finish_sync(self._device)
+        self._dirty.clear()
+        self._device_version = self._version
+        return self._device
+
+    def _record_search(self, B: int, Bp: int, key_extra: tuple = (),
+                       stats: dict | None = None) -> None:
+        """Count a device search: ``compilations`` is the number of
+        distinct compiled signatures seen (padded batch + impl knobs) —
+        the bucketing acceptance counter — and ``last_search`` keeps the
+        hops/rows-gathered device scalars without forcing a host sync."""
+        st = self.search_stats
+        st["searches"] += 1
+        self._compiled_keys.add((Bp,) + tuple(key_extra))
+        st["compilations"] = len(self._compiled_keys)
+        if stats is None:   # flat scan: the whole table streams per batch
+            self.last_search = {"batch": B, "padded_batch": Bp, "hops": 0,
+                                "rows_gathered": np.full(B, self.capacity,
+                                                         np.int64)}
+        else:
+            self.last_search = {"batch": B, "padded_batch": Bp,
+                                "hops": stats["hops"],
+                                "rows_gathered": stats["rows_gathered"][:B]}
+
+
+# ---------------------------------------------------------------------------
 # Flat (brute force) index — exact oracle + small-category fast path.
 # ---------------------------------------------------------------------------
 
-class FlatIndex:
+class FlatIndex(DeviceResidentIndex):
     """Exact cosine top-1 with threshold. O(n·d) per query batch.
 
     On TPU this is memory-bound at ~1.9 ms per 1M×384 fp32 scan (819 GB/s),
@@ -86,14 +243,21 @@ class FlatIndex:
     nearest.
     """
 
+    rebuild_threshold: float = 0.25     # delta-sync protocol (see HNSWParams)
+
     def __init__(self, dim: int, capacity: int):
         self.dim = dim
         self.capacity = capacity
         self.emb = np.zeros((capacity, dim), dtype=np.float32)
         self.valid = np.zeros((capacity,), dtype=bool)
         self.category = np.full((capacity,), -1, dtype=np.int32)
+        # Insertion timestamps (the cache's slot_inserted aliases this):
+        # a device table like emb/valid/category, so TTL classification
+        # runs inside the jitted search (Algorithm 1 line 18 on device).
+        self.inserted = np.zeros((capacity,), dtype=np.float32)
         self._n = 0
         self._free: list[int] = []
+        self._init_residency()
 
     def __len__(self) -> int:
         return int(self.valid.sum())
@@ -107,6 +271,8 @@ class FlatIndex:
         self.emb[slot] = vec
         self.valid[slot] = True
         self.category[slot] = category
+        self._dirty.add(int(slot))
+        self._version += 1
         return slot
 
     def add_batch(self, vecs: np.ndarray,
@@ -120,6 +286,8 @@ class FlatIndex:
             self.valid[slot] = False
             self.category[slot] = -1
             self._free.append(slot)
+            self._dirty.add(int(slot))
+            self._version += 1
 
     def search_host(self, queries: np.ndarray, thresholds: np.ndarray,
                     ef: int | None = None, *,
@@ -149,12 +317,71 @@ class FlatIndex:
         return (np.where(ok, idx, INVALID).astype(np.int32),
                 score.astype(np.float32))
 
+    # -- device path (ops.cache_topk over the resident tables) -----------------
+    def _row_nbytes(self) -> int:
+        """Bytes one synced delta row moves (emb + valid + cat + ts + id)."""
+        return self.emb.itemsize * self.dim + 1 + 4 + 4 + 4
+
+    def _host_tables(self) -> dict:
+        return {"emb": self.emb, "valid": self.valid,
+                "category": self.category, "inserted": self.inserted}
+
+    def _rebuild_threshold(self) -> float:
+        return self.rebuild_threshold
+
+    def search_batch(self, queries: np.ndarray, thresholds: np.ndarray, *,
+                     categories: np.ndarray | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+        """Batched device search via the ``flat_topk`` kernel
+        (``ops.cache_topk``). Returns DEVICE arrays — convert once at the
+        cache layer, not per index call."""
+        idx, score, _ = self.search_classified(queries, thresholds,
+                                               categories=categories)
+        return idx, score
+
+    def search_classified(self, queries: np.ndarray, thresholds: np.ndarray,
+                          *, categories: np.ndarray | None = None,
+                          ttls: np.ndarray | None = None, now: float = 0.0
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Search + on-device TTL classification in one compiled program.
+        Returns device (idx, score, cls) with cls ∈ {CLS_MISS,
+        CLS_EXPIRED, CLS_HIT}; batch sizes are bucketed to powers of two
+        so B = 1..max_batch share one compilation."""
+        t = self.device_tables()
+        B, Bp, qp, taup, qcp, tp = _pad_query_batch(
+            queries, thresholds, categories, ttls)
+        idx, score, cls = _flat_search_classified(
+            t["emb"], t["valid"], t["category"], t["inserted"],
+            jnp.asarray(qp), jnp.asarray(taup), jnp.asarray(qcp),
+            jnp.asarray(tp), jnp.float32(now))
+        self._record_search(B, Bp)
+        return idx[:B], score[:B], cls[:B]
+
 
 # ---------------------------------------------------------------------------
-# Device-side batched beam search (pure-jnp reference implementation).
+# Device-side batched beam search (jnp reference + fused-kernel dispatch).
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("beam", "max_hops"))
+def _classify(idx: jax.Array, score: jax.Array, inserted: jax.Array,
+              ttls: jax.Array, now: jax.Array) -> jax.Array:
+    """Algorithm 1 lines 12-21 on device: {miss, expired, hit} per query
+    from the synced ``inserted`` table and the per-query TTL vector."""
+    found = idx != INVALID
+    age = now - jnp.take(inserted, jnp.maximum(idx, 0))
+    expired = found & (age > ttls)
+    return jnp.where(expired, CLS_EXPIRED,
+                     jnp.where(found, CLS_HIT, CLS_MISS)).astype(jnp.int8)
+
+
+@jax.jit
+def _flat_search_classified(emb, valid, category, inserted, queries, taus,
+                            qcat, ttls, now):
+    score, idx = ops.cache_topk(emb, valid, queries, category, qcat)
+    ok = (score >= taus) & jnp.isfinite(score)
+    idx = jnp.where(ok, idx, INVALID).astype(jnp.int32)
+    return idx, score, _classify(idx, score, inserted, ttls, now)
+
+@partial(jax.jit, static_argnames=("beam", "max_hops", "hop_impl"))
 def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
                 neighbors: jax.Array,    # (cap, M0) int32, INVALID padded
                 valid: jax.Array,        # (cap,) bool
@@ -163,35 +390,80 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
                 thresholds: jax.Array,   # (B,) float32 per-query τ (category)
                 slot_category: jax.Array | None = None,   # (cap,) int32
                 query_category: jax.Array | None = None,  # (B,) int32, -1 = any
-                *, beam: int = 32, max_hops: int = 12):
+                *, beam: int = 32, max_hops: int = 12,
+                hop_impl: str = "reference"):
     """Batched fixed-width beam search with per-query threshold early exit.
 
-    Returns (best_idx (B,), best_score (B,), hops_used ()). best_idx is -1
-    where no valid node reached the query's threshold (a cache miss —
-    paper Algorithm 1 line 12-14: return immediately, no external access).
+    Returns (best_idx (B,), best_score (B,), stats) with stats =
+    ``{"hops": (), "rows_gathered": (B,)}``. best_idx is -1 where no valid
+    node reached the query's threshold (a cache miss — paper Algorithm 1
+    line 12-14: return immediately, no external access).
 
     Tombstoned (invalid) nodes still route traffic (DiskANN-style) but are
     excluded from results. Cross-category nodes get the same treatment
     (§5.3): when ``slot_category``/``query_category`` are given, a node only
     qualifies as a result for queries of its own category (query category
     < 0 = wildcard) — routing stays category-blind so dense regions still
-    carry traffic toward sparse ones.
+    carry traffic toward sparse ones. Both masks travel as ONE packed
+    per-slot ``meta`` word (category, or -2 for tombstones).
+
+    ``hop_impl`` selects the expansion data plane:
+
+    * ``"reference"`` — pure-jnp gathers (the portable CPU oracle);
+    * ``"fused"`` — ``ops.frontier_hop``: on compiled backends one Pallas
+      kernel per hop fetches the neighbor rows off the level-0 table from
+      the scalar-prefetched frontier ids, DMAs the candidate embeddings
+      and emits masked scores — no XLA-materialized (B, F·M, d) gather
+      ever exists. On CPU it falls back to the jnp reference.
+    * ``"fused_pallas"`` — force the kernel (interpret-mode on CPU; the
+      parity tests' path).
+
+    DONE-QUERY FREEZE: a query that reached its τ (or a routing fixpoint)
+    stops *issuing gathers* — the hop clamps its candidate ids to INVALID
+    — instead of merely not updating its best. ``rows_gathered`` counts
+    the per-query embedding rows actually fetched (init + hops), the
+    deterministic counter the lookup benchmark gates on.
     """
     B = queries.shape[0]
     E = entries.shape[0]
+    cap = emb.shape[0]
+    # Lane-align d once, outside the hop loop (the kernels require
+    # multiples of 128; a no-op for the native 384).
+    pad = (-queries.shape[1]) % 128
+    if pad:
+        emb = jnp.pad(emb, ((0, 0), (0, pad)))
+        queries = jnp.pad(queries, ((0, 0), (0, pad)))
+    qcat = (jnp.full((B,), -1, jnp.int32) if query_category is None
+            else query_category.astype(jnp.int32))
+    scat = (jnp.full((cap,), -1, jnp.int32) if slot_category is None
+            else slot_category.astype(jnp.int32))
+    meta = jnp.where(valid, scat, TOMBSTONE).astype(jnp.int32)
+    fused = hop_impl in ("fused", "fused_pallas")
+    kernel_impl = "pallas" if hop_impl == "fused_pallas" else None
 
     def score_nodes(idx):  # idx (B, K) -> cosine scores (B, K)
         vecs = jnp.take(emb, jnp.maximum(idx, 0), axis=0)          # (B,K,d)
         s = jnp.einsum("bkd,bd->bk", vecs, queries)
         return jnp.where(idx == INVALID, -jnp.inf, s)
 
-    def result_ok(idx):  # idx (B, K) -> bool: may this node be a result?
-        ok = jnp.take(valid, jnp.maximum(idx, 0)) & (idx != INVALID)
-        if slot_category is not None and query_category is not None:
-            cat = jnp.take(slot_category, jnp.maximum(idx, 0))
-            ok &= (query_category[:, None] < 0) | \
-                  (cat == query_category[:, None])
-        return ok
+    def res_mask(idx, scores):  # -inf at non-results (tombstone/category)
+        m = jnp.take(meta, jnp.maximum(idx, 0))
+        ok = (idx != INVALID) & (m != TOMBSTONE) & \
+            ((qcat[:, None] < 0) | (m == qcat[:, None]))
+        return jnp.where(ok, scores, -jnp.inf)
+
+    def expand(f_idx, done):
+        """One hop: (B, F) frontier -> (B, F·M) candidate (ids, routing
+        scores, result scores). Done queries emit INVALID / -inf lanes."""
+        if fused:
+            return ops.frontier_hop(emb, neighbors, meta, f_idx, queries,
+                                    qcat, done.astype(jnp.int32),
+                                    impl=kernel_impl)
+        nbr = jnp.take(neighbors, jnp.maximum(f_idx, 0), axis=0)
+        dead = (f_idx == INVALID)[:, :, None] | done[:, None, None]
+        cand = jnp.where(dead, INVALID, nbr).reshape(B, -1)
+        route = score_nodes(cand)
+        return cand, route, res_mask(cand, route)
 
     # Initial frontier: entry points (same for all queries), padded to beam.
     if E >= beam:
@@ -200,36 +472,42 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         f0 = jnp.concatenate([entries.astype(jnp.int32),
                               jnp.full((beam - E,), INVALID, jnp.int32)])
     f_idx = jnp.broadcast_to(f0[None, :], (B, beam))
-    f_score = score_nodes(f_idx)
+    f_score = (ops.hop_scores(emb, f_idx, queries) if fused
+               else score_nodes(f_idx))
+    f_res = res_mask(f_idx, f_score)
+    rows = jnp.sum(f_idx != INVALID, axis=1).astype(jnp.int32)
 
-    res_score = jnp.where(result_ok(f_idx), f_score, -jnp.inf)
-    best_score = jnp.max(res_score, axis=1)
-    best_idx = jnp.take_along_axis(f_idx, jnp.argmax(res_score, axis=1)[:, None], axis=1)[:, 0]
+    best_score = jnp.max(f_res, axis=1)
+    best_idx = jnp.take_along_axis(
+        f_idx, jnp.argmax(f_res, axis=1)[:, None], axis=1)[:, 0]
     best_idx = jnp.where(jnp.isfinite(best_score), best_idx, INVALID)
 
     def cond(state):
-        hop, _, _, best_s, _, done = state
+        hop, _f, _s, _r, _bs, _bi, done, _rows = state
         return (hop < max_hops) & ~jnp.all(done)
 
     def body(state):
-        hop, f_idx, f_score, best_s, best_i, done = state
-        # Expand: neighbors of the frontier. (B, F, M) -> (B, F*M)
-        nbr = jnp.take(neighbors, jnp.maximum(f_idx, 0), axis=0)
-        nbr = jnp.where(f_idx[:, :, None] == INVALID, INVALID, nbr)
-        cand = nbr.reshape(B, -1)
-        c_score = score_nodes(cand)
+        hop, f_idx, f_score, f_res, best_s, best_i, done, rows = state
+        # Expand: one fused hop. Done queries' lanes come back INVALID, so
+        # they issue no gather DMAs and cannot re-enter the merge.
+        cand, c_route, c_res = expand(f_idx, done)
+        rows = rows + jnp.sum(cand != INVALID, axis=1).astype(jnp.int32)
 
-        # Merge frontier ∪ candidates, keep top-beam by raw routing score.
+        # Merge frontier ∪ candidates, keep top-beam by raw routing score;
+        # the result-masked scores ride along through the same top-k
+        # positions (no per-hop validity/category gathers needed).
         all_idx = jnp.concatenate([f_idx, cand], axis=1)
-        all_score = jnp.concatenate([f_score, c_score], axis=1)
-        top_s, top_pos = jax.lax.top_k(all_score, beam)
+        all_route = jnp.concatenate([f_score, c_route], axis=1)
+        all_res = jnp.concatenate([f_res, c_res], axis=1)
+        top_s, top_pos = jax.lax.top_k(all_route, beam)
         top_i = jnp.take_along_axis(all_idx, top_pos, axis=1)
+        top_r = jnp.take_along_axis(all_res, top_pos, axis=1)
 
-        # Result tracking only over valid (non-tombstoned) same-category nodes.
-        res_s = jnp.where(result_ok(top_i), top_s, -jnp.inf)
-        hop_best_s = jnp.max(res_s, axis=1)
+        # Result tracking only over valid (non-tombstoned) same-category
+        # nodes — exactly the lanes top_r left finite.
+        hop_best_s = jnp.max(top_r, axis=1)
         hop_best_i = jnp.take_along_axis(
-            top_i, jnp.argmax(res_s, axis=1)[:, None], axis=1)[:, 0]
+            top_i, jnp.argmax(top_r, axis=1)[:, None], axis=1)[:, 0]
         improved = hop_best_s > best_s + 1e-9
         new_best_s = jnp.where(improved, hop_best_s, best_s)
         new_best_i = jnp.where(improved, hop_best_i, best_i)
@@ -239,21 +517,42 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         # previous frontier unchanged — no new candidates route anywhere).
         # Convergence is judged at the ROUTING level, not on the masked
         # best: under category masking the result may stall for hops while
-        # the beam is still traversing a cross-category region toward the
-        # query's category.
+        # the beam traverses a cross-category region.
         converged = jnp.all(top_i == f_idx, axis=1)
         frozen = done[:, None]
         top_i = jnp.where(frozen, f_idx, top_i)
         top_s = jnp.where(frozen, f_score, top_s)
+        top_r = jnp.where(frozen, f_res, top_r)
         new_done = done | (new_best_s >= thresholds) | converged
-        return hop + 1, top_i, top_s, new_best_s, new_best_i, new_done
+        return (hop + 1, top_i, top_s, top_r, new_best_s, new_best_i,
+                new_done, rows)
 
     done0 = best_score >= thresholds
-    state = (jnp.asarray(0), f_idx, f_score, best_score, best_idx, done0)
-    hops, _, _, best_score, best_idx, _ = jax.lax.while_loop(cond, body, state)
+    state = (jnp.asarray(0), f_idx, f_score, f_res, best_score, best_idx,
+             done0, rows)
+    hops, _, _, _, best_score, best_idx, _, rows = jax.lax.while_loop(
+        cond, body, state)
 
     hit = best_score >= thresholds
-    return jnp.where(hit, best_idx, INVALID), best_score, hops
+    return (jnp.where(hit, best_idx, INVALID), best_score,
+            {"hops": hops, "rows_gathered": rows})
+
+
+@partial(jax.jit, static_argnames=("beam", "max_hops", "hop_impl"))
+def beam_search_classified(emb, neighbors, valid, entries, inserted,
+                           queries, thresholds, ttls, now,
+                           slot_category=None, query_category=None, *,
+                           beam: int = 32, max_hops: int = 12,
+                           hop_impl: str = "reference"):
+    """Algorithm 1 lines 9-21 as ONE compiled program: masked beam search
+    plus on-device TTL classification against the synced ``inserted``
+    table. Returns (idx, score, cls, stats); the cache's Python loop then
+    touches only actual hits and expirations."""
+    idx, score, stats = beam_search(
+        emb, neighbors, valid, entries, queries, thresholds,
+        slot_category, query_category,
+        beam=beam, max_hops=max_hops, hop_impl=hop_impl)
+    return idx, score, _classify(idx, score, inserted, ttls, now), stats
 
 
 # ---------------------------------------------------------------------------
@@ -275,16 +574,20 @@ class HNSWParams:
     # Negative forces a full upload on every sync (the pre-delta behavior,
     # kept as the O(capacity) contrast for benchmarks).
     rebuild_threshold: float = 0.25
+    # Hop data plane: None = auto (the fused frontier-hop kernel on
+    # compiled backends, the jnp reference on CPU); "reference" | "fused"
+    # | "fused_pallas" force a path (see beam_search).
+    hop_impl: str | None = None
 
 
-class HNSWIndex:
+class HNSWIndex(DeviceResidentIndex):
     """Hierarchical build on host; batched beam search on device.
 
     Fixed ``capacity``; slots are recycled through a freelist on removal
     (cache eviction). The device tables are persistent: mutations log
-    their touched rows in ``_dirty`` and ``device_tables()`` flushes the
-    log with an in-place scatter (see module docstring — sync cost is
-    O(delta), not O(capacity)).
+    their touched rows in the ``DeviceResidentIndex`` dirty set and
+    ``device_tables()`` flushes the log with an in-place scatter (see
+    module docstring — sync cost is O(delta), not O(capacity)).
     """
 
     def __init__(self, dim: int, capacity: int, params: HNSWParams | None = None,
@@ -298,6 +601,10 @@ class HNSWIndex:
         self.emb = np.zeros((capacity, dim), dtype=np.float32)
         self.valid = np.zeros((capacity,), dtype=bool)
         self.category = np.full((capacity,), -1, dtype=np.int32)
+        # Insertion timestamps (the cache's slot_inserted aliases this) —
+        # a device table like the others, riding the same dirty-row delta
+        # sync, so TTL classification happens inside the jitted search.
+        self.inserted = np.zeros((capacity,), dtype=np.float32)
         self.level = np.full((capacity,), -1, dtype=np.int8)
         # neighbors[0] is the device-visible level-0 graph.
         self.neighbors: list[np.ndarray] = [
@@ -307,17 +614,9 @@ class HNSWIndex:
         self.max_level: int = -1
         self._n = 0
         self._free: list[int] = []
-        self._version = 0
-        self._device_version = -1
-        self._device: dict | None = None
-        # Delta log: level-0 rows whose emb/neighbors/valid/category changed
-        # since the last device sync. A set — rows touched repeatedly within
-        # one serve step coalesce to one scattered row.
-        self._dirty: set[int] = set()
         self._entries_cache: np.ndarray | None = None
         self._entries_version = -1
-        self.sync_stats = {"full_uploads": 0, "delta_updates": 0,
-                           "rows_synced": 0, "bytes_synced": 0}
+        self._init_residency()
 
     # -- basic bookkeeping ---------------------------------------------------
     def __len__(self) -> int:
@@ -552,90 +851,83 @@ class HNSWIndex:
         return ents
 
     def _row_nbytes(self) -> int:
-        """Bytes one synced delta row moves (emb + nbrs + valid + cat + id)."""
+        """Bytes one synced delta row moves (emb + nbrs + valid + cat +
+        inserted-timestamp + id)."""
         return (self.emb.itemsize * self.dim
                 + self.neighbors[0].itemsize * self.p.M0
-                + self.valid.itemsize + self.category.itemsize + 4)
+                + self.valid.itemsize + self.category.itemsize
+                + self.inserted.itemsize + 4)
 
-    def device_tables(self) -> dict:
-        """The persistent device mirror, synced to the host state.
+    def _host_tables(self) -> dict:
+        return {"emb": self.emb, "neighbors": self.neighbors[0],
+                "valid": self.valid, "category": self.category,
+                "inserted": self.inserted}
 
-        Protocol: no mutation since last sync → returned as-is. Otherwise
-        the dirty-row log is applied with one donated in-place scatter
-        (O(delta) bytes); a full O(capacity) upload happens only on first
-        use or when the dirty fraction exceeds ``rebuild_threshold``. The
-        entry set (E ints) rides along on every sync. Returned buffers are
-        donated to the NEXT flush — re-fetch after any mutation, never
-        cache them caller-side.
-        """
-        if self._device is not None and self._device_version == self._version:
-            return self._device
-        if self._device is None or len(self._dirty) > \
-                self.p.rebuild_threshold * self.capacity:
-            self._device = {
-                "emb": jnp.asarray(self.emb),
-                "neighbors": jnp.asarray(self.neighbors[0]),
-                "valid": jnp.asarray(self.valid),
-                "category": jnp.asarray(self.category),
-            }
-            self.sync_stats["full_uploads"] += 1
-            self.sync_stats["rows_synced"] += self.capacity
-            self.sync_stats["bytes_synced"] += \
-                self.capacity * self._row_nbytes()
-        elif self._dirty:
-            rows = np.fromiter(self._dirty, np.int64, len(self._dirty))
-            rows.sort()
-            # Bucket the row count (next power of two) so the jit cache
-            # holds O(log capacity) entries; padding repeats row 0 of the
-            # delta with identical payload — a deterministic no-op.
-            bucket = max(8, 1 << (len(rows) - 1).bit_length())
-            rows = np.concatenate(
-                [rows, np.full(bucket - len(rows), rows[0])]).astype(np.int32)
-            d = self._device
-            rows_j = jnp.asarray(rows)
-            self._device = {
-                "emb": ops.scatter_rows(
-                    d["emb"], rows_j, jnp.asarray(self.emb[rows])),
-                "neighbors": ops.scatter_rows(
-                    d["neighbors"], rows_j,
-                    jnp.asarray(self.neighbors[0][rows])),
-                "valid": ops.scatter_rows(
-                    d["valid"], rows_j, jnp.asarray(self.valid[rows])),
-                "category": ops.scatter_rows(
-                    d["category"], rows_j, jnp.asarray(self.category[rows])),
-            }
-            self.sync_stats["delta_updates"] += 1
-            self.sync_stats["rows_synced"] += len(rows)
-            self.sync_stats["bytes_synced"] += len(rows) * self._row_nbytes()
+    def _rebuild_threshold(self) -> float:
+        return self.p.rebuild_threshold
+
+    def _finish_sync(self, device: dict) -> None:
+        # The tiny entry set (E ints) rides along on every sync.
         entries = self.entry_set()
-        self._device["entries"] = jnp.asarray(entries)
+        device["entries"] = jnp.asarray(entries)
         self.sync_stats["bytes_synced"] += entries.nbytes
-        self._dirty.clear()
-        self._device_version = self._version
-        return self._device
+
+    def _resolve_hop_impl(self) -> str:
+        impl = self.p.hop_impl
+        if impl is None:
+            impl = "reference" if jax.default_backend() == "cpu" else "fused"
+        return impl
 
     def search_batch(self, queries: np.ndarray, thresholds: np.ndarray, *,
                      categories: np.ndarray | None = None
-                     ) -> tuple[np.ndarray, np.ndarray]:
-        """Batched device beam search (jnp reference path).
+                     ) -> tuple[jax.Array, jax.Array]:
+        """Batched device beam search over the resident tables.
 
         ``categories`` (B,) int32 per-query category mask (< 0 = wildcard);
-        None searches category-blind.
+        None searches category-blind. The batch dimension is bucketed to
+        the next power of two so engine queue drains (B = 1..max_batch)
+        share one compiled program, and the returned (idx, score) are
+        DEVICE arrays — callers that branch on them convert ONCE at their
+        layer instead of this method forcing a blocking host sync on both
+        outputs. Per-search hops/rows-gathered stats (device scalars, no
+        sync) land in ``self.last_search``.
         """
         t = self.device_tables()
-        q = jnp.asarray(np.atleast_2d(queries).astype(np.float32))
-        B = q.shape[0]
-        tau = jnp.asarray(np.broadcast_to(
-            np.asarray(thresholds, np.float32), (B,)))
-        if categories is None:
-            qcat = np.full((B,), -1, np.int32)
-        else:
-            qcat = np.broadcast_to(np.asarray(categories, np.int32), (B,))
-        idx, score, _ = beam_search(t["emb"], t["neighbors"], t["valid"],
-                                    t["entries"], q, tau,
-                                    t["category"], jnp.asarray(qcat),
-                                    beam=self.p.beam, max_hops=self.p.max_hops)
-        return np.asarray(idx), np.asarray(score)
+        B, Bp, qp, taup, qcp, _ = _pad_query_batch(
+            queries, thresholds, categories, None)
+        impl = self._resolve_hop_impl()
+        idx, score, stats = beam_search(
+            t["emb"], t["neighbors"], t["valid"], t["entries"],
+            jnp.asarray(qp), jnp.asarray(taup), t["category"],
+            jnp.asarray(qcp), beam=self.p.beam, max_hops=self.p.max_hops,
+            hop_impl=impl)
+        self._record_search(B, Bp,
+                            ("beam", self.p.beam, self.p.max_hops, impl),
+                            stats)
+        return idx[:B], score[:B]
+
+    def search_classified(self, queries: np.ndarray, thresholds: np.ndarray,
+                          *, categories: np.ndarray | None = None,
+                          ttls: np.ndarray | None = None, now: float = 0.0
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Beam search + on-device TTL classification in one compiled
+        program (Algorithm 1 lines 9-21): returns device (idx, score, cls)
+        with cls ∈ {CLS_MISS, CLS_EXPIRED, CLS_HIT}, judged against the
+        synced ``inserted`` table, per-query ``ttls`` and ``now``."""
+        t = self.device_tables()
+        B, Bp, qp, taup, qcp, tp = _pad_query_batch(
+            queries, thresholds, categories, ttls)
+        impl = self._resolve_hop_impl()
+        idx, score, cls, stats = beam_search_classified(
+            t["emb"], t["neighbors"], t["valid"], t["entries"],
+            t["inserted"], jnp.asarray(qp), jnp.asarray(taup),
+            jnp.asarray(tp), jnp.float32(now), t["category"],
+            jnp.asarray(qcp), beam=self.p.beam, max_hops=self.p.max_hops,
+            hop_impl=impl)
+        self._record_search(B, Bp,
+                            ("classified", self.p.beam, self.p.max_hops,
+                             impl), stats)
+        return idx[:B], score[:B], cls[:B]
 
     # -- bulk build (benchmarks) -------------------------------------------------
     @classmethod

@@ -7,7 +7,11 @@ tiling, a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``:
     flat_topk        — tiled cosine top-1 + threshold over the cache table,
                        category-masked in-kernel (the hybrid cache's 2 ms
                        local search, §5.2/§5.3)
-    gather_scores    — scalar-prefetch gather + dot: one HNSW frontier hop;
+    frontier_hop     — FUSED beam expansion: scalar-prefetched frontier ids
+                       → in-kernel neighbor-row fetch → per-candidate
+                       embedding DMAs → masked scores; done queries issue
+                       no DMAs (the lookup hot loop, §5.3)
+    gather_scores    — scalar-prefetch gather + dot (entry-set scoring);
                        ``gather_scores_masked`` fuses the per-query category
                        mask into the same gather (§5.3)
     flash_attention  — tiled prefill attention (causal / sliding-window /

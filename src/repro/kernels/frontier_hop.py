@@ -1,0 +1,162 @@
+"""Fused frontier-hop kernel — one full HNSW beam expansion (§5.3).
+
+``gather_scores`` scores candidate ids the *caller* already materialized,
+which forces the beam-search loop to expand ``neighbors[frontier]`` with an
+XLA gather first — the candidate ids round-trip through an HBM-resident
+(B, F, M) buffer and the embedding rows through a materialized
+(B, F·M, d) gather every hop. This kernel fuses the whole hop:
+
+    grid (B, F) — one step per frontier lane. The frontier ids are
+    scalar-prefetched, so each step's *neighbor row* arrives via block
+    index maps (SMEM copy for DMA addressing + VMEM copy for vector ops)
+    before the body runs. The body then issues one async DMA per live
+    candidate, pulling its embedding row and its packed validity/category
+    word straight from the HBM tables into VMEM scratch, and emits the
+    candidate ids, routing scores and result-masked scores for the merge.
+
+Candidate ids therefore never leave the chip: HBM traffic per hop is the
+candidate rows actually gathered (counted by the caller as
+``rows_gathered``), not O(B·F·M·d) materialization.
+
+Masking contract (shared with ``ref.frontier_hop_ref``):
+
+* a lane is DEAD when its frontier id is INVALID, the neighbor slot is
+  INVALID padding, or the query is done (early-exit freeze). Dead lanes
+  issue **no DMAs** and emit id = INVALID, scores = -inf — a finished
+  query stops costing HBM bandwidth, it doesn't just stop updating bests;
+* routing scores mask only dead lanes (tombstones and cross-category
+  nodes still route, DiskANN-style);
+* result scores additionally mask by the packed ``meta`` word:
+  ``meta[i] = category[i]`` for live slots, ``TOMBSTONE`` (-2) for
+  removed ones. A candidate qualifies when ``meta != TOMBSTONE`` and the
+  query category matches (< 0 = wildcard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INVALID = -1
+TOMBSTONE = -2          # packed meta word for removed (invalid) slots
+
+
+def _frontier_hop_kernel(frontier_ref,   # scalar-prefetch (B, F) int32
+                         done_ref,       # scalar-prefetch (B,) int32
+                         qcat_ref,       # scalar-prefetch (B,) int32
+                         nbr_smem,       # (1, M) int32 — candidate ids (addresses)
+                         nbr_vmem,       # (1, M) int32 — candidate ids (vector)
+                         emb_any,        # (N, d) f32, HBM-resident
+                         meta_any,       # (N, 1) int32, HBM-resident
+                         q_ref,          # (1, d) f32 query row
+                         ids_out, route_out, res_out,      # (1, M) blocks
+                         rows_v,         # VMEM (M, d) f32 scratch
+                         meta_v,         # VMEM (M, 1) int32 scratch
+                         sem_rows, sem_meta):              # DMA sems (M,)
+    b = pl.program_id(0)
+    f = pl.program_id(1)
+    M = nbr_vmem.shape[1]
+    live = (frontier_ref[b, f] >= 0) & (done_ref[b] == 0)
+
+    def _copies(m, cid):
+        return (pltpu.make_async_copy(emb_any.at[pl.ds(cid, 1), :],
+                                      rows_v.at[pl.ds(m, 1), :],
+                                      sem_rows.at[m]),
+                pltpu.make_async_copy(meta_any.at[pl.ds(cid, 1), :],
+                                      meta_v.at[pl.ds(m, 1), :],
+                                      sem_meta.at[m]))
+
+    # Issue every live lane's DMAs back to back, then wait — the copies
+    # overlap each other, so the step pays max(row latencies), not the sum.
+    for m in range(M):
+        cid = nbr_smem[0, m]
+
+        @pl.when(live & (cid >= 0))
+        def _issue(m=m, cid=cid):
+            row, meta = _copies(m, cid)
+            row.start()
+            meta.start()
+    for m in range(M):
+        cid = nbr_smem[0, m]
+
+        @pl.when(live & (cid >= 0))
+        def _wait(m=m, cid=cid):
+            row, meta = _copies(m, cid)
+            row.wait()
+            meta.wait()
+
+    ids = nbr_vmem[0, :]                                   # (M,) int32
+    lane = live & (ids >= 0)
+    dots = jnp.sum(rows_v[...].astype(jnp.float32)
+                   * q_ref[...].astype(jnp.float32), axis=1)   # (M,)
+    qc = qcat_ref[b]
+    meta = meta_v[:, 0]
+    ok = lane & (meta != TOMBSTONE) & ((qc < 0) | (meta == qc))
+    ids_out[0, :] = jnp.where(lane, ids, INVALID)
+    route_out[0, :] = jnp.where(lane, dots, -jnp.inf)
+    res_out[0, :] = jnp.where(ok, dots, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
+                 neighbors: jax.Array,  # (N, M) int32, INVALID padded
+                 meta: jax.Array,       # (N,) int32 packed valid/category
+                 frontier: jax.Array,   # (B, F) int32, INVALID padded
+                 queries: jax.Array,    # (B, d) f32
+                 query_categories: jax.Array,   # (B,) int32, -1 = wildcard
+                 done: jax.Array,       # (B,) int32/bool, 1 = frozen query
+                 *, interpret: bool = False
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused beam expansion. Returns (ids, route, res), each (B, F·M):
+    candidate ids (INVALID at dead lanes), routing scores (-inf at dead
+    lanes only) and result scores (-inf additionally at tombstoned and
+    cross-category candidates)."""
+    N, d = emb.shape
+    M = neighbors.shape[1]
+    B, F = frontier.shape
+
+    nbr_row = lambda b, f, fr, dn, qc: (jnp.maximum(fr[b, f], 0), 0)
+    out_blk = lambda b, f, fr, dn, qc: (b, f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, F),
+        in_specs=[
+            # The frontier lane's neighbor row, twice: an SMEM copy whose
+            # elements can address the manual HBM DMAs, and a VMEM copy
+            # for the vectorized id/mask math.
+            pl.BlockSpec((1, M), nbr_row, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, M), nbr_row),
+            pl.BlockSpec(memory_space=pltpu.ANY),       # emb (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),       # meta (HBM)
+            pl.BlockSpec((1, d), lambda b, f, fr, dn, qc: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, M), out_blk),
+            pl.BlockSpec((1, M), out_blk),
+            pl.BlockSpec((1, M), out_blk),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((M, d), jnp.float32),
+            pltpu.VMEM((M, 1), jnp.int32),
+            pltpu.SemaphoreType.DMA((M,)),
+            pltpu.SemaphoreType.DMA((M,)),
+        ],
+    )
+    ids, route, res = pl.pallas_call(
+        _frontier_hop_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, F * M), jnp.int32),
+            jax.ShapeDtypeStruct((B, F * M), jnp.float32),
+            jax.ShapeDtypeStruct((B, F * M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(frontier.astype(jnp.int32), done.astype(jnp.int32),
+      query_categories.astype(jnp.int32), neighbors.astype(jnp.int32),
+      neighbors.astype(jnp.int32), emb,
+      meta.astype(jnp.int32).reshape(N, 1), queries)
+    return ids, route, res

@@ -20,8 +20,10 @@ import numpy as np
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flat_topk as _ft
+from repro.kernels import frontier_hop as _fh
 from repro.kernels import gather_scores as _gs
 from repro.kernels import mamba_scan as _ms
+from repro.kernels import ref as _ref
 from repro.kernels import scatter_update as _su
 
 
@@ -102,6 +104,36 @@ def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
                                         slot_categories, query_categories,
                                         interpret=interpret)
     return _gs.gather_scores(table, indices, queries, interpret=interpret)
+
+
+def frontier_hop(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
+                 frontier: jax.Array, queries: jax.Array,
+                 query_categories: jax.Array, done: jax.Array,
+                 *, impl: str | None = None, interpret: bool | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused HNSW beam expansion: neighbor fetch + embedding gather +
+    dot + result mask, driven by the scalar-prefetched frontier ids.
+
+    Returns (candidate ids, routing scores, result scores), each (B, F·M).
+    Dead lanes — INVALID frontier/neighbor padding, or a *done* query (the
+    early-exit freeze) — emit INVALID / -inf and, on the kernel path,
+    issue no gather DMAs at all. ``meta`` is the packed per-slot word
+    ``category if valid else -2`` (see kernels/frontier_hop.py).
+
+    Dispatch (same pattern as ``scatter_rows``): the Pallas kernel on
+    compiled backends, the vectorized jnp reference on CPU/interpret —
+    ``impl`` ("pallas" | "ref") forces a path for parity tests.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    if impl is None:
+        impl = "ref" if interpret else "pallas"
+    emb, _ = _pad_to(emb, 1, 128)
+    queries, _ = _pad_to(queries, 1, 128)
+    if impl == "pallas":
+        return _fh.frontier_hop(emb, neighbors, meta, frontier, queries,
+                                query_categories, done, interpret=interpret)
+    return _ref.frontier_hop_ref(emb, neighbors, meta, frontier, queries,
+                                 query_categories, done)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

@@ -65,6 +65,32 @@ def gather_scores_masked_ref(table: jax.Array, indices: jax.Array,
     return jnp.where(ok, s, -jnp.inf)
 
 
+def frontier_hop_ref(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
+                     frontier: jax.Array, queries: jax.Array,
+                     query_categories: jax.Array, done: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused beam expansion (oracle for ``frontier_hop``).
+
+    Expands ``neighbors[frontier]`` to (B, F·M) candidate ids, scores them
+    against the queries, and emits (ids, route, res): dead lanes (INVALID
+    frontier/neighbor padding, or a done query — the early-exit freeze)
+    get id = INVALID and -inf everywhere; result scores additionally mask
+    candidates whose packed ``meta`` word (category, or -2 = tombstone)
+    does not match the query category (< 0 = wildcard).
+    """
+    B, F = frontier.shape
+    nbr = jnp.take(neighbors, jnp.maximum(frontier, 0), axis=0)  # (B,F,M)
+    alive = (frontier >= 0)[:, :, None] & \
+        (done.astype(jnp.int32) == 0)[:, None, None]
+    ids = jnp.where(alive & (nbr >= 0), nbr, -1).reshape(B, -1)
+    route = gather_scores_ref(emb, ids, queries)
+    m = jnp.take(meta, jnp.maximum(ids, 0), axis=0)              # (B, F·M)
+    ok = (ids >= 0) & (m != -2) & \
+        ((query_categories[:, None] < 0) | (m == query_categories[:, None]))
+    res = jnp.where(ok, route, -jnp.inf)
+    return ids, route, res
+
+
 def scatter_rows_ref(table: jax.Array, rows: jax.Array, vals: jax.Array
                      ) -> jax.Array:
     """Row scatter: out[rows[r]] = vals[r], all other rows unchanged.

@@ -86,16 +86,14 @@ def main():
     ap.add_argument("--index", choices=["flat", "hnsw"], default="flat",
                     help="cache index; hnsw enables the graph index")
     ap.add_argument("--use-device", action="store_true",
-                    help="route lookups through the jitted beam search "
-                         "over the device-resident (delta-synced) index")
+                    help="route lookups through the device-resident "
+                         "(delta-synced) index: the jitted beam search "
+                         "for hnsw, the flat_topk kernel for flat")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.use_device and args.index != "hnsw":
-        print("[serve] --use-device implies --index hnsw")
-        args.index = "hnsw"
     run_serving(cfg, n_requests=args.requests, cache_kind=args.cache,
                 max_batch=args.max_batch, index_kind=args.index,
                 use_device=args.use_device)

@@ -65,6 +65,11 @@ class EngineStats:
     # category-masked index there is no "category_mismatch" miss anymore;
     # cross-category traffic shows up as genuine "no_match"/"model".
     reasons: dict = field(default_factory=dict)
+    # device-search data-plane counters (from cache.last_lookup_stats):
+    # beam hops run and embedding rows gathered across all lookups — the
+    # deterministic cost signal the lookup benchmark gates on.
+    search_hops: int = 0
+    rows_gathered: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -139,6 +144,10 @@ class ServingEngine:
 
         embs = self.embedder.embed_batch([r.text for r in batch])
         results = self.cache.lookup_batch(embs, [r.category for r in batch])
+        ls = self.cache.last_lookup_stats
+        if ls:
+            self.stats.search_hops += ls.get("hops", 0)
+            self.stats.rows_gathered += ls.get("rows_gathered", 0)
 
         responses: list[Response] = []
         misses: list[int] = []

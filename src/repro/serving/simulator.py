@@ -42,7 +42,8 @@ class SimConfig:
     architecture: str = "hybrid"        # hybrid | vdb | none
     cache_capacity: int = 20000
     index_kind: str = "hnsw"            # hybrid only: hnsw | flat
-    use_device: bool = False            # hybrid+hnsw: jitted beam search
+    use_device: bool = False            # hybrid: device-resident search
+                                        # (beam search / flat_topk kernel)
     search_ms: float = 2.0
     fetch_ms: float = 5.0
     insert_ms: float = 1.0

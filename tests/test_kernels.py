@@ -12,6 +12,7 @@ from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flat_topk import flat_topk
+from repro.kernels.frontier_hop import TOMBSTONE, frontier_hop
 from repro.kernels.gather_scores import gather_scores, gather_scores_masked
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.scatter_update import scatter_rows
@@ -165,6 +166,67 @@ def test_hop_scores_dispatches_masked(rng):
                                         jnp.asarray(qc))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ frontier_hop
+def _hop_inputs(rng, N, d, B, F, M):
+    emb = rng.standard_normal((N, d)).astype(np.float32)
+    nbrs = rng.integers(-1, N, size=(N, M)).astype(np.int32)
+    valid = rng.random(N) > 0.3
+    cats = rng.integers(0, 3, N).astype(np.int32)
+    meta = np.where(valid, cats, TOMBSTONE).astype(np.int32)
+    frontier = rng.integers(-1, N, size=(B, F)).astype(np.int32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    qc = rng.integers(-1, 3, B).astype(np.int32)       # includes wildcards
+    done = (rng.random(B) > 0.6).astype(np.int32)
+    return emb, nbrs, meta, frontier, q, qc, done
+
+
+@pytest.mark.parametrize("N,d,B,F,M", [(64, 128, 3, 4, 8),
+                                       (128, 256, 2, 3, 16)])
+def test_frontier_hop_matches_ref(rng, N, d, B, F, M):
+    """The fused hop (in-kernel neighbor fetch + embedding DMA + masked
+    dot) must agree with the jnp oracle on ids, routing scores and
+    result-masked scores, across tombstones, wildcard queries and done
+    (frozen) queries."""
+    args = tuple(map(jnp.asarray, _hop_inputs(rng, N, d, B, F, M)))
+    ids, route, res = frontier_hop(*args, interpret=True)
+    ri, rr, rs = ref.frontier_hop_ref(*args)
+    assert np.array_equal(np.asarray(ids), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(route), np.asarray(rr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(rs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_frontier_hop_done_query_is_fully_dead(rng):
+    """The freeze contract: a done query's lanes emit INVALID ids and -inf
+    scores for EVERY candidate — those lanes issue no gather DMAs, so the
+    rows-gathered counter (which counts id != INVALID) sees zero."""
+    emb, nbrs, meta, frontier, q, qc, _ = _hop_inputs(rng, 64, 128, 4, 4, 8)
+    frontier = np.abs(frontier)                       # all lanes routable
+    done = np.array([1, 0, 1, 0], np.int32)
+    ids, route, res = frontier_hop(*map(jnp.asarray, (
+        emb, nbrs, meta, frontier, q, qc, done)), interpret=True)
+    ids, route, res = map(np.asarray, (ids, route, res))
+    for b in range(4):
+        if done[b]:
+            assert (ids[b] == -1).all()
+            assert np.isneginf(route[b]).all() and np.isneginf(res[b]).all()
+        else:
+            assert (ids[b] >= 0).any()
+
+
+def test_ops_frontier_hop_dispatch_agrees(rng):
+    """ops.frontier_hop: the kernel path and the jnp reference path must
+    be interchangeable (same dispatch contract as scatter_rows)."""
+    args = tuple(map(jnp.asarray, _hop_inputs(rng, 64, 128, 3, 4, 8)))
+    out_k = ops.frontier_hop(*args, impl="pallas", interpret=True)
+    out_r = ops.frontier_hop(*args, impl="ref")
+    assert np.array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]))
+    for a, b in zip(out_k[1:], out_r[1:]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------- scatter_update

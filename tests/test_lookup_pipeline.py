@@ -1,0 +1,289 @@
+"""Lookup data plane: fused-hop/reference parity, bucketed batch shapes,
+done-query freeze, and on-device TTL classification (ISSUE 3).
+
+Property-style parity: the jnp ``beam_search`` reference and the fused
+frontier-hop path (jnp fallback AND the actual Pallas kernel in interpret
+mode) must agree on idx, score, hit class and the deterministic counters
+over random graphs with tombstones, wildcard queries and mixed categories.
+"""
+
+import re
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SemanticCache, SimClock
+from repro.core.hnsw import (CLS_EXPIRED, CLS_HIT, CLS_MISS, HNSWIndex,
+                             HNSWParams, INVALID, _bucket_batch, beam_search,
+                             beam_search_classified)
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+IMPLS = ("reference", "fused", "fused_pallas")
+
+
+def _unit(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _small_params():
+    # tiny beam/M0 keep the interpret-mode kernel cheap on CPU
+    return HNSWParams(M=4, M0=8, ef_construction=16, ef_search=16,
+                      beam=8, max_hops=5, n_entries=4)
+
+
+def _random_graph(seed, n=70, d=128, removed=12):
+    rng = np.random.default_rng(seed)
+    idx = HNSWIndex(d, 96, params=_small_params(), seed=seed)
+    vecs = _unit(rng, n, d)
+    cats = (np.arange(n) % 2).astype(np.int32)
+    idx.add_batch(vecs, cats)
+    for s in rng.choice(n, removed, replace=False):
+        idx.remove(int(s))                         # tombstones still route
+    return idx, vecs, cats, rng
+
+
+def _mixed_queries(rng, vecs, d, B=8):
+    """Exact revisits, paraphrases and cold randoms; wildcard + both
+    categories; thresholds from trivially-met to unreachable (so some
+    queries freeze at hop 0 while others run to convergence)."""
+    picks = rng.integers(0, len(vecs), B)
+    q = vecs[picks].copy()
+    q[B // 2:] = _unit(rng, B - B // 2, d)         # cold random tail
+    qc = rng.integers(-1, 2, B).astype(np.int32)
+    taus = np.where(np.arange(B) % 3 == 0, 0.2, 0.92).astype(np.float32)
+    taus[-1] = 2.0                                 # unreachable: never done
+    return q, taus, qc
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_beam_search_impl_parity(seed):
+    """idx, score AND the deterministic counters (hops, rows gathered)
+    agree across all three hop implementations."""
+    idx, vecs, cats, rng = _random_graph(seed)
+    t = idx.device_tables()
+    q, taus, qc = _mixed_queries(rng, vecs, 128)
+    outs = {}
+    for impl in IMPLS:
+        i, s, st = beam_search(t["emb"], t["neighbors"], t["valid"],
+                               t["entries"], jnp.asarray(q),
+                               jnp.asarray(taus), t["category"],
+                               jnp.asarray(qc), beam=idx.p.beam,
+                               max_hops=idx.p.max_hops, hop_impl=impl)
+        outs[impl] = (np.asarray(i), np.asarray(s), int(st["hops"]),
+                      np.asarray(st["rows_gathered"]))
+    ref = outs["reference"]
+    for impl in IMPLS[1:]:
+        got = outs[impl]
+        assert np.array_equal(got[0], ref[0]), impl
+        np.testing.assert_allclose(got[1], ref[1], rtol=1e-4, atol=1e-4,
+                                   err_msg=impl)
+        assert got[2] == ref[2], f"{impl}: hop count diverged"
+        assert np.array_equal(got[3], ref[3]), \
+            f"{impl}: rows-gathered counter diverged"
+    # masked-search invariants hold on every path
+    i0 = ref[0]
+    found = i0 != INVALID
+    assert found.any()
+    own = qc >= 0
+    assert (idx.category[i0[found & own]] == qc[found & own]).all()
+    assert idx.valid[i0[found]].all()
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_classified_search_impl_parity(seed):
+    """{hit, expired, miss} classes agree across implementations and match
+    the host oracle computed from (idx, score)."""
+    idx, vecs, cats, rng = _random_graph(seed)
+    # give slots spread-out insertion times so some matches are expired
+    idx.inserted[:] = rng.uniform(0.0, 100.0, idx.capacity).astype(np.float32)
+    idx._dirty.update(range(idx.capacity))
+    idx._version += 1
+    t = idx.device_tables()
+    q, taus, qc = _mixed_queries(rng, vecs, 128)
+    ttls = np.full(8, 60.0, np.float32)
+    now = np.float32(130.0)
+    outs = {}
+    for impl in IMPLS:
+        i, s, c, _st = beam_search_classified(
+            t["emb"], t["neighbors"], t["valid"], t["entries"],
+            t["inserted"], jnp.asarray(q), jnp.asarray(taus),
+            jnp.asarray(ttls), now, t["category"], jnp.asarray(qc),
+            beam=idx.p.beam, max_hops=idx.p.max_hops, hop_impl=impl)
+        outs[impl] = (np.asarray(i), np.asarray(s), np.asarray(c))
+    ref = outs["reference"]
+    for impl in IMPLS[1:]:
+        assert np.array_equal(outs[impl][0], ref[0]), impl
+        assert np.array_equal(outs[impl][2], ref[2]), \
+            f"{impl}: hit class diverged"
+    i0, _s0, c0 = ref
+    found = i0 != INVALID
+    want = np.where(found & (now - idx.inserted[np.maximum(i0, 0)] > ttls),
+                    CLS_EXPIRED, np.where(found, CLS_HIT, CLS_MISS))
+    assert np.array_equal(c0, want)
+    assert set(np.unique(c0)) <= {CLS_MISS, CLS_EXPIRED, CLS_HIT}
+
+
+def test_bucket_batch_shapes():
+    assert _bucket_batch(1) == _bucket_batch(8) == 8
+    assert _bucket_batch(9) == _bucket_batch(16) == 16
+    assert _bucket_batch(17) == 32
+
+
+def test_one_compilation_serves_all_serve_batch_sizes():
+    """Acceptance: engine queue drains produce B = 1..max_batch; bucketing
+    must make them all hit ONE compiled program."""
+    rng = np.random.default_rng(7)
+    idx, vecs, _cats, _ = _random_graph(7)
+    cache_size = getattr(beam_search_classified, "_cache_size", None)
+    before = cache_size() if cache_size else None
+    for B in range(1, 9):
+        q = vecs[rng.integers(0, len(vecs), B)]
+        i, s, c = idx.search_classified(q, np.full(B, 0.9, np.float32),
+                                        categories=np.zeros(B, np.int32))
+        assert i.shape == (B,) and s.shape == (B,) and c.shape == (B,)
+    assert idx.search_stats["searches"] == 8
+    assert idx.search_stats["compilations"] == 1, \
+        "batch bucketing regressed: distinct padded shapes per serve size"
+    if before is not None:
+        assert cache_size() - before <= 1, \
+            "jit cache grew more than one entry across B = 1..max_batch"
+
+
+def test_flat_index_device_path_matches_host():
+    """use_device on a flat index routes through ops.cache_topk and must
+    agree with the host scan, including bucketed odd batch sizes."""
+    rng = np.random.default_rng(11)
+    eng = PolicyEngine([
+        CategoryConfig("a", threshold=0.90, ttl=3600.0, quota=0.6),
+        CategoryConfig("b", threshold=0.90, ttl=3600.0, quota=0.6),
+    ])
+    host = SemanticCache(eng, dim=128, capacity=256, clock=SimClock(),
+                         index_kind="flat", use_device=False)
+    dev = SemanticCache(eng, dim=128, capacity=256, clock=SimClock(),
+                        index_kind="flat", use_device=True)
+    vecs = _unit(rng, 40, 128)
+    cats = ["a" if i % 2 else "b" for i in range(40)]
+    for c in (host, dev):
+        c.insert_batch(vecs, cats, [f"q{i}" for i in range(40)],
+                       [f"r{i}" for i in range(40)])
+    for B in (1, 3, 8):
+        picks = rng.integers(0, 40, B)
+        rh = host.lookup_batch(vecs[picks], [cats[i] for i in picks])
+        rd = dev.lookup_batch(vecs[picks], [cats[i] for i in picks])
+        for a, b in zip(rh, rd):
+            assert a.hit == b.hit and a.response == b.response
+            assert a.reason == b.reason
+    assert dev.index.search_stats["compilations"] == 1
+    assert dev.index.sync_stats["full_uploads"] >= 1
+
+
+@pytest.mark.parametrize("index_kind", ["hnsw", "flat"])
+def test_device_ttl_classification_evicts_expired(index_kind):
+    """Algorithm 1 lines 18-21 on device: an expired match classifies as
+    CLS_EXPIRED inside the jitted search, and the cache evicts it without
+    touching the store."""
+    rng = np.random.default_rng(13)
+    eng = PolicyEngine([
+        CategoryConfig("short", threshold=0.90, ttl=600.0, quota=1.0),
+    ])
+    clock = SimClock()
+    cache = SemanticCache(eng, dim=128, capacity=256, clock=clock,
+                          index_kind=index_kind, use_device=True)
+    vecs = _unit(rng, 20, 128)
+    cache.insert_batch(vecs, ["short"] * 20,
+                       [f"q{i}" for i in range(20)],
+                       [f"r{i}" for i in range(20)])
+    res = cache.lookup_batch(vecs[:4], ["short"] * 4)
+    assert all(r.hit and r.reason == "hit" for r in res)
+    clock.advance(601.0)
+    res = cache.lookup_batch(vecs[:4], ["short"] * 4)
+    assert all((not r.hit) and r.reason == "expired" for r in res)
+    assert cache.metrics.cat("short").ttl_evictions == 4
+    assert len(cache) == 16                       # expired entries evicted
+    miss = cache.lookup_batch(_unit(rng, 1, 128), ["short"])
+    assert not miss[0].hit and miss[0].reason == "no_match"
+
+
+@pytest.mark.parametrize("use_device", [True, False])
+def test_ttl_survives_epoch_scale_clock(use_device):
+    """The inserted table is float32 (the device dtype), whose spacing at
+    absolute epoch times (~1.7e9 s) is minutes — the cache must rebase
+    timestamps to its construction instant so short TTLs classify
+    correctly under a wall-clock-like SimClock, on both paths."""
+    rng = np.random.default_rng(17)
+    eng = PolicyEngine([
+        CategoryConfig("short", threshold=0.90, ttl=60.0, quota=1.0),
+    ])
+    clock = SimClock(start=1.7e9)               # epoch-scale absolute time
+    cache = SemanticCache(eng, dim=128, capacity=128, clock=clock,
+                          index_kind="hnsw", use_device=use_device)
+    vecs = _unit(rng, 8, 128)
+    cache.insert_batch(vecs, ["short"] * 8,
+                       [f"q{i}" for i in range(8)],
+                       [f"r{i}" for i in range(8)])
+    res = cache.lookup_batch(vecs[:4], ["short"] * 4)
+    assert all(r.hit for r in res), "fresh entries misclassified as expired"
+    clock.advance(61.0)
+    res = cache.lookup_batch(vecs[:4], ["short"] * 4)
+    assert all(r.reason == "expired" for r in res), \
+        "float32 timestamp rounding swallowed a 61 s advance"
+
+
+def test_done_query_freeze_reduces_rows_gathered():
+    """A query that reaches τ immediately must stop issuing gathers: its
+    rows-gathered counter sits strictly below a never-satisfied query's."""
+    idx, vecs, _cats, rng = _random_graph(21, removed=0)
+    q = vecs[:8]
+    idx.search_batch(q, np.full(8, 0.5, np.float32))       # instant hits
+    rows_easy = int(np.sum(np.asarray(idx.last_search["rows_gathered"])))
+    hops_easy = int(idx.last_search["hops"])
+    idx.search_batch(_unit(rng, 8, 128), np.full(8, 2.0, np.float32))
+    rows_hard = int(np.sum(np.asarray(idx.last_search["rows_gathered"])))
+    hops_hard = int(idx.last_search["hops"])
+    assert rows_easy < rows_hard
+    assert hops_easy <= hops_hard
+    # τ satisfied by ANY entry point → done at init: zero hops, and the
+    # only rows fetched are the entry set's
+    idx.search_batch(q, np.full(8, -1.0, np.float32))
+    assert int(idx.last_search["hops"]) == 0
+    rows_init = int(np.sum(np.asarray(idx.last_search["rows_gathered"])))
+    assert rows_init == 8 * min(idx.p.n_entries, idx.p.beam)
+
+
+def test_search_batch_returns_device_arrays():
+    """Satellite: search_batch must not force a blocking host sync — both
+    outputs stay jax arrays; the cache layer converts once."""
+    idx, vecs, _cats, _rng = _random_graph(31)
+    i, s = idx.search_batch(vecs[:4], np.full(4, 0.9, np.float32))
+    assert isinstance(i, jax.Array) and isinstance(s, jax.Array)
+    assert i.shape == (4,) and s.shape == (4,)
+    assert isinstance(idx.last_search["rows_gathered"], jax.Array)
+
+
+def test_fused_path_has_no_materialized_embedding_gather():
+    """Acceptance: on the fused path the compiled HLO contains NO f32
+    gather shaped (B, K, d) — hop scoring goes through ops.hop_scores /
+    the frontier-hop kernel, so candidate embeddings never materialize as
+    an XLA gather. The reference path (the CPU oracle) does contain one,
+    which also proves the detector works."""
+    d, B = 256, 8
+    idx, vecs, _cats, rng = _random_graph(41, n=40, d=d)
+    t = idx.device_tables()
+    args = (t["emb"], t["neighbors"], t["valid"], t["entries"],
+            jnp.asarray(_unit(rng, B, d)),
+            jnp.asarray(np.full(B, 0.9, np.float32)), t["category"],
+            jnp.asarray(np.zeros(B, np.int32)))
+
+    def hlo(impl):
+        return beam_search.lower(*args, beam=idx.p.beam, max_hops=3,
+                                 hop_impl=impl).compile().as_text()
+
+    emb_gather = re.compile(r"f32\[\d+,\d+,%d\][^)]*\bgather\(" % d)
+    assert emb_gather.search(hlo("reference")) is not None, \
+        "detector broken: reference path should materialize the gather"
+    assert emb_gather.search(hlo("fused_pallas")) is None, \
+        "fused path still materializes a (B, K, d) embedding gather"
