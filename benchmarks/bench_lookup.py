@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import emit, index_meta, write_bench_json
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.embedding import SyntheticCategorySpace
@@ -122,7 +122,8 @@ def _run_capacity(capacity: int, *, prefill: int, lookups_per_batch: int,
               "hops_easy": int(hops_easy), "hops_hard": int(hops_hard)}
     emit(f"lookup.freeze.cap{capacity}", 0.0, **{
         k: v for k, v in freeze.items() if k != "capacity"})
-    return {"runs": runs, "freeze": freeze, "compilations": compilations}
+    return {"runs": runs, "freeze": freeze, "compilations": compilations,
+            "index": index_meta(cache.index)}
 
 
 def run(capacities=CAPACITIES, prefill: int = 1000,
@@ -138,6 +139,9 @@ def run(capacities=CAPACITIES, prefill: int = 1000,
         payload["runs"].extend(r["runs"])
         payload["freeze"].append(r["freeze"])
         payload["compilations_per_capacity"][str(cap)] = r["compilations"]
+        # emb_dtype + per-row byte costs: keeps rows-gathered comparable
+        # across resident dtypes in the perf trajectory.
+        payload["index"] = r["index"]
     write_bench_json("lookup", payload, out_dir=out_dir)
     return payload
 

@@ -1,7 +1,12 @@
-"""§5.1/§7.4 memory accounting: in-memory bytes/entry vs externalized docs.
+"""§5.1/§7.4 memory accounting: in-memory bytes/entry vs externalized.
 
 Paper: ~2 KB/entry in-memory (1.5 KB embedding + graph + 112 B metadata)
 vs tens of KB with full documents inline; overhead ≈ 5 % of baseline.
+
+Reported PER CATEGORY and under BOTH resident dtypes (fp32 and int8
+quantized residency): each category row shows its resident bytes and the
+headroom left under its quota ceiling, so the §5.4 quota math is visible
+in byte terms — the int8 tier holds ~4x the entries per quota byte.
 """
 
 from __future__ import annotations
@@ -11,35 +16,67 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
+from repro.core.economics import residency_capacity_table
 from repro.core.embedding import make_dense_space
 from repro.core.policy import CategoryConfig, PolicyEngine
+
+
+def _policies() -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig("code", threshold=0.90, ttl=1e9, quota=0.5,
+                       priority=4.0),
+        CategoryConfig("chat", threshold=0.80, ttl=1e9, quota=0.3),
+        CategoryConfig("legal", threshold=0.85, ttl=1e9, quota=0.2,
+                       priority=2.0),
+    ])
 
 
 def run(n: int = 2000, doc_bytes: int = 8000, seed: int = 0):
     rng = np.random.default_rng(seed)
     space = make_dense_space(seed=31)
-    eng = PolicyEngine([CategoryConfig("c", threshold=0.9, ttl=1e9,
-                                       quota=1.0)])
-    cache = SemanticCache(eng, capacity=n + 8, clock=SimClock(),
-                          index_kind="hnsw")
+    cats = ["code", "chat", "legal"]
     body = "x" * doc_bytes
-    for i in range(n):
-        cache.insert(space.sample(i, rng), "c", f"query {i}", body)
-    rep = cache.memory_report()
-    emit("memory.per_entry", 0.0, **rep)
-    inline = rep["in_memory_bytes_per_entry"] + rep["external_doc_bytes_per_entry"]
-    emit("memory.reduction_vs_inline_docs", 0.0,
-         hybrid_bytes=rep["in_memory_bytes_per_entry"],
-         inline_bytes=inline,
-         reduction=1 - rep["in_memory_bytes_per_entry"] / inline,
-         overhead_fraction=rep["metadata_overhead_bytes"]
-         / rep["in_memory_bytes_per_entry"])
-    # capacity projection for one v5e host (paper §7.4 scaling discussion)
-    for ram_gb in (8, 64):
-        emit(f"memory.capacity_at_{ram_gb}GB", 0.0,
-             hybrid_entries=int(ram_gb * 1e9
-                                / rep["in_memory_bytes_per_entry"]),
-             inline_entries=int(ram_gb * 1e9 / inline))
+    for emb_dtype in ("float32", "int8"):
+        cache = SemanticCache(_policies(), capacity=n + 8, clock=SimClock(),
+                              index_kind="hnsw", emb_dtype=emb_dtype)
+        for i in range(n):
+            cache.insert(space.sample(i, rng), cats[i % 3], f"query {i}",
+                         body)
+        rep = cache.memory_report()
+        emit(f"memory.{emb_dtype}.per_entry", 0.0, **rep)
+        inline = (rep["in_memory_bytes_per_entry"]
+                  + rep["external_doc_bytes_per_entry"])
+        emit(f"memory.{emb_dtype}.reduction_vs_inline_docs", 0.0,
+             hybrid_bytes=rep["in_memory_bytes_per_entry"],
+             inline_bytes=inline,
+             reduction=1 - rep["in_memory_bytes_per_entry"] / inline,
+             overhead_fraction=rep["metadata_overhead_bytes"]
+             / rep["in_memory_bytes_per_entry"])
+        # Per-category residency + quota headroom (the §5.4 quota split
+        # in byte terms, per resident dtype).
+        for cat, row in cache.category_memory_report().items():
+            emit(f"memory.{emb_dtype}.cat.{cat}", 0.0, **row)
+        # capacity projection for one v5e host (paper §7.4 scaling):
+        # resident_entries budgets the device/search tier (what the
+        # quantized shrink multiplies); host_entries budgets host numpy,
+        # which under int8 residency ALSO carries the fp32 control plane.
+        for ram_gb in (8, 64):
+            emit(f"memory.{emb_dtype}.capacity_at_{ram_gb}GB", 0.0,
+                 resident_entries=int(ram_gb * 1e9
+                                      / rep["in_memory_bytes_per_entry"]),
+                 host_entries=int(ram_gb * 1e9
+                                  / rep["host_bytes_per_entry"]),
+                 inline_entries=int(ram_gb * 1e9 / inline))
+    # Model-side quota table (core/economics.ResidencyModel): what each
+    # category quota holds out of a fixed budget under either dtype.
+    tab = residency_capacity_table(
+        budget_mb=1024.0,
+        quotas={c: _policies().get(c).quota for c in cats})
+    for dt, row in tab["dtypes"].items():
+        emit(f"memory.quota_table.{dt}", 0.0,
+             bytes_per_entry=row["bytes_per_entry"],
+             entries_per_mb=row["entries_per_mb"],
+             **{f"quota_{c}": v for c, v in row["quota_entries"].items()})
 
 
 if __name__ == "__main__":

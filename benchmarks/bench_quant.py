@@ -1,0 +1,181 @@
+"""Quantized embedding data plane: fp32 vs int8 at matched capacity.
+
+The paper's economics need the in-memory tier cheap enough that
+low-hit-rate categories break even; the int8 resident tier cuts the
+embedding component of every byte stream ~4x (d·4 → d + 4 bytes/row:
+int8 rows + one fp32 dequant scale). This bench measures the three
+streams where those bytes move, fp32 vs int8 with the SAME content at
+the SAME capacity, and gates on DETERMINISTIC byte counters — this
+container has ~30 % wall-clock noise, the byte counters have none:
+
+    resident  — emb bytes per resident entry (index.emb_row_nbytes)
+    sync      — emb bytes moved per steady-state delta flush
+                (sync_stats["emb_bytes_synced"]; the dirty-row pattern is
+                identical across dtypes because graph wiring runs on the
+                fp32 host control plane, so the ratio is exact)
+    gather    — bytes gathered per query by the beam search
+                (rows_gathered × per-row gather cost; row counts can
+                drift a little between dtypes, so this gate is looser)
+
+Decision parity at the τ boundary is the re-rank tier's property test
+(tests/test_quantized.py), not a wall-clock concern; this bench reports
+hit rates as a sanity row only.
+
+Emits CSV rows and ``results/BENCH_quant.json``; ``--check`` is the CI
+smoke gate (~4x resident/sync, >3x gather).
+
+    PYTHONPATH=src python -m benchmarks.bench_quant [--quick] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, index_meta, write_bench_json
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.embedding import SyntheticCategorySpace
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+DTYPES = ("float32", "int8")
+
+
+def _policies() -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig("quant", threshold=0.88, ttl=1e9, quota=1.0),
+    ])
+
+
+def _run_dtype(emb_dtype: str, *, capacity: int, prefill: int, steps: int,
+               batch: int, seed: int) -> dict:
+    """One steady-state run: prefill, then ``steps`` of (lookup batch +
+    insert batch + delta flush). Same seed ⇒ same vectors, same host
+    graph wiring, same dirty rows — only the bytes differ by dtype."""
+    rng = np.random.default_rng(seed)
+    sp = SyntheticCategorySpace(name="quant", n_centers=200_000,
+                                sigma=0.015, loose_frac=0.0, seed=seed)
+    cache = SemanticCache(_policies(), capacity=capacity, clock=SimClock(),
+                          index_kind="hnsw", use_device=True, seed=seed,
+                          emb_dtype=emb_dtype)
+    ids = np.arange(prefill)
+    embs = np.stack([sp.sample(int(i), rng) for i in ids])
+    cache.insert_batch(embs, ["quant"] * prefill,
+                       [f"q{i}" for i in ids], [f"r{i}" for i in ids])
+    cache.lookup_batch(embs[:batch], ["quant"] * batch)   # initial upload
+
+    sync_rows_0 = cache.index.sync_stats["rows_synced"]
+    sync_emb_0 = cache.index.sync_stats["emb_bytes_synced"]
+    next_intent = prefill
+    rows_gathered, gathered_bytes, hits, lookups = 0, 0, 0, 0
+    for s in range(steps):
+        hot = rng.integers(0, prefill, batch // 2)
+        cold = np.arange(next_intent, next_intent + batch - batch // 2)
+        next_intent += len(cold)
+        q = np.stack([sp.sample(int(i), rng)
+                      for i in np.concatenate([hot, cold])])
+        results = cache.lookup_batch(q, ["quant"] * batch)
+        ls = cache.last_lookup_stats
+        rows_gathered += ls["rows_gathered"]
+        gathered_bytes += ls["gathered_bytes"]
+        hits += sum(r.hit for r in results)
+        lookups += batch
+        miss = [i for i, r in enumerate(results) if not r.hit]
+        if miss:
+            cache.insert_batch(q[miss], ["quant"] * len(miss),
+                               [f"mq{s}_{i}" for i in miss],
+                               [f"mr{s}_{i}" for i in miss])
+        cache.index.device_tables()             # attribute sync to the step
+    out = {
+        "emb_dtype": emb_dtype,
+        "capacity": capacity,
+        "hit_rate": round(hits / max(1, lookups), 3),
+        **index_meta(cache.index),
+        "sync_rows": cache.index.sync_stats["rows_synced"] - sync_rows_0,
+        "sync_emb_bytes": cache.index.sync_stats["emb_bytes_synced"]
+        - sync_emb_0,
+        "rows_gathered_per_query": round(rows_gathered / max(1, lookups), 1),
+        "gathered_bytes_per_query": round(gathered_bytes / max(1, lookups)),
+        "reranks": sum(st.reranks
+                       for st in cache.metrics.per_category.values()),
+    }
+    out["sync_emb_bytes_per_step"] = out["sync_emb_bytes"] // max(1, steps)
+    emit(f"quant.{emb_dtype}.cap{capacity}", 0.0, **{
+        k: v for k, v in out.items() if k not in ("emb_dtype", "capacity")})
+    return out
+
+
+def run(capacity: int = 8192, prefill: int = 800, steps: int = 12,
+        batch: int = 16, seed: int = 0, out_dir: str = "results") -> dict:
+    runs = {dt: _run_dtype(dt, capacity=capacity, prefill=prefill,
+                           steps=steps, batch=batch, seed=seed)
+            for dt in DTYPES}
+    f32, i8 = runs["float32"], runs["int8"]
+    ratios = {
+        "resident_emb_bytes": round(f32["emb_row_bytes"]
+                                    / i8["emb_row_bytes"], 3),
+        "sync_emb_bytes": round(f32["sync_emb_bytes"]
+                                / max(1, i8["sync_emb_bytes"]), 3),
+        "gathered_bytes_per_query": round(
+            f32["gathered_bytes_per_query"]
+            / max(1, i8["gathered_bytes_per_query"]), 3),
+        "sync_rows_equal": f32["sync_rows"] == i8["sync_rows"],
+    }
+    emit("quant.ratio.fp32_over_int8", 0.0, **ratios)
+    payload = {"capacity": capacity, "prefill": prefill, "steps": steps,
+               "batch": batch, "runs": list(runs.values()),
+               "ratios": ratios}
+    write_bench_json("quant", payload, out_dir=out_dir)
+    return payload
+
+
+def check(payload: dict) -> None:
+    """The ~4x acceptance gates — deterministic byte counters only."""
+    r = payload["ratios"]
+    if not r["sync_rows_equal"]:
+        raise SystemExit(
+            "quant determinism regression: fp32 and int8 runs synced "
+            "different row counts — graph wiring must ride the fp32 host "
+            "control plane so the dirty pattern is dtype-independent")
+    if r["resident_emb_bytes"] < 3.5:
+        raise SystemExit(
+            f"resident-bytes regression: int8 residency shrinks the "
+            f"embedding row only {r['resident_emb_bytes']}x (expected "
+            f"~4x: d·4 → d + 4 scale bytes)")
+    if r["sync_emb_bytes"] < 3.5:
+        raise SystemExit(
+            f"sync-bytes regression: emb bytes per delta flush shrink "
+            f"only {r['sync_emb_bytes']}x under int8 (expected ~4x — is "
+            f"the scale table double-counted or the fp32 table leaking "
+            f"into the sync?)")
+    if r["gathered_bytes_per_query"] < 3.0:
+        raise SystemExit(
+            f"gather-bytes regression: bytes gathered per query shrink "
+            f"only {r['gathered_bytes_per_query']}x under int8 "
+            f"(expected ~4x modulo small beam-path drift)")
+    print(f"# check ok: fp32/int8 byte ratios — resident "
+          f"{r['resident_emb_bytes']}x, sync {r['sync_emb_bytes']}x, "
+          f"gather {r['gathered_bytes_per_query']}x (sync rows equal)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller capacity/prefill, fewer steps")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the fp32/int8 byte ratios "
+                         "hold (~4x resident + sync, >3x gather; all "
+                         "deterministic counters)")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.quick:
+        payload = run(capacity=2048, prefill=300, steps=6, out_dir=args.out)
+    else:
+        payload = run(out_dir=args.out)
+    if args.check:
+        check(payload)
+
+
+if __name__ == "__main__":
+    main()

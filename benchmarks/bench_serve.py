@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import emit, index_meta, write_bench_json
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.embedding import SyntheticCategorySpace
@@ -114,6 +114,9 @@ def _run_one(capacity: int, mode: str, *, steps: int, batch: int,
         "full_uploads": cache.index.sync_stats["full_uploads"]
         - (1 if mode == "delta" else 0),      # initial upload not steady
         "delta_updates": cache.index.sync_stats["delta_updates"],
+        # emb_dtype + per-row byte costs: keeps bytes-synced comparable
+        # across resident dtypes in the perf trajectory.
+        **index_meta(cache.index),
     }
     emit(f"serve.{tag}.{mode}.cap{capacity}", float(np.mean(lat_ms)) * 1e3,
          p50_ms=out["p50_step_ms"], p99_ms=out["p99_step_ms"],

@@ -34,6 +34,18 @@ def write_bench_json(name: str, payload: dict, out_dir: str = "results"
     return path
 
 
+def index_meta(index) -> dict:
+    """Embedding-tier layout of a DeviceResidentIndex, recorded in every
+    BENCH_*.json payload so perf trajectories stay comparable across
+    resident dtypes: the dtype, the per-row embedding payload (incl. the
+    int8 scale word) and the full synced row size."""
+    return {
+        "emb_dtype": index.emb_dtype,
+        "emb_row_bytes": index.emb_row_nbytes(),
+        "row_nbytes": index.row_nbytes(),
+    }
+
+
 def time_callable(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Mean wall time per call in microseconds."""
     for _ in range(warmup):

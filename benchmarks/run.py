@@ -16,6 +16,8 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
                         O(capacity) across a cache-capacity sweep
     bench_lookup      — lookup hot-loop p50/p99 vs capacity and batch
                         size, counter-gated (bucketing, done-query freeze)
+    bench_quant       — quantized residency: fp32 vs int8 byte ratios
+                        (resident / synced / gathered, ~4x), counter-gated
 """
 
 from __future__ import annotations
@@ -27,8 +29,8 @@ import traceback
 
 from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
                         bench_kernels, bench_latency, bench_longtail,
-                        bench_lookup, bench_memory, bench_routing,
-                        bench_serve, bench_thresholds)
+                        bench_lookup, bench_memory, bench_quant,
+                        bench_routing, bench_serve, bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -42,6 +44,7 @@ ALL = {
     "kernels": bench_kernels.run,
     "serve": bench_serve.run,
     "lookup": bench_lookup.run,
+    "quant": bench_quant.run,
 }
 
 

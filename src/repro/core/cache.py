@@ -19,6 +19,26 @@ on fresh, above-threshold hits. Policy enforcement points (§5.4):
 Extensions implemented from §7.6: hot-document L1 (in-memory docs for the
 power-law head → hit latency 7 ms → 2 ms).
 
+**Quantized residency + fp32 re-rank tier.** With ``emb_dtype="int8"``
+the device-resident embedding tier is int8 (per-slot symmetric scales,
+see core/hnsw.py) — ~4x fewer bytes per sync/gather and ~4x more entries
+per quota byte. Mirroring the paper's hybrid split (compact in-memory
+search structure vs external document storage), the full-precision fp32
+embedding lives NEXT TO the document in the ``DocumentStore``: a device
+result whose quantized score lands within the per-category
+``rerank_margin`` of τ is exactly re-scored from that stored fp32 copy
+before the hit/miss decision — both directions (a borderline "hit" can
+demote to a miss, a borderline miss whose best candidate sits just under
+τ can promote to a hit). Quantization therefore changes latency only:
+the decision for the returned candidate always matches the fp32 oracle.
+(Scope: the re-rank covers the ONE best candidate the device search
+returns. If two same-category entries' exact scores straddle τ while
+sitting within quantization error (~1e-3) of EACH OTHER, the quantized
+search may surface the other member of the near-tie — the decision is
+then exact for that candidate but can differ from an exact-search
+oracle. That needs a near-tie exactly at τ; the τ-boundary property
+test pins the guarantee for separated entries.)
+
 The write path is batched end-to-end: ``insert_batch`` runs one eviction
 scoring pass, one ``store.put_many`` pass and one ``index.add_batch`` pass
 for B entries, whose dirty rows coalesce into a single device delta flush
@@ -37,7 +57,7 @@ import numpy as np
 
 from repro.core.clock import Clock, SimClock
 from repro.core.hnsw import CLS_EXPIRED, CLS_HIT, CLS_MISS, FlatIndex, \
-    HNSWIndex, INVALID
+    HNSWIndex, HNSWParams, INVALID
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import PolicyEngine
 from repro.core.storage import Document, DocumentStore, InMemoryStore
@@ -62,6 +82,10 @@ class SemanticCache:
     ``index_kind``: "hnsw" (default) or "flat" (exact; small caches).
     ``use_device``: route batched lookups through the jitted beam search
     (TPU data plane); otherwise the host search is used (CPU benchmarks).
+    ``emb_dtype``: the device-resident embedding dtype — "float32" (the
+    exact baseline) or "int8" (quantized residency: ~4x fewer bytes per
+    sync/gather, with the fp32 re-rank tier deciding borderline matches
+    from the embedding stored next to the document).
     """
 
     def __init__(self, policies: PolicyEngine, dim: int = 384,
@@ -69,7 +93,7 @@ class SemanticCache:
                  clock: Clock | None = None, index_kind: str = "hnsw",
                  use_device: bool = False, search_ms: float = 2.0,
                  insert_ms: float = 1.0, l1_capacity: int = 0,
-                 seed: int = 0):
+                 seed: int = 0, emb_dtype: str = "float32"):
         self.policies = policies
         self.dim = dim
         self.capacity = capacity
@@ -81,11 +105,13 @@ class SemanticCache:
         self.metrics = MetricsRegistry()
 
         if index_kind == "hnsw":
-            self.index: HNSWIndex | FlatIndex = HNSWIndex(dim, capacity, seed=seed)
+            self.index: HNSWIndex | FlatIndex = HNSWIndex(
+                dim, capacity, params=HNSWParams(emb_dtype=emb_dtype),
+                seed=seed)
         elif index_kind == "flat":
             # FlatIndex has a first-class device path too (the flat_topk
             # kernel via ops.cache_topk), so use_device is legal here.
-            self.index = FlatIndex(dim, capacity)
+            self.index = FlatIndex(dim, capacity, emb_dtype=emb_dtype)
         else:
             raise ValueError(f"unknown index_kind {index_kind!r}")
 
@@ -148,6 +174,7 @@ class SemanticCache:
         now = self._now()
         self.last_lookup_stats = {}
         results: list[CacheResult] = [None] * B  # type: ignore[list-item]
+        rerank_docs: dict[int, Document] = {}   # docs the re-rank fetched
 
         # Line 4-7: per-category config + compliance gate.
         effective = [self.policies.effective(c) for c in categories]
@@ -181,18 +208,34 @@ class SemanticCache:
             # host sync is this single device_get — the Python below then
             # touches actual hits (doc fetch) and expirations (evict), not
             # all B results.
-            d_idx, d_score, d_cls = self.index.search_classified(
+            d_idx, d_score, d_cls, d_cand = self.index.search_classified(
                 q, taus, categories=qcats, ttls=ttls, now=now)
             ls = self.index.last_search
-            idxs, scores, cls, hops, rows = jax.device_get(
-                (d_idx, d_score, d_cls, ls.get("hops", 0),
+            idxs, scores, cls, cands, hops, rows = jax.device_get(
+                (d_idx, d_score, d_cls, d_cand, ls.get("hops", 0),
                  ls.get("rows_gathered", 0)))
             idxs = np.asarray(idxs, np.int64)
             scores = np.asarray(scores, np.float64)
-            cls = np.asarray(cls)
+            cls = np.array(cls)        # writable: the re-rank tier may edit
+            reranks = 0
+            if self.index.quantized:
+                # The fp32 re-rank tier: borderline quantized scores are
+                # re-decided against the exact embedding stored next to
+                # the document (may rewrite idxs/scores/cls in place;
+                # fetched docs land in rerank_docs so a promoted hit
+                # does not fetch the same document twice).
+                reranks = self._rerank_boundary(
+                    q, idxs, scores, cls, np.asarray(cands, np.int64),
+                    taus, ttls, now, [effective[i] for i in active],
+                    [categories[i] for i in active], rerank_docs)
+            row_bytes = ls.get("gather_row_nbytes",
+                               self.index.emb_row_nbytes())
             self.last_lookup_stats = {
                 "batch": len(active), "hops": int(hops),
-                "rows_gathered": int(np.sum(rows))}
+                "rows_gathered": int(np.sum(rows)),
+                "gathered_bytes": int(np.sum(rows)) * row_bytes,
+                "emb_dtype": self.index.emb_dtype,
+                "reranks": reranks}
         else:
             idxs, scores = self.index.search_host(q, taus, categories=qcats)
             # Host path: same vectorized classification in numpy.
@@ -241,7 +284,7 @@ class SemanticCache:
                                          doc_id=doc_id, reason="hit_l1",
                                          latency_ms=self.search_ms)
                 continue
-            doc = self.store.get(doc_id)
+            doc = rerank_docs.get(doc_id) or self.store.get(doc_id)
             if doc is None:   # store lost the doc (crash recovery): treat as miss
                 self._evict_slot(slot, reason="missing_doc")
                 st.misses += 1
@@ -256,6 +299,77 @@ class SemanticCache:
                                      category=cat, slot=slot, doc_id=doc_id,
                                      reason="hit", latency_ms=self.search_ms)
         return results
+
+    # --------------------------------------------------------- fp32 re-rank tier
+    def _exact_score(self, query: np.ndarray, slot: int,
+                     doc_cache: dict) -> float:
+        """Exact fp32 score of one candidate slot: the embedding stored
+        next to the document (the external tier's ground truth), falling
+        back to the index's host fp32 control-plane row if the store
+        copy is missing (crash recovery).
+
+        This is one keyed ``store.get`` — on latency-modeled stores the
+        clock advances like any fetch, and it happens even when the
+        re-rank resolves to a MISS. That is the re-rank tier's one
+        deliberate exception to Algorithm 1's "miss → no external
+        access": only borderline queries (|score − τ| ≤ margin, rare by
+        construction) pay it, in exchange for exact decisions at the
+        boundary. The fetched doc lands in ``doc_cache`` so a promoted
+        hit serves its response without a second fetch.
+        ``CacheResult.latency_ms`` stays the search cost (as it does for
+        ordinary hit fetches); the clock and the ``reranks`` counters
+        carry the fetch accounting."""
+        emb = None
+        doc_id = int(self.slot_doc[slot])
+        if doc_id != INVALID:
+            doc = self.store.get(doc_id)
+            if doc is not None:
+                doc_cache[doc_id] = doc
+                emb = doc.embedding_array()
+        if emb is None:
+            emb = self.index.emb[slot]
+        return float(np.asarray(query, np.float32) @ emb)
+
+    def _rerank_boundary(self, q: np.ndarray, idxs: np.ndarray,
+                         scores: np.ndarray, cls: np.ndarray,
+                         cands: np.ndarray, taus: np.ndarray,
+                         ttls: np.ndarray, now: float,
+                         effs: list, cats: list[str],
+                         doc_cache: dict) -> int:
+        """Re-decide borderline quantized results against fp32 (mutates
+        idxs/scores/cls in place; returns the re-score count).
+
+        A query is borderline when its best same-category candidate's
+        quantized score lands within the category's ``rerank_margin`` of
+        its τ — on EITHER side, so both false hits (quantized score
+        crept over τ) and false misses (crept under) are corrected. The
+        margin need only cover the int8 error (~1e-3 for unit rows), so
+        re-scores stay rare; the decision then exactly matches the fp32
+        oracle, with the TTL check reapplied to promoted hits."""
+        n = 0
+        for pos in range(len(cands)):
+            margin = effs[pos].rerank_margin
+            slot = int(cands[pos])
+            if margin <= 0.0 or slot == INVALID or not self.slot_valid[slot]:
+                continue
+            if abs(float(scores[pos]) - float(taus[pos])) > margin:
+                continue
+            exact = self._exact_score(q[pos], slot, doc_cache)
+            st = self.metrics.cat(cats[pos])
+            st.reranks += 1
+            n += 1
+            hit = exact >= float(taus[pos])
+            if hit != (cls[pos] != CLS_MISS):
+                st.rerank_flips += 1
+            scores[pos] = exact
+            if hit:
+                expired = (now - self.slot_inserted[slot]) > ttls[pos]
+                cls[pos] = CLS_EXPIRED if expired else CLS_HIT
+                idxs[pos] = slot
+            else:
+                cls[pos] = CLS_MISS
+                idxs[pos] = INVALID
+        return n
 
     # ------------------------------------------------------------------ insert
     def insert(self, embedding: np.ndarray, category: str, request: str,
@@ -427,9 +541,15 @@ class SemanticCache:
         for p_i, _, _ in pending:
             doc_id = self._next_doc_id
             self._next_doc_id += 1
+            # Under quantized residency the fp32 embedding travels WITH
+            # the document (external tier): the re-rank tier's exact
+            # copy. The fp32 index already IS exact, so its documents
+            # skip the duplicate (~4·dim bytes/doc).
+            emb = (embeddings[p_i].copy() if self.index.quantized
+                   else None)
             docs.append(Document(doc_id, requests[p_i], responses[p_i],
                                  created_at, categories[p_i],
-                                 metas[p_i] or {}))
+                                 metas[p_i] or {}, embedding=emb))
         self.store.put_many(docs)
         order = [p_i for p_i, _, _ in pending]
         # The index owns the category table (slot_category aliases it).
@@ -518,9 +638,23 @@ class SemanticCache:
 
     # ----------------------------------------------------------------- reports
     def memory_report(self) -> dict:
-        """§5.1/§7.4 accounting: bytes/entry in-memory vs externalized."""
+        """§5.1/§7.4 accounting: bytes/entry in-memory vs externalized.
+
+        ``in_memory_bytes_per_entry`` prices the RESIDENT (device/search)
+        tier — the paper's compact in-memory structure, and what the
+        delta sync moves and a device HBM budget holds: fp32 rows, or
+        int8 rows + the fp32 scale word under quantized residency (the
+        ~4x shrink that quadruples entries per byte of quota). The host
+        CONTROL PLANE is priced separately (``host_bytes_per_entry``):
+        it always keeps the fp32 rows for graph wiring/exact search, so
+        under int8 residency host RAM per entry is fp32 + the quantized
+        mirror — quantization shrinks the device tier, not host numpy."""
         n = max(1, len(self))
-        emb_bytes = self.dim * 4
+        emb_bytes = self.index.emb_row_nbytes()
+        # Host numpy: the fp32 row always, + the int8/scale mirror when
+        # the resident tier is quantized.
+        host_emb_bytes = self.dim * 4 + \
+            (emb_bytes if self.index.quantized else 0)
         graph_bytes = 0
         if isinstance(self.index, HNSWIndex):
             graph_bytes = sum(nb.shape[1] * 4 for nb in self.index.neighbors)
@@ -529,9 +663,32 @@ class SemanticCache:
                      if isinstance(self.store, InMemoryStore) and len(self.store) else 0)
         return {
             "entries": len(self),
+            "emb_dtype": self.index.emb_dtype,
             "in_memory_bytes_per_entry": emb_bytes + graph_bytes + overhead,
+            "host_bytes_per_entry": host_emb_bytes + graph_bytes + overhead,
             "embedding_bytes": emb_bytes,
             "graph_bytes": graph_bytes,
             "metadata_overhead_bytes": overhead,
             "external_doc_bytes_per_entry": doc_bytes,
         }
+
+    def category_memory_report(self) -> dict:
+        """Per-category residency: entries held, resident bytes, the
+        category's quota ceiling in entries (quota × capacity) and the
+        headroom left under it — the §5.4 quota math in byte terms, per
+        the active ``emb_dtype`` (int8 residency ~4x-ens entries/byte)."""
+        rep = self.memory_report()
+        per_entry = rep["in_memory_bytes_per_entry"]
+        out: dict[str, dict] = {}
+        for cid, name in sorted(self._cat_names.items()):
+            n_cat = int((self.slot_valid & (self.slot_category == cid)).sum())
+            quota = self.policies.effective(name).quota
+            quota_entries = int(quota * self.capacity)
+            out[name] = {
+                "entries": n_cat,
+                "resident_bytes": n_cat * per_entry,
+                "bytes_per_entry": per_entry,
+                "quota_entries": quota_entries,
+                "quota_headroom_entries": max(0, quota_entries - n_cat),
+            }
+        return out

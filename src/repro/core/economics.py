@@ -1,4 +1,4 @@
-"""Break-even economics (paper §4.4, §5.5, §7.5.1).
+"""Break-even economics (paper §4.4, §5.5, §7.5.1) + residency capacity.
 
 All latencies in milliseconds. The cost model generalizes eqs (1)–(6):
 
@@ -8,6 +8,14 @@ All latencies in milliseconds. The cost model generalizes eqs (1)–(6):
 Vector-DB:  search ≈ 30 ms (network 10–30 + server HNSW 10–15), fetch 5 ms.
 Hybrid:     search ≈ 2 ms (local, in-memory), fetch 5 ms.
 Under load: T_load = α·T_base  (§7.5.1, eq (6)).
+
+``ResidencyModel`` prices the OTHER side of the ledger: how many entries
+a byte budget holds in the compact in-memory tier, as a function of the
+resident embedding dtype (§5.1 bytes-per-entry accounting). The paper's
+per-category quota is a *fraction of capacity*; capacity itself is a
+function of bytes/entry, so quantizing the resident tier to int8
+(~4x smaller embedding component) multiplies the entries every category
+quota can hold out of the same memory budget.
 """
 
 from __future__ import annotations
@@ -81,6 +89,69 @@ def hit_rate_gain_linear(delta_threshold: float, sensitivity_k: float) -> float:
     """§7.5.4 linear model: Δh = k·δ  (k per unit threshold; the paper quotes
     k=0.5–2.0 per 0.01 of threshold, i.e. 50–200 per unit)."""
     return sensitivity_k * delta_threshold
+
+
+# ---------------------------------------------------------------------------
+# Residency capacity: entries per byte budget as a function of emb dtype.
+# ---------------------------------------------------------------------------
+
+# Embedding payload per resident row: fp32 rows, or int8 rows + one fp32
+# symmetric dequant scale (matches DeviceResidentIndex.emb_row_nbytes).
+EMB_TIER_BYTES = {
+    "float32": lambda dim: dim * 4,
+    "int8": lambda dim: dim + 4,
+}
+
+
+@dataclass(frozen=True)
+class ResidencyModel:
+    """Bytes-per-entry model of the compact in-memory tier (§5.1)."""
+
+    dim: int = 384
+    emb_dtype: str = "float32"     # resident embedding dtype
+    graph_degree: int = 32         # level-0 neighbors per node, int32
+    metadata_bytes: int = 112      # §5.1: id map + category + statistics
+
+    def emb_bytes(self) -> int:
+        try:
+            return EMB_TIER_BYTES[self.emb_dtype](self.dim)
+        except KeyError:
+            raise ValueError(f"unknown emb_dtype {self.emb_dtype!r}")
+
+    def bytes_per_entry(self) -> int:
+        """Embedding tier + level-0 graph row + per-slot metadata."""
+        return self.emb_bytes() + self.graph_degree * 4 + self.metadata_bytes
+
+    def entries_per_mb(self) -> int:
+        return int(1e6 // self.bytes_per_entry())
+
+    def quota_entries(self, quota_fraction: float, budget_mb: float) -> int:
+        """§5.4 quota math in byte terms: the entries a category's quota
+        fraction holds out of a memory budget under this residency."""
+        if not (0.0 <= quota_fraction <= 1.0):
+            raise ValueError("quota_fraction must be in [0,1]")
+        return int(quota_fraction * budget_mb * 1e6
+                   // self.bytes_per_entry())
+
+
+def residency_capacity_table(budget_mb: float, quotas: dict[str, float],
+                             dim: int = 384, graph_degree: int = 32,
+                             dtypes: tuple[str, ...] = ("float32", "int8")
+                             ) -> dict:
+    """Per-dtype capacity table: bytes/entry, entries/MB, and each
+    category quota's entry ceiling under the budget — the quantized
+    counterpart of Table 1's viability rows."""
+    out: dict = {"budget_mb": budget_mb, "dim": dim, "dtypes": {}}
+    for dt in dtypes:
+        m = ResidencyModel(dim=dim, emb_dtype=dt, graph_degree=graph_degree)
+        out["dtypes"][dt] = {
+            "bytes_per_entry": m.bytes_per_entry(),
+            "emb_bytes": m.emb_bytes(),
+            "entries_per_mb": m.entries_per_mb(),
+            "quota_entries": {c: m.quota_entries(qf, budget_mb)
+                              for c, qf in quotas.items()},
+        }
+    return out
 
 
 @dataclass(frozen=True)

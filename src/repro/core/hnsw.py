@@ -41,6 +41,24 @@ entry-point set is re-uploaded on every sync. ``sync_stats`` counts
 uploads, rows and bytes moved — the steady-state serve benchmark
 (benchmarks/bench_serve.py) asserts sync cost is O(delta) from these.
 
+**Quantized residency (int8 data plane).** With ``emb_dtype="int8"``
+(``HNSWParams.emb_dtype`` / the FlatIndex constructor arg) the
+device-resident embedding tier is int8 end to end: the host keeps the
+fp32 rows as the control plane (graph wiring, exact host search), but
+every row is ALSO quantized on write — per-slot symmetric scale,
+``q = round(v · 127 / max|v|)`` — and the device tables carry the int8
+``emb`` plus a per-slot fp32 ``scale`` table that rides the same
+dirty-row delta sync. All three data-plane kernels fuse the dequant into
+their dot products (asymmetric scoring: fp32 query, int8 rows, score ×
+scale after the dot), so every frontier-hop DMA, delta-sync scatter and
+flat-scan tile moves ~1/4 the bytes and a category quota holds ~4x the
+entries per HBM byte. fp32 stays the default and the exact baseline.
+Quantization can shift a score by ~1e-3, so the cache layer re-scores
+borderline results (|score − τ| ≤ margin) from the fp32 embedding stored
+next to the document (see core/cache.py re-rank tier) — latency may
+change at the boundary; the returned candidate's hit/miss decision does
+not (see cache.py for the near-tie scope note).
+
 Callers must treat ``device_tables()`` as the *live* mirror: the returned
 buffers are donated to the next delta flush, so do not hold references
 to them across index mutations — re-fetch per search (``search_batch``
@@ -98,18 +116,35 @@ def _pad_query_batch(queries: np.ndarray, thresholds, categories, ttls
     return B, Bp, qp, taup, qcp, tp
 
 
+def quantize_rows(vecs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 quantization: ``q = round(v / s)`` with
+    ``s = max|v| / 127`` — the layout of the quantized resident tier.
+    Returns (int8 rows (B, d), fp32 scales (B,)). Zero rows get scale
+    eps so the dequant ``q · s`` is exactly zero, never NaN."""
+    vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+    scale = (np.max(np.abs(vecs), axis=1) / 127.0).astype(np.float32)
+    scale = np.maximum(scale, np.float32(1e-12))
+    q = np.clip(np.rint(vecs / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
 def _flush_device_tables(device: dict | None, host: dict[str, np.ndarray],
                          dirty: set, capacity: int, rebuild_threshold: float,
-                         row_nbytes: int, sync_stats: dict) -> dict:
+                         row_nbytes: int, emb_row_nbytes: int,
+                         sync_stats: dict) -> dict:
     """The delta-sync protocol, shared by FlatIndex and HNSWIndex: apply
     the dirty-row log with donated in-place scatters (O(delta) bytes), or
     re-upload everything on first use / past ``rebuild_threshold``
-    (negative = always full, the benchmark contrast)."""
+    (negative = always full, the benchmark contrast).
+    ``emb_row_nbytes`` is the embedding payload per row (incl. the quant
+    scale word), tracked separately — it is the component the int8 tier
+    shrinks ~4x, and what the quant benchmark gates on."""
     if device is None or len(dirty) > rebuild_threshold * capacity:
         device = {k: jnp.asarray(v) for k, v in host.items()}
         sync_stats["full_uploads"] += 1
         sync_stats["rows_synced"] += capacity
         sync_stats["bytes_synced"] += capacity * row_nbytes
+        sync_stats["emb_bytes_synced"] += capacity * emb_row_nbytes
     elif dirty:
         rows = np.fromiter(dirty, np.int64, len(dirty))
         rows.sort()
@@ -127,6 +162,7 @@ def _flush_device_tables(device: dict | None, host: dict[str, np.ndarray],
         sync_stats["delta_updates"] += 1
         sync_stats["rows_synced"] += len(rows)
         sync_stats["bytes_synced"] += len(rows) * row_nbytes
+        sync_stats["emb_bytes_synced"] += len(rows) * emb_row_nbytes
     return device
 
 
@@ -152,12 +188,24 @@ class DeviceResidentIndex:
     """Device-residency + search-observability protocol shared by
     ``FlatIndex`` and ``HNSWIndex``: the version counter, dirty-row log,
     persistent mirror with delta flush (``_flush_device_tables``), sync
-    accounting, and the searches/compilations/last-search counters. A
+    accounting, the embedding-tier dtype (fp32 / int8 with per-slot
+    scales), and the searches/compilations/last-search counters. A
     subclass provides ``_host_tables()``, ``_row_nbytes()``,
     ``_rebuild_threshold()`` and (optionally) ``_finish_sync()`` for
     state that rides along on every sync (the HNSW entry set)."""
 
-    def _init_residency(self) -> None:
+    def _init_residency(self, emb_dtype: str = "float32") -> None:
+        if emb_dtype not in ("float32", "int8"):
+            raise ValueError(f"emb_dtype must be 'float32' or 'int8', "
+                             f"got {emb_dtype!r}")
+        self.emb_dtype = emb_dtype
+        if self.quantized:
+            # The quantized resident tier: what the device actually holds
+            # and the delta sync actually moves. The fp32 ``emb`` host
+            # table remains the control plane (graph wiring, exact host
+            # search) and is NEVER uploaded in this mode.
+            self.emb_q = np.zeros((self.capacity, self.dim), np.int8)
+            self.emb_scale = np.zeros((self.capacity,), np.float32)
         self._version = 0
         self._device: dict | None = None
         self._device_version = -1
@@ -166,10 +214,44 @@ class DeviceResidentIndex:
         # coalesce to one scattered row.
         self._dirty: set[int] = set()
         self.sync_stats = {"full_uploads": 0, "delta_updates": 0,
-                           "rows_synced": 0, "bytes_synced": 0}
+                           "rows_synced": 0, "bytes_synced": 0,
+                           "emb_bytes_synced": 0}
         self.search_stats = {"searches": 0, "compilations": 0}
         self._compiled_keys: set = set()
         self.last_search: dict = {}
+
+    @property
+    def quantized(self) -> bool:
+        return self.emb_dtype == "int8"
+
+    def emb_row_nbytes(self) -> int:
+        """Bytes the resident tier moves per embedding row: the row itself
+        plus the fp32 dequant scale when quantized — the unit behind both
+        the sync and the gather byte counters (~4x smaller at int8)."""
+        return self.dim + 4 if self.quantized else self.dim * 4
+
+    def row_nbytes(self) -> int:
+        """Bytes one full synced delta row moves (embedding tier + the
+        subclass's graph/flag columns) — the public face of the
+        ``_row_nbytes`` hook, for benchmarks and reports."""
+        return self._row_nbytes()
+
+    def _emb_tables(self) -> dict[str, np.ndarray]:
+        """The embedding tier as host tables: the fp32 rows, or the int8
+        rows plus the per-slot scale table (which rides the same
+        dirty-row delta sync — a row's scale changes exactly when the
+        row does)."""
+        if self.quantized:
+            return {"emb": self.emb_q, "scale": self.emb_scale}
+        return {"emb": self.emb}
+
+    def _quantize_slot(self, slot: int, vec: np.ndarray) -> None:
+        """Keep the quantized mirror of one row in lockstep with the fp32
+        write (callers already mark the row dirty)."""
+        if self.quantized:
+            q, s = quantize_rows(vec[None])
+            self.emb_q[slot] = q[0]
+            self.emb_scale[slot] = s[0]
 
     # -- subclass hooks --------------------------------------------------------
     def _host_tables(self) -> dict:
@@ -199,7 +281,8 @@ class DeviceResidentIndex:
             return self._device
         self._device = _flush_device_tables(
             self._device, self._host_tables(), self._dirty, self.capacity,
-            self._rebuild_threshold(), self._row_nbytes(), self.sync_stats)
+            self._rebuild_threshold(), self._row_nbytes(),
+            self.emb_row_nbytes(), self.sync_stats)
         self._finish_sync(self._device)
         self._dirty.clear()
         self._device_version = self._version
@@ -210,7 +293,10 @@ class DeviceResidentIndex:
         """Count a device search: ``compilations`` is the number of
         distinct compiled signatures seen (padded batch + impl knobs) —
         the bucketing acceptance counter — and ``last_search`` keeps the
-        hops/rows-gathered device scalars without forcing a host sync."""
+        hops/rows-gathered device scalars without forcing a host sync.
+        ``gather_row_nbytes`` is the per-row cost of those gathers (the
+        int8 tier cuts it ~4x), so callers can derive bytes gathered per
+        query without another device round trip."""
         st = self.search_stats
         st["searches"] += 1
         self._compiled_keys.add((Bp,) + tuple(key_extra))
@@ -223,6 +309,7 @@ class DeviceResidentIndex:
             self.last_search = {"batch": B, "padded_batch": Bp,
                                 "hops": stats["hops"],
                                 "rows_gathered": stats["rows_gathered"][:B]}
+        self.last_search["gather_row_nbytes"] = self.emb_row_nbytes()
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +332,7 @@ class FlatIndex(DeviceResidentIndex):
 
     rebuild_threshold: float = 0.25     # delta-sync protocol (see HNSWParams)
 
-    def __init__(self, dim: int, capacity: int):
+    def __init__(self, dim: int, capacity: int, emb_dtype: str = "float32"):
         self.dim = dim
         self.capacity = capacity
         self.emb = np.zeros((capacity, dim), dtype=np.float32)
@@ -257,7 +344,7 @@ class FlatIndex(DeviceResidentIndex):
         self.inserted = np.zeros((capacity,), dtype=np.float32)
         self._n = 0
         self._free: list[int] = []
-        self._init_residency()
+        self._init_residency(emb_dtype)
 
     def __len__(self) -> int:
         return int(self.valid.sum())
@@ -269,6 +356,7 @@ class FlatIndex(DeviceResidentIndex):
         if slot == self._n:
             self._n += 1
         self.emb[slot] = vec
+        self._quantize_slot(slot, np.asarray(vec, np.float32))
         self.valid[slot] = True
         self.category[slot] = category
         self._dirty.add(int(slot))
@@ -319,11 +407,12 @@ class FlatIndex(DeviceResidentIndex):
 
     # -- device path (ops.cache_topk over the resident tables) -----------------
     def _row_nbytes(self) -> int:
-        """Bytes one synced delta row moves (emb + valid + cat + ts + id)."""
-        return self.emb.itemsize * self.dim + 1 + 4 + 4 + 4
+        """Bytes one synced delta row moves (emb [+ scale] + valid + cat +
+        ts + id)."""
+        return self.emb_row_nbytes() + 1 + 4 + 4 + 4
 
     def _host_tables(self) -> dict:
-        return {"emb": self.emb, "valid": self.valid,
+        return {**self._emb_tables(), "valid": self.valid,
                 "category": self.category, "inserted": self.inserted}
 
     def _rebuild_threshold(self) -> float:
@@ -335,27 +424,32 @@ class FlatIndex(DeviceResidentIndex):
         """Batched device search via the ``flat_topk`` kernel
         (``ops.cache_topk``). Returns DEVICE arrays — convert once at the
         cache layer, not per index call."""
-        idx, score, _ = self.search_classified(queries, thresholds,
-                                               categories=categories)
+        idx, score, _, _ = self.search_classified(queries, thresholds,
+                                                  categories=categories)
         return idx, score
 
     def search_classified(self, queries: np.ndarray, thresholds: np.ndarray,
                           *, categories: np.ndarray | None = None,
                           ttls: np.ndarray | None = None, now: float = 0.0
-                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                          ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
         """Search + on-device TTL classification in one compiled program.
-        Returns device (idx, score, cls) with cls ∈ {CLS_MISS,
-        CLS_EXPIRED, CLS_HIT}; batch sizes are bucketed to powers of two
-        so B = 1..max_batch share one compilation."""
+        Returns device (idx, score, cls, cand) with cls ∈ {CLS_MISS,
+        CLS_EXPIRED, CLS_HIT} and ``cand`` the best same-category
+        candidate BEFORE thresholding (INVALID only when nothing valid
+        matched at all) — the cache's fp32 re-rank tier re-scores it when
+        the quantized score lands within the τ-margin band. Batch sizes
+        are bucketed to powers of two so B = 1..max_batch share one
+        compilation."""
         t = self.device_tables()
         B, Bp, qp, taup, qcp, tp = _pad_query_batch(
             queries, thresholds, categories, ttls)
-        idx, score, cls = _flat_search_classified(
+        idx, score, cls, cand = _flat_search_classified(
             t["emb"], t["valid"], t["category"], t["inserted"],
             jnp.asarray(qp), jnp.asarray(taup), jnp.asarray(qcp),
-            jnp.asarray(tp), jnp.float32(now))
+            jnp.asarray(tp), jnp.float32(now), t.get("scale"))
         self._record_search(B, Bp)
-        return idx[:B], score[:B], cls[:B]
+        return idx[:B], score[:B], cls[:B], cand[:B]
 
 
 # ---------------------------------------------------------------------------
@@ -375,14 +469,16 @@ def _classify(idx: jax.Array, score: jax.Array, inserted: jax.Array,
 
 @jax.jit
 def _flat_search_classified(emb, valid, category, inserted, queries, taus,
-                            qcat, ttls, now):
-    score, idx = ops.cache_topk(emb, valid, queries, category, qcat)
+                            qcat, ttls, now, scale=None):
+    score, idx = ops.cache_topk(emb, valid, queries, category, qcat,
+                                scales=scale)
+    cand = jnp.where(jnp.isfinite(score), idx, INVALID).astype(jnp.int32)
     ok = (score >= taus) & jnp.isfinite(score)
     idx = jnp.where(ok, idx, INVALID).astype(jnp.int32)
-    return idx, score, _classify(idx, score, inserted, ttls, now)
+    return idx, score, _classify(idx, score, inserted, ttls, now), cand
 
 @partial(jax.jit, static_argnames=("beam", "max_hops", "hop_impl"))
-def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
+def beam_search(emb: jax.Array,          # (cap, d) float32 or int8 rows
                 neighbors: jax.Array,    # (cap, M0) int32, INVALID padded
                 valid: jax.Array,        # (cap,) bool
                 entries: jax.Array,      # (E,) int32 entry points
@@ -390,14 +486,23 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
                 thresholds: jax.Array,   # (B,) float32 per-query τ (category)
                 slot_category: jax.Array | None = None,   # (cap,) int32
                 query_category: jax.Array | None = None,  # (B,) int32, -1 = any
+                scales: jax.Array | None = None,  # (cap,) f32 — emb is int8
                 *, beam: int = 32, max_hops: int = 12,
                 hop_impl: str = "reference"):
     """Batched fixed-width beam search with per-query threshold early exit.
 
     Returns (best_idx (B,), best_score (B,), stats) with stats =
-    ``{"hops": (), "rows_gathered": (B,)}``. best_idx is -1 where no valid
-    node reached the query's threshold (a cache miss — paper Algorithm 1
-    line 12-14: return immediately, no external access).
+    ``{"hops": (), "rows_gathered": (B,), "cand": (B,)}``. best_idx is -1
+    where no valid node reached the query's threshold (a cache miss —
+    paper Algorithm 1 line 12-14: return immediately, no external access);
+    ``stats["cand"]`` keeps the best same-category candidate regardless of
+    τ, which the cache's fp32 re-rank tier re-scores for borderline
+    queries on the quantized path.
+
+    With ``scales`` (cap,) fp32 the embedding rows are int8 (per-slot
+    symmetric quant) and every scoring site — entry-set init, jnp
+    reference hop, fused kernel hop — dequantizes inside its dot product
+    (asymmetric: fp32 query against int8 rows).
 
     Tombstoned (invalid) nodes still route traffic (DiskANN-style) but are
     excluded from results. Cross-category nodes get the same treatment
@@ -442,8 +547,11 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
     kernel_impl = "pallas" if hop_impl == "fused_pallas" else None
 
     def score_nodes(idx):  # idx (B, K) -> cosine scores (B, K)
-        vecs = jnp.take(emb, jnp.maximum(idx, 0), axis=0)          # (B,K,d)
+        safe = jnp.maximum(idx, 0)
+        vecs = jnp.take(emb, safe, axis=0).astype(jnp.float32)     # (B,K,d)
         s = jnp.einsum("bkd,bd->bk", vecs, queries)
+        if scales is not None:      # fused per-row dequant (int8 rows)
+            s = s * jnp.take(scales, safe, axis=0)
         return jnp.where(idx == INVALID, -jnp.inf, s)
 
     def res_mask(idx, scores):  # -inf at non-results (tombstone/category)
@@ -457,7 +565,7 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         scores, result scores). Done queries emit INVALID / -inf lanes."""
         if fused:
             return ops.frontier_hop(emb, neighbors, meta, f_idx, queries,
-                                    qcat, done.astype(jnp.int32),
+                                    qcat, done.astype(jnp.int32), scales,
                                     impl=kernel_impl)
         nbr = jnp.take(neighbors, jnp.maximum(f_idx, 0), axis=0)
         dead = (f_idx == INVALID)[:, :, None] | done[:, None, None]
@@ -472,7 +580,7 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
         f0 = jnp.concatenate([entries.astype(jnp.int32),
                               jnp.full((beam - E,), INVALID, jnp.int32)])
     f_idx = jnp.broadcast_to(f0[None, :], (B, beam))
-    f_score = (ops.hop_scores(emb, f_idx, queries) if fused
+    f_score = (ops.hop_scores(emb, f_idx, queries, scales=scales) if fused
                else score_nodes(f_idx))
     f_res = res_mask(f_idx, f_score)
     rows = jnp.sum(f_idx != INVALID, axis=1).astype(jnp.int32)
@@ -535,13 +643,14 @@ def beam_search(emb: jax.Array,          # (cap, d) float32, rows L2-normalized
 
     hit = best_score >= thresholds
     return (jnp.where(hit, best_idx, INVALID), best_score,
-            {"hops": hops, "rows_gathered": rows})
+            {"hops": hops, "rows_gathered": rows, "cand": best_idx})
 
 
 @partial(jax.jit, static_argnames=("beam", "max_hops", "hop_impl"))
 def beam_search_classified(emb, neighbors, valid, entries, inserted,
                            queries, thresholds, ttls, now,
-                           slot_category=None, query_category=None, *,
+                           slot_category=None, query_category=None,
+                           scales=None, *,
                            beam: int = 32, max_hops: int = 12,
                            hop_impl: str = "reference"):
     """Algorithm 1 lines 9-21 as ONE compiled program: masked beam search
@@ -550,7 +659,7 @@ def beam_search_classified(emb, neighbors, valid, entries, inserted,
     touches only actual hits and expirations."""
     idx, score, stats = beam_search(
         emb, neighbors, valid, entries, queries, thresholds,
-        slot_category, query_category,
+        slot_category, query_category, scales,
         beam=beam, max_hops=max_hops, hop_impl=hop_impl)
     return idx, score, _classify(idx, score, inserted, ttls, now), stats
 
@@ -578,6 +687,11 @@ class HNSWParams:
     # compiled backends, the jnp reference on CPU); "reference" | "fused"
     # | "fused_pallas" force a path (see beam_search).
     hop_impl: str | None = None
+    # Device-resident embedding dtype: "float32" (exact baseline) or
+    # "int8" (per-slot symmetric scales; every kernel fuses the dequant —
+    # ~4x fewer bytes per sync scatter and per gather DMA, ~4x more
+    # entries per quota byte). The host keeps fp32 as the control plane.
+    emb_dtype: str = "float32"
 
 
 class HNSWIndex(DeviceResidentIndex):
@@ -616,7 +730,7 @@ class HNSWIndex(DeviceResidentIndex):
         self._free: list[int] = []
         self._entries_cache: np.ndarray | None = None
         self._entries_version = -1
-        self._init_residency()
+        self._init_residency(self.p.emb_dtype)
 
     # -- basic bookkeeping ---------------------------------------------------
     def __len__(self) -> int:
@@ -703,6 +817,7 @@ class HNSWIndex(DeviceResidentIndex):
         vec = np.asarray(vec, np.float32)
         slot = self._alloc_slot()
         self.emb[slot] = vec
+        self._quantize_slot(slot, vec)
         self.valid[slot] = True
         self.category[slot] = category
         lvl = min(self._draw_level(), 8)
@@ -851,15 +966,15 @@ class HNSWIndex(DeviceResidentIndex):
         return ents
 
     def _row_nbytes(self) -> int:
-        """Bytes one synced delta row moves (emb + nbrs + valid + cat +
-        inserted-timestamp + id)."""
-        return (self.emb.itemsize * self.dim
+        """Bytes one synced delta row moves (emb [+ scale] + nbrs + valid
+        + cat + inserted-timestamp + id)."""
+        return (self.emb_row_nbytes()
                 + self.neighbors[0].itemsize * self.p.M0
                 + self.valid.itemsize + self.category.itemsize
                 + self.inserted.itemsize + 4)
 
     def _host_tables(self) -> dict:
-        return {"emb": self.emb, "neighbors": self.neighbors[0],
+        return {**self._emb_tables(), "neighbors": self.neighbors[0],
                 "valid": self.valid, "category": self.category,
                 "inserted": self.inserted}
 
@@ -899,8 +1014,8 @@ class HNSWIndex(DeviceResidentIndex):
         idx, score, stats = beam_search(
             t["emb"], t["neighbors"], t["valid"], t["entries"],
             jnp.asarray(qp), jnp.asarray(taup), t["category"],
-            jnp.asarray(qcp), beam=self.p.beam, max_hops=self.p.max_hops,
-            hop_impl=impl)
+            jnp.asarray(qcp), t.get("scale"), beam=self.p.beam,
+            max_hops=self.p.max_hops, hop_impl=impl)
         self._record_search(B, Bp,
                             ("beam", self.p.beam, self.p.max_hops, impl),
                             stats)
@@ -909,11 +1024,15 @@ class HNSWIndex(DeviceResidentIndex):
     def search_classified(self, queries: np.ndarray, thresholds: np.ndarray,
                           *, categories: np.ndarray | None = None,
                           ttls: np.ndarray | None = None, now: float = 0.0
-                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                          ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
         """Beam search + on-device TTL classification in one compiled
-        program (Algorithm 1 lines 9-21): returns device (idx, score, cls)
-        with cls ∈ {CLS_MISS, CLS_EXPIRED, CLS_HIT}, judged against the
-        synced ``inserted`` table, per-query ``ttls`` and ``now``."""
+        program (Algorithm 1 lines 9-21): returns device (idx, score, cls,
+        cand) with cls ∈ {CLS_MISS, CLS_EXPIRED, CLS_HIT}, judged against
+        the synced ``inserted`` table, per-query ``ttls`` and ``now``;
+        ``cand`` is the best same-category candidate BEFORE the τ test
+        (the cache's fp32 re-rank tier re-scores it at the boundary on
+        the quantized path)."""
         t = self.device_tables()
         B, Bp, qp, taup, qcp, tp = _pad_query_batch(
             queries, thresholds, categories, ttls)
@@ -922,12 +1041,12 @@ class HNSWIndex(DeviceResidentIndex):
             t["emb"], t["neighbors"], t["valid"], t["entries"],
             t["inserted"], jnp.asarray(qp), jnp.asarray(taup),
             jnp.asarray(tp), jnp.float32(now), t["category"],
-            jnp.asarray(qcp), beam=self.p.beam, max_hops=self.p.max_hops,
-            hop_impl=impl)
+            jnp.asarray(qcp), t.get("scale"), beam=self.p.beam,
+            max_hops=self.p.max_hops, hop_impl=impl)
         self._record_search(B, Bp,
                             ("classified", self.p.beam, self.p.max_hops,
                              impl), stats)
-        return idx[:B], score[:B], cls[:B]
+        return idx[:B], score[:B], cls[:B], stats["cand"][:B]
 
     # -- bulk build (benchmarks) -------------------------------------------------
     @classmethod
@@ -956,6 +1075,8 @@ class HNSWIndex(DeviceResidentIndex):
         assign2 = np.argsort(-sims_pv, axis=1)[:, 1] if pivots.shape[0] > 1 \
             else assign
         idx.emb[:n] = vecs
+        if idx.quantized:
+            idx.emb_q[:n], idx.emb_scale[:n] = quantize_rows(vecs)
         idx.valid[:n] = True
         idx.level[:n] = 0
         idx._n = n

@@ -16,6 +16,8 @@ class CategoryStats:
     quota_evictions: int = 0
     capacity_evictions: int = 0
     inserts: int = 0
+    reranks: int = 0               # fp32 re-scores of borderline int8 hits
+    rerank_flips: int = 0          # decisions the exact re-score changed
     stale_served: int = 0          # ground-truth staleness (simulator only)
     false_positives: int = 0       # ground-truth wrong-intent hits (sim only)
     true_positives: int = 0
@@ -46,6 +48,8 @@ class CategoryStats:
             "quota_evictions": self.quota_evictions,
             "capacity_evictions": self.capacity_evictions,
             "inserts": self.inserts,
+            "reranks": self.reranks,
+            "rerank_flips": self.rerank_flips,
             "stale_served": self.stale_served,
             "false_positives": self.false_positives,
             "true_positives": self.true_positives,

@@ -28,6 +28,13 @@ class CategoryConfig:
     quota: float                      # max fraction of cache capacity
     priority: float = 1.0             # economic weight in eviction (§5.4)
     allow_caching: bool = True        # compliance gate (§6.4: HIPAA/GDPR)
+    # Quantized-residency re-rank tier: device results whose int8 score
+    # lands within this margin of τ are exactly re-scored from the fp32
+    # embedding stored next to the document (core/cache.py), so
+    # quantization can never flip a hit/miss decision at the boundary.
+    # Dense categories sitting close to their τ (code) may widen it;
+    # 0 disables re-ranking for the category.
+    rerank_margin: float = 0.02
     # Adaptive-policy parameters (§7.5.4):
     delta_max: float = 0.05           # max threshold relaxation δ_max
     beta_max: float = 2.0             # max TTL extension factor β_max
@@ -46,6 +53,8 @@ class CategoryConfig:
             raise ValueError(f"{self.name}: quota must be in [0,1]")
         if self.delta_max < 0 or self.beta_max < 1.0:
             raise ValueError(f"{self.name}: invalid adaptive bounds")
+        if self.rerank_margin < 0:
+            raise ValueError(f"{self.name}: rerank_margin must be >= 0")
 
     def effective(self, load_factor: float) -> "EffectivePolicy":
         """Resolve τ(λ), t(λ) under load factor λ ∈ [0,1] (§7.5.4)."""
@@ -56,7 +65,8 @@ class CategoryConfig:
             ttl = min(ttl, self.ttl_max)
         return EffectivePolicy(threshold=tau, ttl=ttl, quota=self.quota,
                                priority=self.priority,
-                               allow_caching=self.allow_caching)
+                               allow_caching=self.allow_caching,
+                               rerank_margin=self.rerank_margin)
 
 
 @dataclass(frozen=True)
@@ -66,6 +76,7 @@ class EffectivePolicy:
     quota: float
     priority: float
     allow_caching: bool
+    rerank_margin: float = 0.02
 
 
 @dataclass

@@ -31,7 +31,16 @@ from repro.core.clock import Clock, SimClock
 
 @dataclass
 class Document:
-    """A cached (request, response) pair with timestamps (§5.1)."""
+    """A cached (request, response) pair with timestamps (§5.1).
+
+    ``embedding`` is the full-precision fp32 query embedding, stored
+    NEXT TO the document — i.e. in the external tier, not the compact
+    in-memory one. It is the ground truth for the cache's re-rank tier:
+    when the device index holds quantized (int8) rows, borderline
+    matches (|score − τ| ≤ margin) are exactly re-scored against this
+    copy, so the resident tier can shrink 4x without moving hit/miss
+    decisions at the threshold boundary.
+    """
 
     doc_id: int
     request: str
@@ -39,12 +48,23 @@ class Document:
     created_at: float
     category: str = ""
     meta: dict = field(default_factory=dict)
+    embedding: Any = None            # fp32 vector (np.ndarray or list)
+
+    def embedding_array(self) -> np.ndarray | None:
+        """The stored embedding as fp32 numpy (None if absent)."""
+        if self.embedding is None:
+            return None
+        return np.asarray(self.embedding, np.float32)
 
     def to_json(self) -> str:
+        emb = self.embedding
+        if emb is not None:
+            emb = np.asarray(emb, np.float32).tolist()
         return json.dumps({
             "doc_id": self.doc_id, "request": self.request,
             "response": self.response, "created_at": self.created_at,
             "category": self.category, "meta": self.meta,
+            "embedding": emb,
         })
 
     @classmethod
@@ -52,7 +72,9 @@ class Document:
         return cls(**json.loads(s))
 
     def nbytes(self) -> int:
-        return len(self.request.encode()) + len(self.response.encode()) + 64
+        emb_bytes = 0 if self.embedding is None else 4 * len(self.embedding)
+        return (len(self.request.encode()) + len(self.response.encode())
+                + emb_bytes + 64)
 
 
 class DocumentStore:

@@ -18,6 +18,15 @@ budget hit with *brute force*; HNSW beam search (``gather_scores``) cuts
 the bytes touched to O(hops · beam · M · d). The category tile adds 4
 bytes/row to the 1540-byte row stream (+0.26 % bandwidth).
 
+The scoring is QUANT-AWARE (asymmetric int8): when the table is stored
+int8 with a per-row symmetric scale (``scales`` (N,)), the dequant fuses
+into the same scan — the int8 tile streams at 1/4 the bytes, casts to
+fp32 in VMEM, dots against the fp32 query block on the MXU, and the
+per-row scale multiplies the score column *after* the dot (dequant is
+linear per row, so no fp32 table ever materializes in HBM). The fp32
+path passes scales = 1, so the masked+scaled kernel stays the only
+kernel.
+
 Tiling: TN rows of the table per step (multiple of 8 for fp32 sublanes),
 d padded to a multiple of 128 (384 = 3×128 natively aligned). B is padded
 to a multiple of 8 by the wrapper in ``ops.py``.
@@ -34,6 +43,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _flat_topk_kernel(table_ref, valid_ref, cat_ref,    # table-tile inputs
+                      scale_ref,                        # (TN,) dequant scales
                       q_ref, qcat_ref,                  # resident query inputs
                       score_out, idx_out,               # outputs
                       best_s, best_i):                  # VMEM scratch
@@ -45,12 +55,16 @@ def _flat_topk_kernel(table_ref, valid_ref, cat_ref,    # table-tile inputs
         best_s[...] = jnp.full_like(best_s, -jnp.inf)
         best_i[...] = jnp.full_like(best_i, -1)
 
-    tile = table_ref[...]                                # (TN, d)
+    tile = table_ref[...].astype(jnp.float32)            # (TN, d); int8→fp32
     q = q_ref[...]                                       # (B, d)
-    # MXU: (B, d) x (d, TN) -> (B, TN) in fp32.
+    # MXU: (B, d) x (d, TN) -> (B, TN) in fp32; the per-row dequant scale
+    # multiplies the score COLUMN after the dot (dequant is linear per
+    # row), so the int8 tile never materializes as fp32 in HBM. fp32
+    # tables stream scale = 1 — an exact no-op.
     scores = jax.lax.dot_general(
         q, tile, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
+    scores = scores * scale_ref[...][None, :]
     valid = valid_ref[...]                               # (TN,) int8 mask
     cat = cat_ref[...]                                   # (TN,) int32
     qcat = qcat_ref[...]                                 # (B,) int32
@@ -77,9 +91,11 @@ def _flat_topk_kernel(table_ref, valid_ref, cat_ref,    # table-tile inputs
 def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
               categories: jax.Array | None = None,
               query_categories: jax.Array | None = None,
+              scales: jax.Array | None = None,
               *, block_n: int = 1024, interpret: bool = False
               ) -> tuple[jax.Array, jax.Array]:
-    """Top-1 cosine search. table (N, d) fp32, valid (N,) int8/bool,
+    """Top-1 cosine search. table (N, d) fp32 — or int8 with ``scales``
+    (N,) fp32 per-row symmetric dequant scales — valid (N,) int8/bool,
     queries (B, d) fp32 → (best_score (B,), best_idx (B,) int32).
 
     ``categories`` (N,) int32 + ``query_categories`` (B,) int32 restrict
@@ -102,6 +118,8 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
     if categories is None:
         categories = jnp.full((N,), -1, jnp.int32)
         query_categories = jnp.full((B,), -1, jnp.int32)
+    if scales is None:
+        scales = jnp.ones((N,), jnp.float32)
     categories = categories.astype(jnp.int32)
     query_categories = query_categories.astype(jnp.int32)
     grid = (N // block_n,)
@@ -113,6 +131,7 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # table tile
             pl.BlockSpec((block_n,), lambda i: (i,)),       # valid tile
             pl.BlockSpec((block_n,), lambda i: (i,)),       # category tile
+            pl.BlockSpec((block_n,), lambda i: (i,)),       # scale tile
             pl.BlockSpec((B, d), lambda i: (0, 0)),         # queries resident
             pl.BlockSpec((B,), lambda i: (0,)),             # query categories
         ],
@@ -129,5 +148,6 @@ def flat_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
             pltpu.VMEM((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(table, valid, categories, queries, query_categories)
+    )(table, valid, categories, scales.astype(jnp.float32), queries,
+      query_categories)
     return score, idx

@@ -30,6 +30,18 @@ Masking contract (shared with ``ref.frontier_hop_ref``):
   ``meta[i] = category[i]`` for live slots, ``TOMBSTONE`` (-2) for
   removed ones. A candidate qualifies when ``meta != TOMBSTONE`` and the
   query category matches (< 0 = wildcard).
+
+QUANT-AWARE scoring (asymmetric int8): with ``scales`` (N,) the HBM
+embedding table is int8 with per-row symmetric scales — each live
+candidate's DMA moves d + 4 bytes (int8 row + fp32 scale word) instead
+of 4·d, the row casts to fp32 in VMEM and the dot multiplies by the
+scale in-kernel. The dequant is fused: no fp32 row ever exists in HBM,
+and the scale word is PACKED next to the meta word (one (N, 2) int32
+side table, scale bits bitcast into column 1), so the quantized path
+keeps the same 2 DMAs per live candidate as the fp32 path — a 4-byte
+word would otherwise pay a whole DMA issue/wait of its own. The packing
+exists only on the quantized path (selected at trace time); fp32 keeps
+its original (N, 1) meta column.
 """
 
 from __future__ import annotations
@@ -50,13 +62,16 @@ def _frontier_hop_kernel(frontier_ref,   # scalar-prefetch (B, F) int32
                          qcat_ref,       # scalar-prefetch (B,) int32
                          nbr_smem,       # (1, M) int32 — candidate ids (addresses)
                          nbr_vmem,       # (1, M) int32 — candidate ids (vector)
-                         emb_any,        # (N, d) f32, HBM-resident
-                         meta_any,       # (N, 1) int32, HBM-resident
+                         emb_any,        # (N, d) f32/int8, HBM-resident
+                         meta_any,       # (N, 1|2) int32, HBM-resident —
+                         #                 col 0 meta word; quantized path
+                         #                 packs scale bits in col 1
                          q_ref,          # (1, d) f32 query row
                          ids_out, route_out, res_out,      # (1, M) blocks
-                         rows_v,         # VMEM (M, d) f32 scratch
-                         meta_v,         # VMEM (M, 1) int32 scratch
-                         sem_rows, sem_meta):              # DMA sems (M,)
+                         rows_v,         # VMEM (M, d) emb-dtype scratch
+                         meta_v,         # VMEM (M, 1|2) int32 scratch
+                         sem_rows, sem_meta,               # DMA sems (M,)
+                         *, quant: bool):
     b = pl.program_id(0)
     f = pl.program_id(1)
     M = nbr_vmem.shape[1]
@@ -91,8 +106,15 @@ def _frontier_hop_kernel(frontier_ref,   # scalar-prefetch (B, F) int32
 
     ids = nbr_vmem[0, :]                                   # (M,) int32
     lane = live & (ids >= 0)
+    # Asymmetric scoring: the stored row (int8 on the quantized path)
+    # casts in VMEM, dots against the fp32 query, and the per-row dequant
+    # scale — bitcast back out of the packed meta row — multiplies the
+    # result after the dot.
     dots = jnp.sum(rows_v[...].astype(jnp.float32)
                    * q_ref[...].astype(jnp.float32), axis=1)   # (M,)
+    if quant:
+        scale = jax.lax.bitcast_convert_type(meta_v[:, 1], jnp.float32)
+        dots = dots * scale
     qc = qcat_ref[b]
     meta = meta_v[:, 0]
     ok = lane & (meta != TOMBSTONE) & ((qc < 0) | (meta == qc))
@@ -102,13 +124,14 @@ def _frontier_hop_kernel(frontier_ref,   # scalar-prefetch (B, F) int32
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
+def frontier_hop(emb: jax.Array,        # (N, d) f32 or int8, d % 128 == 0
                  neighbors: jax.Array,  # (N, M) int32, INVALID padded
                  meta: jax.Array,       # (N,) int32 packed valid/category
                  frontier: jax.Array,   # (B, F) int32, INVALID padded
                  queries: jax.Array,    # (B, d) f32
                  query_categories: jax.Array,   # (B,) int32, -1 = wildcard
                  done: jax.Array,       # (B,) int32/bool, 1 = frozen query
+                 scales: jax.Array | None = None,   # (N,) f32 when emb int8
                  *, interpret: bool = False
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One fused beam expansion. Returns (ids, route, res), each (B, F·M):
@@ -118,6 +141,16 @@ def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
     N, d = emb.shape
     M = neighbors.shape[1]
     B, F = frontier.shape
+    quant = scales is not None
+    meta_col = meta.astype(jnp.int32).reshape(N, 1)
+    if quant:
+        # Pack the fp32 scale's bits next to the meta word: one (N, 2)
+        # side table, one DMA per candidate for both (a lone 4-byte
+        # scale transfer would be all DMA overhead, no payload).
+        scale_bits = jax.lax.bitcast_convert_type(
+            scales.astype(jnp.float32), jnp.int32).reshape(N, 1)
+        meta_col = jnp.concatenate([meta_col, scale_bits], axis=1)
+    mw = meta_col.shape[1]
 
     nbr_row = lambda b, f, fr, dn, qc: (jnp.maximum(fr[b, f], 0), 0)
     out_blk = lambda b, f, fr, dn, qc: (b, f)
@@ -131,7 +164,7 @@ def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
             pl.BlockSpec((1, M), nbr_row, memory_space=pltpu.SMEM),
             pl.BlockSpec((1, M), nbr_row),
             pl.BlockSpec(memory_space=pltpu.ANY),       # emb (HBM)
-            pl.BlockSpec(memory_space=pltpu.ANY),       # meta (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),       # meta[+scale] (HBM)
             pl.BlockSpec((1, d), lambda b, f, fr, dn, qc: (b, 0)),
         ],
         out_specs=[
@@ -140,14 +173,14 @@ def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
             pl.BlockSpec((1, M), out_blk),
         ],
         scratch_shapes=[
-            pltpu.VMEM((M, d), jnp.float32),
-            pltpu.VMEM((M, 1), jnp.int32),
+            pltpu.VMEM((M, d), emb.dtype),
+            pltpu.VMEM((M, mw), jnp.int32),
             pltpu.SemaphoreType.DMA((M,)),
             pltpu.SemaphoreType.DMA((M,)),
         ],
     )
     ids, route, res = pl.pallas_call(
-        _frontier_hop_kernel,
+        functools.partial(_frontier_hop_kernel, quant=quant),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, F * M), jnp.int32),
@@ -157,6 +190,5 @@ def frontier_hop(emb: jax.Array,        # (N, d) f32, d % 128 == 0
         interpret=interpret,
     )(frontier.astype(jnp.int32), done.astype(jnp.int32),
       query_categories.astype(jnp.int32), neighbors.astype(jnp.int32),
-      neighbors.astype(jnp.int32), emb,
-      meta.astype(jnp.int32).reshape(N, 1), queries)
+      neighbors.astype(jnp.int32), emb, meta_col, queries)
     return ids, route, res

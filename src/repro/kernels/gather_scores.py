@@ -18,6 +18,15 @@ category table is never scanned) and compares it against the query's
 category in-kernel. Cross-category candidates score -inf — they can route
 the beam but never win result tracking — and the device data plane stays
 one kernel: gather + dot + category mask fused.
+
+Both kernels are QUANT-AWARE (asymmetric int8 scoring): with ``scales``
+(N,) the table rows are int8 and each step also block-index-maps the
+gathered row's fp32 dequant scale off the same prefetched ids, casting
+the row in VMEM and multiplying the dot by the scale — the gather moves
+d + 4 bytes per candidate instead of 4·d, and no fp32 row ever
+round-trips through HBM. The scale operand exists ONLY on the quantized
+path (selected at trace time): the fp32 hot loop keeps its original
+two-operand grid steps and pays zero extra DMAs.
 """
 
 from __future__ import annotations
@@ -41,30 +50,55 @@ def _gather_scores_kernel(idx_ref,               # scalar-prefetched (B, K) int3
     out_ref[0, 0] = jnp.where(raw < 0, -jnp.inf, dot)
 
 
+def _gather_scores_quant_kernel(idx_ref,         # scalar-prefetched (B, K) int32
+                                row_ref,         # (1, d) gathered int8 row
+                                scale_ref,       # (1, 1) gathered dequant scale
+                                q_ref,           # (1, d) query row
+                                out_ref):        # (1, 1)
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    raw = idx_ref[b, k]
+    dot = jnp.sum(row_ref[...].astype(jnp.float32)
+                  * q_ref[...].astype(jnp.float32)) * scale_ref[0, 0]
+    out_ref[0, 0] = jnp.where(raw < 0, -jnp.inf, dot)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
+                  scales: jax.Array | None = None,
                   *, interpret: bool = False) -> jax.Array:
-    """table (N, d) fp32; indices (B, K) int32 (−1 = padding);
-    queries (B, d) fp32 → scores (B, K) fp32 (−inf at padding)."""
+    """table (N, d) fp32 — or int8 with ``scales`` (N,) per-row dequant
+    scales — indices (B, K) int32 (−1 = padding); queries (B, d) fp32 →
+    scores (B, K) fp32 (−inf at padding)."""
     N, d = table.shape
     B, K = indices.shape
 
+    row_blk = pl.BlockSpec(
+        (1, d), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0))
+    q_blk = pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0))
+    if scales is None:
+        kernel, in_specs, operands = (
+            _gather_scores_kernel, [row_blk, q_blk], (table, queries))
+    else:
+        # Quantized path only: the row's scale shares the row's block
+        # index map off the prefetched ids.
+        scale_blk = pl.BlockSpec(
+            (1, 1), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0))
+        kernel, in_specs, operands = (
+            _gather_scores_quant_kernel, [row_blk, scale_blk, q_blk],
+            (table, scales.astype(jnp.float32).reshape(N, 1), queries))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, K),
-        in_specs=[
-            # Gathered table row: block index chosen by the prefetched ids.
-            pl.BlockSpec((1, d), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
-            pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, k)),
     )
     return pl.pallas_call(
-        _gather_scores_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
         interpret=interpret,
-    )(indices.astype(jnp.int32), table, queries)
+    )(indices.astype(jnp.int32), *operands)
 
 
 def _gather_scores_masked_kernel(idx_ref,        # scalar-prefetched (B, K) int32
@@ -83,13 +117,32 @@ def _gather_scores_masked_kernel(idx_ref,        # scalar-prefetched (B, K) int3
     out_ref[0, 0] = jnp.where(ok, dot, -jnp.inf)
 
 
+def _gather_scores_masked_quant_kernel(idx_ref,  # scalar-prefetched (B, K) int32
+                                       row_ref,    # (1, d) gathered int8 row
+                                       cat_ref,    # (1, 1) gathered category
+                                       scale_ref,  # (1, 1) gathered scale
+                                       q_ref,      # (1, d) query row
+                                       qcat_ref,   # (1, 1) query category
+                                       out_ref):   # (1, 1)
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    raw = idx_ref[b, k]
+    dot = jnp.sum(row_ref[...].astype(jnp.float32)
+                  * q_ref[...].astype(jnp.float32)) * scale_ref[0, 0]
+    qc = qcat_ref[0, 0]
+    ok = (raw >= 0) & ((qc < 0) | (cat_ref[0, 0] == qc))
+    out_ref[0, 0] = jnp.where(ok, dot, -jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_scores_masked(table: jax.Array, indices: jax.Array,
                          queries: jax.Array, slot_categories: jax.Array,
                          query_categories: jax.Array,
+                         scales: jax.Array | None = None,
                          *, interpret: bool = False) -> jax.Array:
-    """Category-masked frontier hop. table (N, d) fp32; indices (B, K)
-    int32 (−1 = padding); queries (B, d) fp32; slot_categories (N,) int32;
+    """Category-masked frontier hop. table (N, d) fp32 — or int8 with
+    ``scales`` (N,) per-row dequant scales — indices (B, K) int32 (−1 =
+    padding); queries (B, d) fp32; slot_categories (N,) int32;
     query_categories (B,) int32 (−1 = wildcard) → scores (B, K) fp32
     (−inf at padding and at cross-category candidates)."""
     N, d = table.shape
@@ -97,21 +150,29 @@ def gather_scores_masked(table: jax.Array, indices: jax.Array,
     slot_cat = slot_categories.astype(jnp.int32).reshape(N, 1)
     query_cat = query_categories.astype(jnp.int32).reshape(B, 1)
 
+    # Row + its category (+ its scale, quantized path only) share one
+    # block index map off the prefetched ids.
+    gathered_blk = lambda shape: pl.BlockSpec(
+        shape, lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0))
+    in_specs = [gathered_blk((1, d)), gathered_blk((1, 1))]
+    operands = [table, slot_cat]
+    kernel = _gather_scores_masked_kernel
+    if scales is not None:
+        in_specs.append(gathered_blk((1, 1)))
+        operands.append(scales.astype(jnp.float32).reshape(N, 1))
+        kernel = _gather_scores_masked_quant_kernel
+    in_specs += [pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0)),
+                 pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, 0))]
+    operands += [queries, query_cat]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, K),
-        in_specs=[
-            # Row + its category share one block index map off the ids.
-            pl.BlockSpec((1, d), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
-            pl.BlockSpec((1, 1), lambda b, k, idx_ref: (jnp.maximum(idx_ref[b, k], 0), 0)),
-            pl.BlockSpec((1, d), lambda b, k, idx_ref: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda b, k, idx_ref: (b, k)),
     )
     return pl.pallas_call(
-        _gather_scores_masked_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
         interpret=interpret,
-    )(indices.astype(jnp.int32), table, slot_cat, queries, query_cat)
+    )(indices.astype(jnp.int32), *operands)

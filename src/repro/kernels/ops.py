@@ -45,6 +45,7 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> tuple[jax.Array, int
 def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
                categories: jax.Array | None = None,
                query_categories: jax.Array | None = None,
+               scales: jax.Array | None = None,
                *, block_n: int = 1024, interpret: bool | None = None
                ) -> tuple[jax.Array, jax.Array]:
     """Cache-table cosine top-1 (the 2 ms local search). Any N, B, d.
@@ -53,6 +54,11 @@ def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
     each query's result to its own category (§5.3); pass both or neither
     (exactly one raises — silent fallback would bypass isolation). Padding
     rows/queries are filled with a category no real query can match.
+
+    Optional ``scales`` (N,) fp32 marks the table as int8 with per-row
+    symmetric dequant scales: the kernel fuses the dequant into the scan
+    (asymmetric scoring — fp32 queries, int8 rows), streaming ~1/4 the
+    table bytes. Padding rows get scale 0 (already excluded by valid=0).
     """
     interpret = _on_cpu() if interpret is None else interpret
     if (categories is None) != (query_categories is None):
@@ -60,6 +66,9 @@ def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
                          "be passed together (got exactly one)")
     table, n0 = _pad_to(table, 0, block_n)
     valid = jnp.pad(valid.astype(jnp.int8), (0, table.shape[0] - n0))
+    if scales is not None:
+        scales = jnp.pad(scales.astype(jnp.float32),
+                         (0, table.shape[0] - n0))
     if categories is not None:
         # -2: never equals a real category AND is not the -1 wildcard
         # (pad rows are already excluded by valid=0; this is belt-and-braces).
@@ -77,7 +86,7 @@ def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
                                    (0, queries.shape[0] - b0),
                                    constant_values=jnp.iinfo(jnp.int32).max)
     score, idx = _ft.flat_topk(table, valid, queries, categories,
-                               query_categories, block_n=block_n,
+                               query_categories, scales, block_n=block_n,
                                interpret=interpret)
     return score[:b0], idx[:b0]
 
@@ -85,6 +94,7 @@ def cache_topk(table: jax.Array, valid: jax.Array, queries: jax.Array,
 def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
                slot_categories: jax.Array | None = None,
                query_categories: jax.Array | None = None,
+               scales: jax.Array | None = None,
                *, interpret: bool | None = None) -> jax.Array:
     """One HNSW frontier hop: gather + dot. indices (B, K), −1 padded.
 
@@ -92,6 +102,10 @@ def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
     mask is fused into the gather+dot kernel (one-kernel data plane, §5.3).
     Pass both or neither; exactly one raises (silent fallback to the
     unmasked gather would bypass category isolation).
+
+    With ``scales`` (N,) fp32 the table is int8 (per-row symmetric quant)
+    and the dequant fuses into the gather+dot — each candidate moves
+    d + 4 bytes instead of 4·d.
     """
     interpret = _on_cpu() if interpret is None else interpret
     if (slot_categories is None) != (query_categories is None):
@@ -102,13 +116,15 @@ def hop_scores(table: jax.Array, indices: jax.Array, queries: jax.Array,
     if slot_categories is not None and query_categories is not None:
         return _gs.gather_scores_masked(table, indices, queries,
                                         slot_categories, query_categories,
-                                        interpret=interpret)
-    return _gs.gather_scores(table, indices, queries, interpret=interpret)
+                                        scales, interpret=interpret)
+    return _gs.gather_scores(table, indices, queries, scales,
+                             interpret=interpret)
 
 
 def frontier_hop(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
                  frontier: jax.Array, queries: jax.Array,
                  query_categories: jax.Array, done: jax.Array,
+                 scales: jax.Array | None = None,
                  *, impl: str | None = None, interpret: bool | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One fused HNSW beam expansion: neighbor fetch + embedding gather +
@@ -118,7 +134,9 @@ def frontier_hop(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
     Dead lanes — INVALID frontier/neighbor padding, or a *done* query (the
     early-exit freeze) — emit INVALID / -inf and, on the kernel path,
     issue no gather DMAs at all. ``meta`` is the packed per-slot word
-    ``category if valid else -2`` (see kernels/frontier_hop.py).
+    ``category if valid else -2`` (see kernels/frontier_hop.py). With
+    ``scales`` (N,) fp32 the embedding table is int8 and the per-candidate
+    DMA + in-kernel dequant move/score d + 4 bytes per row, not 4·d.
 
     Dispatch (same pattern as ``scatter_rows``): the Pallas kernel on
     compiled backends, the vectorized jnp reference on CPU/interpret —
@@ -131,9 +149,10 @@ def frontier_hop(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
     queries, _ = _pad_to(queries, 1, 128)
     if impl == "pallas":
         return _fh.frontier_hop(emb, neighbors, meta, frontier, queries,
-                                query_categories, done, interpret=interpret)
+                                query_categories, done, scales,
+                                interpret=interpret)
     return _ref.frontier_hop_ref(emb, neighbors, meta, frontier, queries,
-                                 query_categories, done)
+                                 query_categories, done, scales)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

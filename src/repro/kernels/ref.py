@@ -11,14 +11,28 @@ import jax
 import jax.numpy as jnp
 
 
-def flat_topk_ref(table: jax.Array, valid: jax.Array, queries: jax.Array
+def dequantize_ref(table: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Per-row symmetric dequant: row i is ``table[i] * scales[i]``.
+
+    The oracle for the quantized data plane: every kernel that *fuses* the
+    dequant into its dot product (asymmetric scoring — fp32 query against
+    int8 stored rows) must equal the plain fp32 math over this
+    materialized table. ``scales`` None = the table is already fp32."""
+    t = table.astype(jnp.float32)
+    return t if scales is None else t * scales.astype(jnp.float32)[:, None]
+
+
+def flat_topk_ref(table: jax.Array, valid: jax.Array, queries: jax.Array,
+                  scales: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Exact cosine top-1 over the whole table.
 
     table (N, d) fp32 (rows L2-normalized), valid (N,) bool, queries (B, d).
     Returns (best_score (B,), best_idx (B,) int32); invalid rows excluded.
+    With ``scales`` (N,) the table is int8 and row i scores against the
+    dequantized ``table[i] * scales[i]``.
     """
-    scores = queries.astype(jnp.float32) @ table.astype(jnp.float32).T  # (B,N)
+    scores = queries.astype(jnp.float32) @ dequantize_ref(table, scales).T
     scores = jnp.where(valid[None, :], scores, -jnp.inf)
     best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
     best_score = jnp.take_along_axis(scores, best_idx[:, None].astype(jnp.int32),
@@ -28,11 +42,12 @@ def flat_topk_ref(table: jax.Array, valid: jax.Array, queries: jax.Array
 
 def flat_topk_masked_ref(table: jax.Array, valid: jax.Array,
                          queries: jax.Array, categories: jax.Array,
-                         query_categories: jax.Array
+                         query_categories: jax.Array,
+                         scales: jax.Array | None = None
                          ) -> tuple[jax.Array, jax.Array]:
     """Category-masked exact top-1 (§5.3): a row qualifies only when valid
     AND same-category as the query (query category < 0 = wildcard)."""
-    scores = queries.astype(jnp.float32) @ table.astype(jnp.float32).T  # (B,N)
+    scores = queries.astype(jnp.float32) @ dequantize_ref(table, scales).T
     ok = valid[None, :] & ((query_categories[:, None] < 0) |
                            (categories[None, :] == query_categories[:, None]))
     scores = jnp.where(ok, scores, -jnp.inf)
@@ -42,24 +57,30 @@ def flat_topk_masked_ref(table: jax.Array, valid: jax.Array,
     return best_score, best_idx
 
 
-def gather_scores_ref(table: jax.Array, indices: jax.Array, queries: jax.Array
-                      ) -> jax.Array:
+def gather_scores_ref(table: jax.Array, indices: jax.Array, queries: jax.Array,
+                      scales: jax.Array | None = None) -> jax.Array:
     """scores[b,k] = <table[indices[b,k]], queries[b]>; -inf where idx < 0.
 
     table (N, d), indices (B, K) int32 (may contain -1), queries (B, d).
+    With ``scales`` (N,) the table is int8 and the gathered row dequantizes
+    through its per-row scale before the dot.
     """
-    vecs = jnp.take(table, jnp.maximum(indices, 0), axis=0)     # (B,K,d)
+    safe = jnp.maximum(indices, 0)
+    vecs = jnp.take(table, safe, axis=0)                        # (B,K,d)
     s = jnp.einsum("bkd,bd->bk", vecs.astype(jnp.float32),
                    queries.astype(jnp.float32))
+    if scales is not None:
+        s = s * jnp.take(scales.astype(jnp.float32), safe, axis=0)
     return jnp.where(indices < 0, -jnp.inf, s)
 
 
 def gather_scores_masked_ref(table: jax.Array, indices: jax.Array,
                              queries: jax.Array, slot_categories: jax.Array,
-                             query_categories: jax.Array) -> jax.Array:
+                             query_categories: jax.Array,
+                             scales: jax.Array | None = None) -> jax.Array:
     """Category-masked frontier hop: -inf at padding (idx < 0) and where
     the gathered row's category differs from the query's (< 0 = wildcard)."""
-    s = gather_scores_ref(table, indices, queries)
+    s = gather_scores_ref(table, indices, queries, scales)
     cat = jnp.take(slot_categories, jnp.maximum(indices, 0), axis=0)  # (B,K)
     ok = (query_categories[:, None] < 0) | (cat == query_categories[:, None])
     return jnp.where(ok, s, -jnp.inf)
@@ -67,7 +88,8 @@ def gather_scores_masked_ref(table: jax.Array, indices: jax.Array,
 
 def frontier_hop_ref(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
                      frontier: jax.Array, queries: jax.Array,
-                     query_categories: jax.Array, done: jax.Array
+                     query_categories: jax.Array, done: jax.Array,
+                     scales: jax.Array | None = None
                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One fused beam expansion (oracle for ``frontier_hop``).
 
@@ -76,14 +98,15 @@ def frontier_hop_ref(emb: jax.Array, neighbors: jax.Array, meta: jax.Array,
     frontier/neighbor padding, or a done query — the early-exit freeze)
     get id = INVALID and -inf everywhere; result scores additionally mask
     candidates whose packed ``meta`` word (category, or -2 = tombstone)
-    does not match the query category (< 0 = wildcard).
+    does not match the query category (< 0 = wildcard). With ``scales``
+    (N,) the embedding table is int8 (per-row symmetric quant).
     """
     B, F = frontier.shape
     nbr = jnp.take(neighbors, jnp.maximum(frontier, 0), axis=0)  # (B,F,M)
     alive = (frontier >= 0)[:, :, None] & \
         (done.astype(jnp.int32) == 0)[:, None, None]
     ids = jnp.where(alive & (nbr >= 0), nbr, -1).reshape(B, -1)
-    route = gather_scores_ref(emb, ids, queries)
+    route = gather_scores_ref(emb, ids, queries, scales)
     m = jnp.take(meta, jnp.maximum(ids, 0), axis=0)              # (B, F·M)
     ok = (ids >= 0) & (m != -2) & \
         ((query_categories[:, None] < 0) | (m == query_categories[:, None]))

@@ -26,19 +26,30 @@ def _unit(rng, n):
 
 def _assert_mirror_exact(idx: HNSWIndex) -> None:
     t = idx.device_tables()
-    for key, host in (("emb", idx.emb), ("neighbors", idx.neighbors[0]),
-                      ("valid", idx.valid), ("category", idx.category)):
+    pairs = [("neighbors", idx.neighbors[0]), ("valid", idx.valid),
+             ("category", idx.category)]
+    # Quantized residency: the device holds the int8 rows + the per-slot
+    # scale table (riding the same delta sync), never the fp32 rows.
+    pairs += ([("emb", idx.emb_q), ("scale", idx.emb_scale)]
+              if idx.quantized else [("emb", idx.emb)])
+    for key, host in pairs:
         assert np.array_equal(np.asarray(t[key]), host), \
             f"device {key} diverged from host"
     assert np.array_equal(np.asarray(t["entries"]), idx.entry_set())
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_index_mirror_exact_under_random_interleave(seed):
+@pytest.mark.parametrize("seed,emb_dtype", [(0, "float32"), (1, "float32"),
+                                            (2, "float32"), (0, "int8"),
+                                            (2, "int8")])
+def test_index_mirror_exact_under_random_interleave(seed, emb_dtype):
     """Random add_batch/remove interleave with syncs at random points:
-    after every flush the device tables equal the host tables exactly."""
+    after every flush the device tables equal the host tables exactly —
+    under int8 residency that includes the scale table riding the delta
+    sync."""
     rng = np.random.default_rng(seed)
-    idx = HNSWIndex(DIM, 512, seed=seed)
+    from repro.core.hnsw import HNSWParams
+    idx = HNSWIndex(DIM, 512, params=HNSWParams(emb_dtype=emb_dtype),
+                    seed=seed)
     live: list[int] = []
     for _ in range(60):
         op = rng.random()
@@ -92,16 +103,19 @@ def test_search_host_device_agree_after_interleave(seed):
         assert not np.isin(arr[found], stale).any()
 
 
-def test_cache_mirror_exact_under_insert_remove_sweep(rng):
+@pytest.mark.parametrize("emb_dtype", ["float32", "int8"])
+def test_cache_mirror_exact_under_insert_remove_sweep(rng, emb_dtype):
     """Cache-level interleave: insert_batch / TTL sweep_expired / lookups
-    (which evict expired matches) keep the device mirror exact."""
+    (which evict expired matches) keep the device mirror exact — for both
+    resident dtypes."""
     eng = PolicyEngine([
         CategoryConfig("a", threshold=0.90, ttl=50.0, quota=0.6),
         CategoryConfig("b", threshold=0.90, ttl=1e6, quota=0.6),
     ])
     clock = SimClock()
     cache = SemanticCache(eng, dim=DIM, capacity=512, clock=clock,
-                          index_kind="hnsw", use_device=True, seed=9)
+                          index_kind="hnsw", use_device=True, seed=9,
+                          emb_dtype=emb_dtype)
     rng2 = np.random.default_rng(9)
     vecs = _unit(rng2, 120)
     for step in range(6):

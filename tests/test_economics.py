@@ -8,9 +8,10 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core.economics import (CostModel, HYBRID_COSTS, VDB_COSTS,
-                                  break_even_under_load, category_economics,
-                                  expected_latency, workload_report)
+from repro.core.economics import (CostModel, HYBRID_COSTS, ResidencyModel,
+                                  VDB_COSTS, break_even_under_load,
+                                  category_economics, expected_latency,
+                                  residency_capacity_table, workload_report)
 
 
 def test_paper_break_even_numbers():
@@ -91,3 +92,37 @@ def test_table1_viability_classification():
 def test_never_viable_when_model_faster_than_fetch():
     m = CostModel("x", search_ms=2.0, hit_fetch_ms=5.0)
     assert m.break_even_hit_rate(4.0) == float("inf")
+
+
+def test_residency_model_quota_capacity():
+    """Quantized-tier quota math: int8 shrinks the embedding component
+    exactly 4x-ish (d·4 → d + 4), which multiplies the entries every
+    category quota holds out of the same byte budget."""
+    f32 = ResidencyModel(dim=384, emb_dtype="float32")
+    i8 = ResidencyModel(dim=384, emb_dtype="int8")
+    assert f32.emb_bytes() == 1536 and i8.emb_bytes() == 388
+    assert f32.emb_bytes() / i8.emb_bytes() == pytest.approx(3.96, abs=0.01)
+    # whole-entry ratio is diluted by graph + metadata, but stays > 2x
+    assert f32.bytes_per_entry() / i8.bytes_per_entry() > 2.0
+    # paper §5.1: fp32 at 384 dims ≈ 1.8 KB/entry in-memory
+    assert 1500 < f32.bytes_per_entry() < 2200
+    # quota entries scale linearly in budget and quota fraction
+    q40 = i8.quota_entries(0.40, budget_mb=1024.0)
+    assert q40 == pytest.approx(0.40 * 1024e6 / i8.bytes_per_entry(), abs=1)
+    assert i8.quota_entries(0.20, 1024.0) == pytest.approx(q40 / 2, abs=1)
+    assert i8.quota_entries(0.40, 1024.0) \
+        > 2 * f32.quota_entries(0.40, 1024.0)
+    with pytest.raises(ValueError):
+        i8.quota_entries(1.5, 1024.0)
+    with pytest.raises(ValueError):
+        ResidencyModel(emb_dtype="fp16").emb_bytes()
+
+
+def test_residency_capacity_table_shape():
+    tab = residency_capacity_table(512.0, {"code": 0.4, "chat": 0.15})
+    assert set(tab["dtypes"]) == {"float32", "int8"}
+    for dt, row in tab["dtypes"].items():
+        assert set(row["quota_entries"]) == {"code", "chat"}
+        assert row["entries_per_mb"] * row["bytes_per_entry"] <= 1e6
+    assert (tab["dtypes"]["int8"]["quota_entries"]["code"]
+            > 2 * tab["dtypes"]["float32"]["quota_entries"]["code"])

@@ -23,6 +23,13 @@ def _unit_rows(rng, n, d):
     return x / np.linalg.norm(x, axis=1, keepdims=True)
 
 
+def _quantize(rows):
+    """Per-row symmetric int8 — the PRODUCTION quantizer, so kernel
+    parity always tests the actual resident-tier layout."""
+    from repro.core.hnsw import quantize_rows
+    return quantize_rows(rows)
+
+
 # ---------------------------------------------------------------- flat_topk
 @pytest.mark.parametrize("N,d,B,block", [
     (1024, 384, 8, 256), (2048, 128, 16, 512), (512, 256, 8, 512),
@@ -110,6 +117,58 @@ def test_cache_topk_masked_wrapper_pads_arbitrary_shapes(rng):
     assert np.array_equal(np.asarray(i), np.asarray(ri))
 
 
+# ----------------------------------------------------- quantized flat_topk
+@pytest.mark.parametrize("N,d,B,block", [(1024, 384, 8, 256),
+                                         (512, 128, 8, 128)])
+def test_flat_topk_quantized_matches_ref(rng, N, d, B, block):
+    """int8 residency: the kernel's fused dequant (int8 tile × fp32 query,
+    score × per-row scale AFTER the dot) must equal the oracle scoring
+    the dequantized fp32 table — including the category mask and
+    tombstoned rows."""
+    table = _unit_rows(rng, N, d)
+    tq, ts = _quantize(table)
+    valid = rng.random(N) > 0.2
+    cats = rng.integers(0, 4, N).astype(np.int32)
+    q = _unit_rows(rng, B, d)
+    qc = rng.integers(-1, 4, B).astype(np.int32)
+    s, i = flat_topk(jnp.asarray(tq), jnp.asarray(valid), jnp.asarray(q),
+                     jnp.asarray(cats), jnp.asarray(qc), jnp.asarray(ts),
+                     block_n=block, interpret=True)
+    rs, ri = ref.flat_topk_masked_ref(jnp.asarray(tq), jnp.asarray(valid),
+                                      jnp.asarray(q), jnp.asarray(cats),
+                                      jnp.asarray(qc), jnp.asarray(ts))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+    # ...and the dequantized scores sit within int8 error of exact fp32
+    es, _ = ref.flat_topk_masked_ref(jnp.asarray(table), jnp.asarray(valid),
+                                     jnp.asarray(q), jnp.asarray(cats),
+                                     jnp.asarray(qc))
+    finite = np.isfinite(np.asarray(es))
+    np.testing.assert_allclose(np.asarray(s)[finite], np.asarray(es)[finite],
+                               atol=5e-3)
+
+
+def test_cache_topk_quantized_wrapper_pads_arbitrary_shapes(rng):
+    """ops.cache_topk with scales: padding rows get scale 0 and must never
+    win (N=1000 not a tile multiple, B=5)."""
+    table = _unit_rows(rng, 1000, 384)
+    tq, ts = _quantize(table)
+    valid = np.ones(1000, bool)
+    cats = (np.arange(1000) % 3).astype(np.int32)
+    q = _unit_rows(rng, 5, 384)
+    qc = np.array([0, 1, 2, -1, 0], np.int32)
+    s, i = ops.cache_topk(jnp.asarray(tq), jnp.asarray(valid),
+                          jnp.asarray(q), jnp.asarray(cats),
+                          jnp.asarray(qc), jnp.asarray(ts),
+                          block_n=256, interpret=True)
+    rs, ri = ref.flat_topk_masked_ref(jnp.asarray(tq), jnp.asarray(valid),
+                                      jnp.asarray(q), jnp.asarray(cats),
+                                      jnp.asarray(qc), jnp.asarray(ts))
+    assert s.shape == (5,)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+
 # ------------------------------------------------------------ gather_scores
 @pytest.mark.parametrize("N,d,B,K", [(256, 128, 4, 8), (512, 384, 2, 16)])
 def test_gather_scores_matches_ref(rng, N, d, B, K):
@@ -166,6 +225,55 @@ def test_hop_scores_dispatches_masked(rng):
                                         jnp.asarray(qc))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------- quantized gather_scores
+@pytest.mark.parametrize("N,d,B,K", [(256, 128, 4, 8), (512, 384, 2, 16)])
+def test_gather_scores_quantized_matches_ref(rng, N, d, B, K):
+    """int8 residency: the per-candidate scale DMA + in-kernel dequant
+    must equal the oracle, masked and unmasked, with -1 padding."""
+    table = _unit_rows(rng, N, d)
+    tq, ts = _quantize(table)
+    idx = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    cats = rng.integers(0, 3, N).astype(np.int32)
+    qc = rng.integers(-1, 3, B).astype(np.int32)
+    out = gather_scores(jnp.asarray(tq), jnp.asarray(idx), jnp.asarray(q),
+                        jnp.asarray(ts), interpret=True)
+    want = ref.gather_scores_ref(jnp.asarray(tq), jnp.asarray(idx),
+                                 jnp.asarray(q), jnp.asarray(ts))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    outm = gather_scores_masked(jnp.asarray(tq), jnp.asarray(idx),
+                                jnp.asarray(q), jnp.asarray(cats),
+                                jnp.asarray(qc), jnp.asarray(ts),
+                                interpret=True)
+    wantm = ref.gather_scores_masked_ref(jnp.asarray(tq), jnp.asarray(idx),
+                                         jnp.asarray(q), jnp.asarray(cats),
+                                         jnp.asarray(qc), jnp.asarray(ts))
+    np.testing.assert_allclose(np.asarray(outm), np.asarray(wantm),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hop_scores_quantized_dispatch(rng):
+    """ops.hop_scores with scales equals the quantized oracle and sits
+    within int8 error of the exact fp32 scores."""
+    N, d, B, K = 256, 384, 4, 16
+    table = _unit_rows(rng, N, d)
+    tq, ts = _quantize(table)
+    idx = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    q = _unit_rows(rng, B, d)
+    out = ops.hop_scores(jnp.asarray(tq), jnp.asarray(idx), jnp.asarray(q),
+                         scales=jnp.asarray(ts), interpret=True)
+    want = ref.gather_scores_ref(jnp.asarray(tq), jnp.asarray(idx),
+                                 jnp.asarray(q), jnp.asarray(ts))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    exact = ref.gather_scores_ref(jnp.asarray(table), jnp.asarray(idx),
+                                  jnp.asarray(q))
+    finite = idx >= 0
+    np.testing.assert_allclose(np.asarray(out)[finite],
+                               np.asarray(exact)[finite], atol=5e-3)
 
 
 # ------------------------------------------------------------ frontier_hop
@@ -227,6 +335,40 @@ def test_ops_frontier_hop_dispatch_agrees(rng):
     for a, b in zip(out_k[1:], out_r[1:]):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,d,B,F,M", [(64, 128, 3, 4, 8),
+                                       (128, 256, 2, 3, 16)])
+def test_frontier_hop_quantized_matches_ref(rng, N, d, B, F, M):
+    """int8 residency: the fused hop's per-candidate int8-row + scale-word
+    DMAs and in-kernel dequant must agree with the jnp oracle across
+    tombstones, wildcards and done queries, and sit within int8 error of
+    the fp32 scores on live lanes."""
+    emb, nbrs, meta, frontier, q, qc, done = _hop_inputs(rng, N, d, B, F, M)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    eq, es = _quantize(emb)
+    argsq = tuple(map(jnp.asarray, (eq, nbrs, meta, frontier, q, qc, done,
+                                    es)))
+    ids, route, res = frontier_hop(*argsq, interpret=True)
+    ri, rr, rs = ref.frontier_hop_ref(*argsq)
+    assert np.array_equal(np.asarray(ids), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(route), np.asarray(rr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(rs),
+                               rtol=1e-4, atol=1e-4)
+    # dispatch parity (kernel vs ref), quantized
+    out_k = ops.frontier_hop(*argsq, impl="pallas", interpret=True)
+    out_r = ops.frontier_hop(*argsq, impl="ref")
+    assert np.array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]))
+    for a, b in zip(out_k[1:], out_r[1:]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    # quantization error bound vs the exact fp32 hop
+    _, er, _ = ref.frontier_hop_ref(*map(jnp.asarray, (
+        emb, nbrs, meta, frontier, q, qc, done)))
+    live = np.asarray(ids) >= 0
+    np.testing.assert_allclose(np.asarray(route)[live],
+                               np.asarray(er)[live], atol=2e-2)
 
 
 # ---------------------------------------------------------- scatter_update

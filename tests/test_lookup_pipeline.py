@@ -142,9 +142,10 @@ def test_one_compilation_serves_all_serve_batch_sizes():
     before = cache_size() if cache_size else None
     for B in range(1, 9):
         q = vecs[rng.integers(0, len(vecs), B)]
-        i, s, c = idx.search_classified(q, np.full(B, 0.9, np.float32),
-                                        categories=np.zeros(B, np.int32))
+        i, s, c, cand = idx.search_classified(q, np.full(B, 0.9, np.float32),
+                                              categories=np.zeros(B, np.int32))
         assert i.shape == (B,) and s.shape == (B,) and c.shape == (B,)
+        assert cand.shape == (B,)
     assert idx.search_stats["searches"] == 8
     assert idx.search_stats["compilations"] == 1, \
         "batch bucketing regressed: distinct padded shapes per serve size"

@@ -1,0 +1,314 @@
+"""Quantized embedding data plane (int8 residency + fp32 re-rank tier).
+
+Covers the whole-stack contract of ISSUE 4:
+
+* the per-slot scale table rides the dirty-row delta sync (host/device
+  coherence of the QUANTIZED mirror, delta path included);
+* deterministic byte counters: int8 residency shrinks the embedding
+  component of sync and gather traffic ~4x at identical row counts;
+* the τ-boundary property: with the fp32 re-rank tier, hit/miss
+  decisions on the int8 device path are IDENTICAL to the fp32 oracle
+  for queries engineered to land inside the margin band on either side
+  of τ — quantization may change latency, never decisions;
+* the fp32 embedding stored next to the document (storage round trip,
+  re-rank fallback).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SemanticCache, SimClock
+from repro.core.hnsw import (FlatIndex, HNSWIndex, HNSWParams, INVALID,
+                             quantize_rows)
+from repro.core.policy import CategoryConfig, PolicyEngine
+from repro.core.storage import Document, InMemoryStore
+
+DIM = 128
+
+
+def _unit(rng, n, d=DIM):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _small_params(**kw):
+    return HNSWParams(M=4, M0=8, ef_construction=16, ef_search=16,
+                      beam=8, max_hops=5, n_entries=4, **kw)
+
+
+def _boundary_query(rng, v, target):
+    """A unit query whose cosine against unit ``v`` is exactly ``target``:
+    q = t·v + √(1−t²)·r with r ⊥ v."""
+    r = rng.standard_normal(v.shape).astype(np.float32)
+    r -= (r @ v) * v
+    r /= np.linalg.norm(r)
+    q = target * v + np.sqrt(max(0.0, 1.0 - target * target)) * r
+    return (q / np.linalg.norm(q)).astype(np.float32)
+
+
+# ------------------------------------------------------------ quantize_rows
+def test_quantize_rows_roundtrip_error_bound(rng):
+    """Symmetric per-row int8: dequant error per component ≤ scale/2, and
+    a zero row dequantizes to exactly zero (no NaN from the eps scale)."""
+    v = np.vstack([_unit(rng, 16), np.zeros((1, DIM), np.float32)])
+    q, s = quantize_rows(v)
+    assert q.dtype == np.int8 and s.dtype == np.float32
+    deq = q.astype(np.float32) * s[:, None]
+    assert np.abs(deq - v).max() <= (s[:, None] / 2 + 1e-7).max()
+    assert np.all(deq[-1] == 0.0)
+
+
+# ----------------------------------------------- scale table rides the sync
+@pytest.mark.parametrize("index_cls", ["hnsw", "flat"])
+def test_quantized_mirror_coherent_under_interleave(index_cls, rng):
+    """Random add/remove interleave on an int8 index: after every flush
+    the device int8 emb AND the per-slot scale table equal the host
+    quantized tables exactly — including across the delta path."""
+    if index_cls == "hnsw":
+        idx = HNSWIndex(DIM, 256, params=_small_params(emb_dtype="int8"),
+                        seed=3)
+    else:
+        idx = FlatIndex(DIM, 256, emb_dtype="int8")
+    live = []
+    for step in range(30):
+        if rng.random() < 0.6 or not live:
+            b = int(rng.integers(1, 6))
+            live.extend(int(s) for s in idx.add_batch(_unit(rng, b)))
+        else:
+            victim = live.pop(int(rng.integers(len(live))))
+            idx.remove(victim)
+        if step % 4 == 3:
+            t = idx.device_tables()
+            assert np.asarray(t["emb"]).dtype == np.int8
+            assert np.array_equal(np.asarray(t["emb"]), idx.emb_q)
+            assert np.array_equal(np.asarray(t["scale"]), idx.emb_scale)
+            assert np.array_equal(np.asarray(t["valid"]), idx.valid)
+    t = idx.device_tables()
+    assert np.array_equal(np.asarray(t["emb"]), idx.emb_q)
+    assert np.array_equal(np.asarray(t["scale"]), idx.emb_scale)
+    assert idx.sync_stats["delta_updates"] > 0, \
+        "interleave never exercised the delta path"
+    # host fp32 control plane and quantized tier stay in lockstep
+    q, s = quantize_rows(idx.emb[idx.valid])
+    assert np.array_equal(idx.emb_q[idx.valid], q)
+    np.testing.assert_array_equal(idx.emb_scale[idx.valid], s)
+
+
+# ----------------------------------------------------- byte-count contracts
+def test_sync_and_gather_bytes_shrink_4x(rng):
+    """Deterministic counters: identical inserts on fp32 and int8 indexes
+    sync the same ROWS but the int8 emb component is exactly
+    (d·4)/(d+4) ≈ 4x smaller; gather bytes per row shrink the same way."""
+    d = 384
+    vecs = _unit(rng, 40, d)
+    idxs = {}
+    for dt in ("float32", "int8"):
+        idx = HNSWIndex(d, 512, params=_small_params(emb_dtype=dt), seed=7)
+        idx.add_batch(vecs[:30])
+        idx.device_tables()                      # full upload
+        idx.add_batch(vecs[30:])
+        idx.device_tables()                      # delta flush
+        idxs[dt] = idx
+    f32, i8 = idxs["float32"], idxs["int8"]
+    assert f32.sync_stats["rows_synced"] == i8.sync_stats["rows_synced"]
+    assert f32.sync_stats["delta_updates"] >= 1
+    ratio = d * 4 / (d + 4)
+    assert f32.emb_row_nbytes() / i8.emb_row_nbytes() == pytest.approx(ratio)
+    assert (f32.sync_stats["emb_bytes_synced"]
+            / i8.sync_stats["emb_bytes_synced"]) == pytest.approx(ratio)
+    assert f32.sync_stats["bytes_synced"] > i8.sync_stats["bytes_synced"]
+    # the gather cost per row feeds last_search the same way
+    q = vecs[:8]
+    taus = np.full(8, 2.0, np.float32)           # never done: max gathers
+    for idx in (f32, i8):
+        idx.search_batch(q, taus)
+    rows_f32 = int(np.sum(np.asarray(f32.last_search["rows_gathered"])))
+    rows_i8 = int(np.sum(np.asarray(i8.last_search["rows_gathered"])))
+    assert f32.last_search["gather_row_nbytes"] == d * 4
+    assert i8.last_search["gather_row_nbytes"] == d + 4
+    gb_f32 = rows_f32 * f32.last_search["gather_row_nbytes"]
+    gb_i8 = rows_i8 * i8.last_search["gather_row_nbytes"]
+    assert gb_f32 / gb_i8 > 3.0                  # ~4x modulo beam drift
+
+
+# ----------------------------------------------------- τ-boundary property
+TAU = 0.90
+
+
+def _build_pair(rng, n=24, index_kind="hnsw", margin=0.02):
+    eng = lambda: PolicyEngine([
+        CategoryConfig("a", threshold=TAU, ttl=1e9, quota=0.6,
+                       rerank_margin=margin),
+        CategoryConfig("b", threshold=TAU, ttl=1e9, quota=0.6,
+                       rerank_margin=margin),
+    ])
+    vecs = _unit(rng, n)
+    cats = ["a" if i % 2 else "b" for i in range(n)]
+    caches = {}
+    for dt in ("float32", "int8"):
+        c = SemanticCache(eng(), dim=DIM, capacity=256, clock=SimClock(),
+                          index_kind=index_kind, use_device=True, seed=11,
+                          emb_dtype=dt)
+        c.insert_batch(vecs, cats, [f"q{i}" for i in range(n)],
+                       [f"r{i}" for i in range(n)])
+        caches[dt] = c
+    return caches, vecs, cats
+
+
+@pytest.mark.parametrize("index_kind", ["hnsw", "flat"])
+def test_tau_boundary_decisions_match_fp32_oracle(index_kind):
+    """THE acceptance property: queries engineered to score inside the
+    margin band on either side of τ (where raw int8 scores CAN cross the
+    threshold the wrong way) must produce identical hit/miss decisions
+    and identical slots on the int8 path (re-rank tier on) and the fp32
+    oracle path. Random unit vectors at d=128 are near-orthogonal, so
+    each query's decision is owned by its target entry."""
+    rng = np.random.default_rng(99)
+    caches, vecs, cats = _build_pair(rng, index_kind=index_kind)
+    # Offsets span both sides of the band; the exact tie (offset 0) is
+    # excluded — at score == τ two fp32 summation orders legitimately
+    # disagree at the 1e-7 level, on ANY implementation pair.
+    offsets = [-0.03, -0.012, -0.006, -0.002, -0.0005,
+               0.0005, 0.002, 0.006, 0.012, 0.03]
+    targets = rng.integers(0, len(vecs), len(offsets))
+    q = np.stack([_boundary_query(rng, vecs[t], TAU + off)
+                  for t, off in zip(targets, offsets)])
+    qcats = [cats[t] for t in targets]
+    res32 = caches["float32"].lookup_batch(q, qcats)
+    res8 = caches["int8"].lookup_batch(q, qcats)
+    for off, a, b in zip(offsets, res32, res8):
+        assert a.hit == b.hit, \
+            f"decision diverged at τ{off:+.4f}: fp32={a.reason} int8={b.reason}"
+        assert a.reason == b.reason
+        if a.hit:
+            assert a.slot == b.slot
+    # the band actually exercised the re-rank tier
+    m8 = caches["int8"].metrics
+    assert sum(s.reranks for s in m8.per_category.values()) > 0
+    assert caches["int8"].last_lookup_stats["emb_dtype"] == "int8"
+
+
+def test_rerank_corrects_both_directions():
+    """Force decisions through the re-rank tier by planting quantized
+    scores on the wrong side of τ: a borderline device 'hit' whose exact
+    score is below τ demotes to a miss, and a borderline miss whose
+    exact score clears τ promotes to a hit — each counted as a flip."""
+    rng = np.random.default_rng(5)
+    caches, vecs, cats = _build_pair(rng, index_kind="flat")
+    c8 = caches["int8"]
+    slot = 0
+    # Direction 1: exact score just UNDER τ, quantized copy reads HIGH.
+    q_under = _boundary_query(rng, vecs[slot], TAU - 0.004)
+    c8.index.emb_q[slot], c8.index.emb_scale[slot] = (
+        a[0] for a in quantize_rows(vecs[slot][None]))
+    c8.index.emb_scale[slot] *= 1.008            # inflate: quant score > τ
+    c8.index._dirty.add(slot)
+    c8.index._version += 1
+    r = c8.lookup_batch(q_under[None], [cats[slot]])[0]
+    assert not r.hit and r.reason == "no_match"
+    assert r.score < TAU                         # the EXACT score won
+    # Direction 2: exact score just OVER τ, quantized copy reads LOW.
+    q_over = _boundary_query(rng, vecs[slot], TAU + 0.004)
+    c8.index.emb_scale[slot] /= 1.016            # deflate: quant score < τ
+    c8.index._dirty.add(slot)
+    c8.index._version += 1
+    r = c8.lookup_batch(q_over[None], [cats[slot]])[0]
+    assert r.hit and r.score >= TAU
+    assert r.slot == slot
+    st = c8.metrics.cat(cats[slot])
+    assert st.rerank_flips >= 2
+
+
+def test_margin_zero_disables_rerank():
+    rng = np.random.default_rng(21)
+    caches, vecs, cats = _build_pair(rng, index_kind="flat", margin=0.0)
+    q = np.stack([_boundary_query(rng, vecs[0], TAU + 0.001)])
+    caches["int8"].lookup_batch(q, [cats[0]])
+    m = caches["int8"].metrics
+    assert sum(s.reranks for s in m.per_category.values()) == 0
+
+
+# ------------------------------------------------ storage-side fp32 ground truth
+def test_document_embedding_json_roundtrip(rng):
+    v = _unit(rng, 1)[0]
+    doc = Document(7, "req", "resp", 1.5, "c", {"k": 1}, embedding=v)
+    back = Document.from_json(doc.to_json())
+    np.testing.assert_allclose(back.embedding_array(), v, rtol=1e-6)
+    assert back.nbytes() >= 4 * DIM
+    assert Document(8, "r", "s", 0.0).embedding_array() is None
+
+
+def test_insert_stores_fp32_embedding_next_to_doc(rng):
+    eng = PolicyEngine([CategoryConfig("c", threshold=TAU, ttl=1e9,
+                                       quota=1.0)])
+    cache = SemanticCache(eng, dim=DIM, capacity=64, clock=SimClock(),
+                          index_kind="flat", use_device=True,
+                          emb_dtype="int8")
+    v = _unit(rng, 4)
+    slots = cache.insert_batch(v, ["c"] * 4, ["q"] * 4, ["r"] * 4)
+    for i, slot in enumerate(slots):
+        doc = cache.store.get(int(cache.slot_doc[slot]))
+        np.testing.assert_array_equal(doc.embedding_array(), v[i])
+
+
+def test_docs_carry_embedding_only_under_quantized_residency(rng):
+    """The fp32 index is already exact — its documents skip the ~4·dim
+    byte duplicate; only quantized caches store the re-rank copy."""
+    eng = lambda: PolicyEngine([CategoryConfig("c", threshold=TAU,
+                                               ttl=1e9, quota=1.0)])
+    v = _unit(rng, 2)
+    for dt, want in (("float32", False), ("int8", True)):
+        cache = SemanticCache(eng(), dim=DIM, capacity=64, clock=SimClock(),
+                              index_kind="flat", use_device=True,
+                              emb_dtype=dt)
+        slots = cache.insert_batch(v, ["c"] * 2, ["q"] * 2, ["r"] * 2)
+        doc = cache.store.get(int(cache.slot_doc[slots[0]]))
+        assert (doc.embedding is not None) == want, dt
+
+
+def test_rerank_promoted_hit_fetches_doc_once(rng):
+    """A borderline query that re-ranks to a hit must serve its response
+    from the document the re-rank already fetched — one store round trip,
+    not two."""
+    class CountingStore(InMemoryStore):
+        def __init__(self):
+            super().__init__()
+            self.gets = 0
+
+        def get(self, doc_id):
+            self.gets += 1
+            return super().get(doc_id)
+
+    eng = PolicyEngine([CategoryConfig("c", threshold=TAU, ttl=1e9,
+                                       quota=1.0)])
+    store = CountingStore()
+    cache = SemanticCache(eng, dim=DIM, capacity=64, clock=SimClock(),
+                          index_kind="flat", use_device=True,
+                          emb_dtype="int8", store=store)
+    v = _unit(rng, 4)
+    slots = cache.insert_batch(v, ["c"] * 4, ["q"] * 4, ["r"] * 4)
+    q = _boundary_query(rng, v[0], TAU + 0.002)     # inside the band
+    store.gets = 0
+    r = cache.lookup_batch(q[None], ["c"])[0]
+    assert r.hit and r.slot == slots[0] and r.response == "r"
+    assert cache.metrics.cat("c").reranks == 1
+    assert store.gets == 1
+
+
+def test_rerank_falls_back_to_host_row_when_store_copy_missing(rng):
+    """Crash recovery: if the store lost the embedding, the re-rank tier
+    falls back to the index's host fp32 control-plane row — decisions
+    still exact, never an exception."""
+    eng = PolicyEngine([CategoryConfig("c", threshold=TAU, ttl=1e9,
+                                       quota=1.0)])
+    cache = SemanticCache(eng, dim=DIM, capacity=64, clock=SimClock(),
+                          index_kind="flat", use_device=True,
+                          emb_dtype="int8")
+    v = _unit(rng, 4)
+    slots = cache.insert_batch(v, ["c"] * 4, ["q"] * 4, ["r"] * 4)
+    doc = cache.store.get(int(cache.slot_doc[slots[0]]))
+    doc.embedding = None                        # store copy lost
+    q = _boundary_query(rng, v[0], TAU + 0.002)
+    r = cache.lookup_batch(q[None], ["c"])[0]
+    assert r.hit and r.slot == slots[0]
+    assert cache.metrics.cat("c").reranks >= 1
