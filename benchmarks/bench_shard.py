@@ -1,0 +1,286 @@
+"""Sharded cache tier: placement balance + steady-state fan-out cost.
+
+Two phases, gated ONLY on deterministic counters (wall-clock on this
+container drifts ~30 %, so latency is reported but never gated):
+
+    placement — fill a sharded cache from the Table-1 workload mix
+                (traffic-proportional inserts, quota-capped) under the
+                quota-byte ``ShardPlanner`` and under the crc32-mod
+                baseline; the planner's resident-byte imbalance
+                (max/mean shard bytes) must be STRICTLY better — crc32
+                piles the head categories onto one shard (83 % of quota
+                bytes on one of two shards).
+    steady    — lookup/insert interleave through the fan-out path across
+                a total-capacity sweep: per-shard bytes synced per step
+                must stay flat (each shard's delta sync is O(its share
+                of the batch), independent of how large the tier grows),
+                and per-shard compilations must equal 1 (the bucketed
+                sub-batches every fan-out produces reuse one compiled
+                program per shard).
+
+Emits CSV rows and ``results/BENCH_shard.json`` (CI smoke runs
+``--quick --check``).
+
+    PYTHONPATH=src python -m benchmarks.bench_shard [--quick] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, index_meta, write_bench_json
+from repro.core.clock import SimClock
+from repro.core.embedding import SyntheticCategorySpace
+from repro.core.policy import CategoryConfig, PolicyEngine, paper_policies
+from repro.core.shard import CRC32Planner, ShardPlanner, ShardedSemanticCache
+from repro.core.workload import TABLE1_WORKLOAD
+
+DIM = 96
+CAPACITIES = (2048, 8192, 32768)        # 16x sweep
+QUICK_CAPACITIES = (2048, 8192)         # 4x sweep (CI smoke)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: placement balance on the Table-1 workload.
+# ---------------------------------------------------------------------------
+
+def _fill_table1(cache, n_inserts: int, seed: int) -> None:
+    """Traffic-proportional inserts (quotas cap the heads, as they would
+    in steady state): each category receives share × n_inserts distinct
+    intents in interleaved chunks."""
+    rng = np.random.default_rng(seed)
+    spaces = {s.name: SyntheticCategorySpace(
+        name=s.name, n_centers=max(s.pool_size, n_inserts), sigma=0.01,
+        loose_frac=0.0, dim=DIM, seed=s.seed) for s in TABLE1_WORKLOAD}
+    todo = {s.name: int(s.traffic_share * n_inserts)
+            for s in TABLE1_WORKLOAD}
+    next_intent = {s.name: 0 for s in TABLE1_WORKLOAD}
+    chunk = 256
+    while any(v > 0 for v in todo.values()):
+        for name in todo:
+            n = min(chunk, todo[name])
+            if n == 0:
+                continue
+            todo[name] -= n
+            lo = next_intent[name]
+            next_intent[name] += n
+            embs = np.stack([spaces[name].sample(lo + i, rng)
+                             for i in range(n)])
+            cache.insert_batch(embs, [name] * n,
+                               [f"{name}:q{lo + i}" for i in range(n)],
+                               [f"{name}:r{lo + i}" for i in range(n)])
+
+
+def _imbalance(per_shard_bytes: list[int]) -> float:
+    mean = sum(per_shard_bytes) / len(per_shard_bytes)
+    return max(per_shard_bytes) / mean if mean > 0 else 1.0
+
+
+def run_placement(n_shards: int = 2, capacity: int = 4096,
+                  seed: int = 0) -> dict:
+    """Resident-byte spread: quota-byte planner vs the crc32 baseline,
+    measured from actually-resident entries (not just the plan)."""
+    results = {}
+    for kind in ("planner", "crc32"):
+        policies = PolicyEngine(paper_policies())
+        planner = (None if kind == "planner"
+                   else CRC32Planner(n_shards))
+        cache = ShardedSemanticCache(policies, dim=DIM, capacity=capacity,
+                                     n_shards=n_shards, clock=SimClock(),
+                                     index_kind="flat", planner=planner,
+                                     seed=seed)
+        _fill_table1(cache, n_inserts=capacity, seed=seed)
+        rep = cache.shard_report()
+        rbytes = [r["resident_bytes"] for r in rep]
+        results[kind] = {
+            "per_shard_resident_bytes": rbytes,
+            "per_shard_entries": [r["entries"] for r in rep],
+            "imbalance": round(_imbalance(rbytes), 4),
+            "assignments": (dict(cache.planner.assignments)
+                            if kind == "planner" else
+                            {s.name: cache.planner.shard_of(s.name)
+                             for s in TABLE1_WORKLOAD}),
+        }
+        emit(f"shard.placement.{kind}.n{n_shards}", 0.0,
+             imbalance=results[kind]["imbalance"],
+             entries=sum(results[kind]["per_shard_entries"]))
+    results["planned_imbalance"] = round(ShardPlanner.from_policies(
+        PolicyEngine(paper_policies()), n_shards, capacity,
+        dim=DIM).imbalance(), 4)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: steady-state fan-out across a capacity sweep.
+# ---------------------------------------------------------------------------
+
+def _steady_policies(names) -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig(n, threshold=0.88, ttl=1e9,
+                       quota=0.9 / len(names)) for n in names])
+
+
+def run_steady_one(capacity: int, n_shards: int, *, steps: int,
+                   warmup: int, prefill: int, seed: int) -> dict:
+    """One capacity point: fixed-composition fan-out batches (each shard
+    sees a constant sub-batch size → exactly one compiled program per
+    shard), half revisits / half fresh traffic per category."""
+    names = [f"s{i}" for i in range(2 * n_shards)]   # two categories/shard
+    rng = np.random.default_rng(seed)
+    spaces = {n: SyntheticCategorySpace(name=n, n_centers=500_000,
+                                        sigma=0.015, loose_frac=0.0,
+                                        dim=DIM, seed=seed + k)
+              for k, n in enumerate(names)}
+    cache = ShardedSemanticCache(_steady_policies(names), dim=DIM,
+                                 capacity=capacity, n_shards=n_shards,
+                                 clock=SimClock(), index_kind="hnsw",
+                                 use_device=True, seed=seed)
+    per_cat = prefill // len(names)
+    for n in names:
+        embs = np.stack([spaces[n].sample(i, rng) for i in range(per_cat)])
+        cache.insert_batch(embs, [n] * per_cat,
+                           [f"{n}:q{i}" for i in range(per_cat)],
+                           [f"{n}:r{i}" for i in range(per_cat)])
+
+    def make_batch(step: int):
+        """4 queries per category: 2 revisits + 2 fresh — composition
+        constant, so every shard's padded sub-batch shape repeats."""
+        embs, cats = [], []
+        for n in names:
+            hot = rng.integers(0, per_cat, 2)
+            cold = [per_cat + 2 * step, per_cat + 2 * step + 1]
+            for i in np.concatenate([hot, cold]):
+                embs.append(spaces[n].sample(int(i), rng))
+                cats.append(n)
+        return np.stack(embs), cats
+
+    # Priming round: initial full upload + the one compile, outside the
+    # measured steady state.
+    q, cats = make_batch(0)
+    cache.lookup_batch(q, cats)
+
+    last = [s.index.sync_stats["bytes_synced"] for s in cache.shards]
+    shard_bytes = [[] for _ in range(n_shards)]
+    step_ms, hits, lookups = [], 0, 0
+    for s in range(warmup + steps):
+        q, cats = make_batch(s + 1)
+        t0 = time.perf_counter()
+        results = cache.lookup_batch(q, cats)
+        miss = [i for i, r in enumerate(results) if not r.hit]
+        if miss:
+            cache.insert_batch(q[miss], [cats[i] for i in miss],
+                               [f"mq{s}_{i}" for i in miss],
+                               [f"mr{s}_{i}" for i in miss])
+        for sh in cache.shards:     # attribute the step's writes to it
+            sh.index.device_tables()
+        t1 = time.perf_counter()
+        if s >= warmup:
+            step_ms.append((t1 - t0) * 1e3)
+            for k, sh in enumerate(cache.shards):
+                now = sh.index.sync_stats["bytes_synced"]
+                shard_bytes[k].append(now - last[k])
+            hits += len(results) - len(miss)
+            lookups += len(results)
+        last = [sh.index.sync_stats["bytes_synced"] for sh in cache.shards]
+
+    out = {
+        "capacity": capacity,
+        "n_shards": n_shards,
+        "hit_rate": round(hits / max(1, lookups), 4),
+        "p50_step_ms": round(float(np.percentile(step_ms, 50)), 3),
+        "per_shard_bytes_per_step": [int(np.mean(b)) for b in shard_bytes],
+        "per_shard_compilations": [s.index.search_stats["compilations"]
+                                   for s in cache.shards],
+        "per_shard_full_uploads": [s.index.sync_stats["full_uploads"]
+                                   for s in cache.shards],
+        **index_meta(cache.shards[0].index, n_shards=n_shards),
+    }
+    emit(f"shard.steady.n{n_shards}.cap{capacity}",
+         float(np.mean(step_ms)) * 1e3,
+         p50_ms=out["p50_step_ms"], hit_rate=out["hit_rate"],
+         sync_bytes=sum(out["per_shard_bytes_per_step"]),
+         compilations=max(out["per_shard_compilations"]))
+    return out
+
+
+def run(capacities=CAPACITIES, n_shards: int = 2, steps: int = 12,
+        warmup: int = 3, prefill: int = 600, seed: int = 0,
+        out_dir: str = "results") -> dict:
+    placement = run_placement(n_shards=n_shards, seed=seed)
+    runs = [run_steady_one(c, n_shards, steps=steps, warmup=warmup,
+                           prefill=prefill, seed=seed) for c in capacities]
+    # Per-shard flatness across the sweep: shard k's delta bytes/step at
+    # the largest capacity vs the smallest (deterministic counters).
+    flatness = []
+    for k in range(n_shards):
+        per_cap = [r["per_shard_bytes_per_step"][k] for r in runs]
+        flatness.append(round(max(per_cap) / max(min(per_cap), 1), 3))
+    payload = {
+        "n_shards": n_shards, "capacities": list(capacities),
+        "steps": steps, "prefill": prefill,
+        "placement": placement,
+        "steady": runs,
+        "per_shard_bytes_flatness": flatness,
+        "max_compilations": max(max(r["per_shard_compilations"])
+                                for r in runs),
+    }
+    emit("shard.gates", 0.0,
+         planner_imbalance=placement["planner"]["imbalance"],
+         crc32_imbalance=placement["crc32"]["imbalance"],
+         bytes_flatness=max(flatness),
+         compilations=payload["max_compilations"])
+    write_bench_json("shard", payload, out_dir=out_dir)
+    return payload
+
+
+def check(payload: dict) -> None:
+    """The deterministic acceptance gates (CI smoke)."""
+    pl = payload["placement"]
+    if not pl["planner"]["imbalance"] < pl["crc32"]["imbalance"]:
+        raise SystemExit(
+            f"placement regression: planner imbalance "
+            f"{pl['planner']['imbalance']} not better than crc32 "
+            f"{pl['crc32']['imbalance']} on the Table-1 workload")
+    if max(payload["per_shard_bytes_flatness"]) > 1.5:
+        raise SystemExit(
+            f"fan-out sync regression: per-shard bytes/step vary "
+            f"{payload['per_shard_bytes_flatness']}x across the "
+            f"capacity sweep (expected ~1.0 — a shard's delta sync "
+            f"must not scale with total tier capacity)")
+    if payload["max_compilations"] != 1:
+        raise SystemExit(
+            f"bucketing regression: a shard compiled "
+            f"{payload['max_compilations']} programs for the "
+            f"fixed-composition fan-out (expected exactly 1)")
+    print(f"# check ok: planner {pl['planner']['imbalance']} < crc32 "
+          f"{pl['crc32']['imbalance']}, bytes flatness "
+          f"{payload['per_shard_bytes_flatness']}, 1 compile/shard")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 capacities, fewer steps")
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the placement/flatness/"
+                         "compilation gates hold")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.quick:
+        caps, steps, warmup, prefill, shards = \
+            QUICK_CAPACITIES, 8, 2, 400, 2
+    else:
+        caps, steps, warmup, prefill, shards = CAPACITIES, 12, 3, 600, 4
+    payload = run(capacities=caps, n_shards=args.shards or shards,
+                  steps=steps, warmup=warmup, prefill=prefill,
+                  out_dir=args.out)
+    if args.check:
+        check(payload)
+
+
+if __name__ == "__main__":
+    main()

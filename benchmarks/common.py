@@ -34,15 +34,19 @@ def write_bench_json(name: str, payload: dict, out_dir: str = "results"
     return path
 
 
-def index_meta(index) -> dict:
+def index_meta(index, n_shards: int = 1) -> dict:
     """Embedding-tier layout of a DeviceResidentIndex, recorded in every
     BENCH_*.json payload so perf trajectories stay comparable across
-    resident dtypes: the dtype, the per-row embedding payload (incl. the
-    int8 scale word) and the full synced row size."""
+    resident dtypes AND topologies: the dtype, the per-row embedding
+    payload (incl. the int8 scale word), the full synced row size, and
+    the shard count (1 = single device-resident index; for a
+    ShardedSemanticCache pass its ``n_shards`` alongside one shard's
+    index — per-row layout is identical across shards)."""
     return {
         "emb_dtype": index.emb_dtype,
         "emb_row_bytes": index.emb_row_nbytes(),
         "row_nbytes": index.row_nbytes(),
+        "n_shards": int(n_shards),
     }
 
 

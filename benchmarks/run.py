@@ -18,6 +18,9 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
                         size, counter-gated (bucketing, done-query freeze)
     bench_quant       — quantized residency: fp32 vs int8 byte ratios
                         (resident / synced / gathered, ~4x), counter-gated
+    bench_shard       — sharded tier: planner-vs-crc32 placement balance
+                        on Table 1 + per-shard sync flatness across a
+                        capacity sweep, counter-gated
 """
 
 from __future__ import annotations
@@ -30,7 +33,8 @@ import traceback
 from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
                         bench_kernels, bench_latency, bench_longtail,
                         bench_lookup, bench_memory, bench_quant,
-                        bench_routing, bench_serve, bench_thresholds)
+                        bench_routing, bench_serve, bench_shard,
+                        bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -45,6 +49,7 @@ ALL = {
     "serve": bench_serve.run,
     "lookup": bench_lookup.run,
     "quant": bench_quant.run,
+    "shard": bench_shard.run,
 }
 
 

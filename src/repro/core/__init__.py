@@ -5,6 +5,8 @@ Modules:
     embedding  — 384-d feature-hash embedder + synthetic category spaces (§3.1)
     hnsw       — TPU-adapted batched-frontier HNSW index (§5, §5.3)
     cache      — hybrid cache: Algorithm 1 lookup, insert, evict, quotas (§5)
+    shard      — sharded cache tier: quota-byte placement planner, fan-out
+                 masked search, live category migration (§7.4 scaling)
     storage    — external document stores + vector-DB baseline emulator (§4)
     economics  — break-even analysis, eqs (1)-(6) (§4.4, §5.5, §7.5.1)
     workload   — heterogeneous category workload generator (Table 1)
@@ -19,6 +21,12 @@ from repro.core.policy import (  # noqa: F401
     LoadSignal,
 )
 from repro.core.cache import SemanticCache, CacheResult  # noqa: F401
+from repro.core.shard import (  # noqa: F401
+    ShardPlanner,
+    ShardedSemanticCache,
+    CategoryMigration,
+    crc32_shard,
+)
 from repro.core.economics import (  # noqa: F401
     break_even_hit_rate,
     expected_latency,

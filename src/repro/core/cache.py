@@ -93,10 +93,23 @@ class SemanticCache:
                  clock: Clock | None = None, index_kind: str = "hnsw",
                  use_device: bool = False, search_ms: float = 2.0,
                  insert_ms: float = 1.0, l1_capacity: int = 0,
-                 seed: int = 0, emb_dtype: str = "float32"):
+                 seed: int = 0, emb_dtype: str = "float32",
+                 quota_capacity: int | None = None,
+                 doc_id_start: int = 0, doc_id_step: int = 1):
         self.policies = policies
         self.dim = dim
         self.capacity = capacity
+        # Quota ceilings are fractions of ``quota_capacity`` (default: the
+        # physical capacity). A shard of a ShardedSemanticCache passes the
+        # GLOBAL capacity here so a category keeps the same entry ceiling
+        # (int(quota · total)) it would have in one unsharded cache, while
+        # ``capacity`` stays the shard's own preallocated table size.
+        self.quota_capacity = capacity if quota_capacity is None \
+            else quota_capacity
+        # Doc ids stride so N shards sharing a workload mint disjoint id
+        # sequences (shard i starts at i, steps by N) — CacheResult.doc_id
+        # stays globally unique without a shared id service.
+        self._doc_id_step = doc_id_step
         self.clock = clock or SimClock()
         self.store = store if store is not None else InMemoryStore()
         self.use_device = use_device
@@ -134,7 +147,7 @@ class SemanticCache:
         self.slot_doc = np.full(capacity, INVALID, np.int64)
         self.slot_valid = np.zeros(capacity, bool)
         self._cat_names: dict[int, str] = {}
-        self._next_doc_id = 0
+        self._next_doc_id = doc_id_start
         # Device-search observability (hops, rows gathered) from the last
         # lookup_batch, materialized at the single host-conversion point.
         self.last_lookup_stats: dict = {}
@@ -505,7 +518,7 @@ class SemanticCache:
             e = eff[c]
             cid = cids[c]
             st = self.metrics.cat(c)
-            cat_quota = int(e.quota * self.capacity)
+            cat_quota = int(e.quota * self.quota_capacity)
             n_cat = cat_counts.get(cid, 0) + pending_counts.get(cid, 0)
             if n_cat >= max(1, cat_quota):
                 slot, pos = pick_victim(cid)
@@ -540,7 +553,7 @@ class SemanticCache:
         docs = []
         for p_i, _, _ in pending:
             doc_id = self._next_doc_id
-            self._next_doc_id += 1
+            self._next_doc_id += self._doc_id_step
             # Under quantized residency the fp32 embedding travels WITH
             # the document (external tier): the re-rank tier's exact
             # copy. The fp32 index already IS exact, so its documents
@@ -565,6 +578,81 @@ class SemanticCache:
             self.metrics.cat(categories[p_i]).inserts += 1
             slots_out[p_i] = slot
         return slots_out
+
+    # ---------------------------------------------------------------- migration
+    def adopt_entries(self, embeddings: np.ndarray,
+                      categories: Sequence[str], inserted: np.ndarray,
+                      hits: np.ndarray,
+                      docs: Sequence[Document]) -> list[tuple[int, int]]:
+        """Materialize fully-formed entries exported from another shard
+        (core/shard.py live migration): the fp32 rows re-enter through
+        ``index.add_batch`` (graph wiring + dirty log + deterministic
+        requantization, so the int8+scale mirror comes out bit-identical
+        to the source's), while ``inserted`` timestamps and hit counts
+        are PRESERVED — ages, TTL expiry and eviction scores carry over
+        unchanged. Documents are re-minted under this cache's doc-id
+        sequence with their payloads (request/response/meta/created_at/
+        fp32 embedding) intact.
+
+        Deliberately bypasses the compliance/quota gates and the metrics
+        counters: a migration is a move of already-admitted entries, not
+        new traffic, and the category's quota ceiling is a fraction of
+        the shared ``quota_capacity`` — the same ceiling that admitted
+        the entries at their source. Returns (slot, doc_id) per entry.
+        """
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        B = embeddings.shape[0]
+        if not (len(categories) == len(inserted) == len(hits)
+                == len(docs) == B):
+            raise ValueError("adopt_entries: ragged batch")
+        # All-or-nothing: fail BEFORE touching the index/store when the
+        # batch cannot physically fit, so a migration step that hits a
+        # full target aborts with both shards unchanged.
+        avail = self.capacity - self.index._n + len(self.index._free)
+        if B > avail:
+            raise RuntimeError(
+                f"adopt_entries: {B} entries exceed the {avail} free "
+                f"slots (shard_capacity {self.capacity}) — free space "
+                f"on the target or migrate in smaller batches")
+        cids = np.asarray([self._cat_id(c) for c in categories], np.int32)
+        slots = self.index.add_batch(embeddings, cids)
+        new_docs, out = [], []
+        for k, slot in enumerate(int(s) for s in slots):
+            d = docs[k]
+            doc_id = self._next_doc_id
+            self._next_doc_id += self._doc_id_step
+            new_docs.append(Document(doc_id, d.request, d.response,
+                                     d.created_at, d.category, dict(d.meta),
+                                     embedding=d.embedding))
+            # Rows are already dirty from add_batch, so the preserved
+            # timestamp rides the same delta flush as the embedding.
+            self.slot_inserted[slot] = float(inserted[k])
+            self.slot_hits[slot] = int(hits[k])
+            self.slot_doc[slot] = doc_id
+            self.slot_valid[slot] = True
+            out.append((slot, doc_id))
+        self.store.put_many(new_docs)
+        return out
+
+    def category_slots(self, name: str) -> np.ndarray:
+        """Live slots currently holding ``name``'s entries (the unit a
+        shard migration drains)."""
+        cid = self.policies.category_id(name)
+        return np.where(self.slot_valid & (self.slot_category == cid))[0]
+
+    def doc_id_of(self, slot: int) -> int:
+        """Doc id behind a slot returned by lookup/insert (INVALID for
+        empty slots AND for slot == INVALID itself — never numpy
+        negative indexing). ShardedSemanticCache overrides the slot
+        encoding, so callers that branch on doc ids use this instead of
+        indexing ``slot_doc`` directly."""
+        return int(self.slot_doc[slot]) if slot >= 0 else INVALID
+
+    @property
+    def sync_stats(self) -> dict:
+        """The index's device-sync accounting (uniform with the sharded
+        cache's aggregated view)."""
+        return dict(self.index.sync_stats)
 
     # ----------------------------------------------------------------- eviction
     def _per_category_arrays(self) -> tuple[np.ndarray, np.ndarray]:
@@ -683,7 +771,7 @@ class SemanticCache:
         for cid, name in sorted(self._cat_names.items()):
             n_cat = int((self.slot_valid & (self.slot_category == cid)).sum())
             quota = self.policies.effective(name).quota
-            quota_entries = int(quota * self.capacity)
+            quota_entries = int(quota * self.quota_capacity)
             out[name] = {
                 "entries": n_cat,
                 "resident_bytes": n_cat * per_entry,

@@ -133,6 +133,16 @@ class ResidencyModel:
         return int(quota_fraction * budget_mb * 1e6
                    // self.bytes_per_entry())
 
+    def quota_bytes(self, quota_fraction: float, capacity_entries: int) -> int:
+        """The inverse direction of ``quota_entries``: the resident bytes a
+        category's quota ceiling pins out of an entry capacity — the unit
+        the shard placement planner bin-packs (core/shard.py). A category
+        entitled to ``int(quota · capacity)`` entries owns that many rows
+        of the resident tier, priced at this residency's bytes/entry."""
+        if not (0.0 <= quota_fraction <= 1.0):
+            raise ValueError("quota_fraction must be in [0,1]")
+        return int(quota_fraction * capacity_entries) * self.bytes_per_entry()
+
 
 def residency_capacity_table(budget_mb: float, quotas: dict[str, float],
                              dim: int = 384, graph_degree: int = 32,

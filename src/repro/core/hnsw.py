@@ -253,6 +253,22 @@ class DeviceResidentIndex:
             self.emb_q[slot] = q[0]
             self.emb_scale[slot] = s[0]
 
+    def export_rows(self, slots: np.ndarray) -> dict[str, np.ndarray]:
+        """Copy the per-slot tables for ``slots`` out of the index — the
+        shard-migration export (core/shard.py): the fp32 control-plane
+        rows, the category/inserted metadata, and (under int8 residency)
+        the quantized rows + scales exactly as the source device holds
+        them. All arrays are copies; exporting does not mutate the index
+        or its dirty log, so the source keeps serving during a drain."""
+        slots = np.asarray(slots, np.int64)
+        out = {"emb": self.emb[slots].copy(),
+               "category": self.category[slots].copy(),
+               "inserted": self.inserted[slots].copy()}
+        if self.quantized:
+            out["emb_q"] = self.emb_q[slots].copy()
+            out["scale"] = self.emb_scale[slots].copy()
+        return out
+
     # -- subclass hooks --------------------------------------------------------
     def _host_tables(self) -> dict:
         raise NotImplementedError

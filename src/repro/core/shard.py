@@ -1,0 +1,661 @@
+"""Sharded cache tier: category-aware placement, fan-out, live migration.
+
+The paper's §7.4 scaling note — beyond ~10 M entries, shard by category —
+meets the ROADMAP north star here: one `SemanticCache` data plane tops
+out at one device's HBM no matter how fast the fused lookup loop is, so
+the resident tier must spread category quotas across N device-resident
+shards WITHOUT giving up the masked-search or delta-sync guarantees.
+Three pieces:
+
+* ``ShardPlanner`` — places categories on shards by **quota bytes**
+  (``economics.ResidencyModel.quota_bytes``: a category's entry ceiling
+  × bytes/entry under the resident dtype), greedy longest-processing-time
+  bin-packing instead of the crc32-mod hash that piles head categories
+  onto one shard (``CRC32Planner`` keeps that baseline as the no-planner
+  fallback and the benchmark contrast — on the Table-1 quotas, crc32 %2
+  lands 83 % of quota bytes on one shard).
+* ``ShardedSemanticCache`` — the existing ``SemanticCache`` read/write
+  API over N shards. ``lookup_batch`` partitions the query batch per
+  shard by category, fans out to each shard's device-resident index
+  (each shard reuses the bucketed batch shapes and the fused
+  ``frontier_hop``/``cache_topk`` data plane unchanged), and merges the
+  classified {hit, expired, miss} results — plus the pre-threshold
+  re-rank candidates the int8 tier needs — back into request order.
+  ``insert_batch``/``sweep_expired`` route writes through each shard's
+  dirty-log delta sync; ``sync_stats``/``last_lookup_stats`` aggregate
+  across shards with a per-shard breakdown. Because search is
+  category-masked and quotas are per-category fractions of the GLOBAL
+  capacity (each shard gets ``quota_capacity = total``), a sharded cache
+  is behaviorally identical to a single cache on the same workload —
+  property-tested bit-identical for shard counts {1, 2, 4}
+  (tests/test_shard.py).
+* ``CategoryMigration`` — live category movement (quota reassignment or
+  an ``AdaptiveController``-driven ``rebalance``): COPY-THEN-CUTOVER.
+  The drain exports the source rows (``index.export_rows``: fp32 rows +
+  inserted timestamps + the int8/scale mirror) batch by batch into the
+  target via ``adopt_entries`` — timestamps, hit counts and doc payloads
+  preserved; requantization is deterministic, so the target's int8+scale
+  rows come out bit-identical — while the OLD shard keeps serving every
+  read and write until cutover. Cutover runs catch-up passes (entries
+  written mid-drain), reconciles copies whose source entry was evicted
+  during the drain, flips the planner's routing, then purges the source.
+  At no point does a read see a missing or doubly-served entry.
+
+Clock semantics: shards are constructed with ``search_ms = insert_ms =
+0`` and the sharded front door advances the SHARED clock exactly once
+per fan-out round — a lookup across 3 shards costs one ``search_ms``
+(the fan-out is parallel on real hardware), and the ``now`` every shard
+classifies TTLs against is the same instant a single cache would use.
+All shards also share the cache-relative time origin ``_t0``, so
+``inserted`` timestamps transfer across shards unrebased.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cache import CacheResult, SemanticCache
+from repro.core.clock import Clock, SimClock
+from repro.core.economics import ResidencyModel
+from repro.core.hnsw import INVALID
+from repro.core.metrics import CategoryStats
+from repro.core.policy import PolicyEngine
+
+
+def crc32_shard(category: str, n_shards: int) -> int:
+    """The quota-blind hash placement: crc32(name) mod N. Kept as the
+    no-planner fallback (serving/router.py) and the baseline the
+    placement benchmark beats."""
+    return zlib.crc32(category.encode()) % max(1, n_shards)
+
+
+class CRC32Planner:
+    """Hash placement behind the planner interface — the degenerate
+    baseline: ignores quota bytes entirely, so head categories collide
+    (benchmarks/bench_shard.py measures the resulting imbalance).
+    ``assign`` still honors migrations via an override table."""
+
+    def __init__(self, n_shards: int):
+        self.n_shards = max(1, n_shards)
+        self._overrides: dict[str, int] = {}
+
+    def shard_of(self, category: str) -> int:
+        ov = self._overrides.get(category)
+        return crc32_shard(category, self.n_shards) if ov is None else ov
+
+    def assign(self, category: str, shard: int, nbytes: int = 0) -> None:
+        self._overrides[category] = int(shard)
+
+
+class ShardPlanner:
+    """Assigns categories to shards by quota-byte budgets.
+
+    A category's placement weight is the resident bytes its quota
+    ceiling pins: ``int(quota · capacity) × bytes/entry`` under the
+    active ``ResidencyModel`` (so int8 residency shrinks every weight
+    ~4x but keeps the RELATIVE packing identical). ``plan`` runs greedy
+    LPT bin-packing — categories sorted by weight descending, each
+    dropped on the currently lightest shard — which is deterministic
+    (ties break by name, then by shard id) and within 4/3 of optimal.
+    Categories first seen after planning (``shard_of`` on an unknown
+    name) are placed on the lightest shard at their policy's quota
+    weight.
+    """
+
+    def __init__(self, n_shards: int, capacity: int,
+                 residency: ResidencyModel | None = None,
+                 policies: PolicyEngine | None = None):
+        self.n_shards = max(1, n_shards)
+        self.capacity = capacity
+        self.residency = residency or ResidencyModel()
+        self.policies = policies
+        self.assignments: dict[str, int] = {}
+        self._bytes: dict[str, int] = {}
+        self.shard_bytes: list[int] = [0] * self.n_shards
+
+    @classmethod
+    def from_policies(cls, policies: PolicyEngine, n_shards: int,
+                      capacity: int, dim: int = 384,
+                      emb_dtype: str = "float32",
+                      graph_degree: int = 32) -> "ShardPlanner":
+        """Plan every registered category from its policy quota; the
+        residency model prices bytes/entry for the resident dtype."""
+        planner = cls(n_shards, capacity,
+                      residency=ResidencyModel(dim=dim, emb_dtype=emb_dtype,
+                                               graph_degree=graph_degree),
+                      policies=policies)
+        cachable = {n: policies.get(n).quota for n in policies.categories()
+                    if policies.get(n).allow_caching
+                    and policies.get(n).quota > 0}
+        planner.plan(cachable)
+        # Compliance-blocked / zero-quota categories still need a stable
+        # home for their (rejected) traffic: zero placement weight.
+        for name in sorted(policies.categories()):
+            if name not in planner.assignments:
+                planner._place(name, 0)
+        return planner
+
+    # -- placement -------------------------------------------------------------
+    def quota_bytes(self, quota_fraction: float) -> int:
+        return self.residency.quota_bytes(quota_fraction, self.capacity)
+
+    def plan(self, quotas: dict[str, float]) -> dict[str, int]:
+        """(Re)pack ``quotas`` from scratch; returns the assignment."""
+        self.assignments.clear()
+        self._bytes.clear()
+        self.shard_bytes = [0] * self.n_shards
+        order = sorted(quotas, key=lambda c: (-self.quota_bytes(quotas[c]), c))
+        for name in order:
+            self._place(name, self.quota_bytes(quotas[name]))
+        return dict(self.assignments)
+
+    def _place(self, category: str, nbytes: int) -> int:
+        shard = min(range(self.n_shards),
+                    key=lambda i: (self.shard_bytes[i], i))
+        self.assignments[category] = shard
+        self._bytes[category] = nbytes
+        self.shard_bytes[shard] += nbytes
+        return shard
+
+    def shard_of(self, category: str) -> int:
+        if category not in self.assignments:
+            quota = (self.policies.get(category).quota
+                     if self.policies is not None else 0.0)
+            return self._place(category, self.quota_bytes(quota))
+        return self.assignments[category]
+
+    def assign(self, category: str, shard: int,
+               nbytes: int | None = None) -> None:
+        """Pin a category to a shard (migration cutover / manual
+        placement), moving its byte weight between bins."""
+        old = self.assignments.get(category)
+        weight = self._bytes.get(category, 0) if nbytes is None else nbytes
+        if old is not None:
+            self.shard_bytes[old] -= self._bytes.get(category, 0)
+        self.assignments[category] = int(shard)
+        self._bytes[category] = weight
+        self.shard_bytes[shard] += weight
+
+    # -- reporting -------------------------------------------------------------
+    def imbalance(self) -> float:
+        """max/mean planned shard bytes — 1.0 is a perfect spread (the
+        placement gate bench_shard tracks against the crc32 baseline)."""
+        mean = sum(self.shard_bytes) / self.n_shards
+        return max(self.shard_bytes) / mean if mean > 0 else 1.0
+
+    def report(self) -> dict:
+        return {"n_shards": self.n_shards,
+                "emb_dtype": self.residency.emb_dtype,
+                "shard_bytes": list(self.shard_bytes),
+                "imbalance": round(self.imbalance(), 4),
+                "assignments": dict(self.assignments)}
+
+
+class ShardedMetrics:
+    """``MetricsRegistry`` view over the shards. ``cat(name)`` resolves
+    to the category's serving shard (so simulator/engine counter writes
+    land where the category lives); the merged views sum counters across
+    shards — a migrated category's pre-move history stays on its old
+    shard's registry and the merge reunifies it."""
+
+    def __init__(self, parent: "ShardedSemanticCache"):
+        self._parent = parent
+
+    def cat(self, name: str) -> CategoryStats:
+        shard = self._parent.shards[self._parent.shard_of(name)]
+        return shard.metrics.cat(name)
+
+    @property
+    def per_category(self) -> dict[str, CategoryStats]:
+        merged: dict[str, CategoryStats] = {}
+        for shard in self._parent.shards:
+            for name, st in shard.metrics.per_category.items():
+                acc = merged.setdefault(name, CategoryStats())
+                for f in CategoryStats.__dataclass_fields__:
+                    setattr(acc, f, getattr(acc, f) + getattr(st, f))
+        return merged
+
+    def overall_hit_rate(self) -> float:
+        per = self.per_category.values()
+        lookups = sum(s.lookups for s in per)
+        hits = sum(s.hits for s in per)
+        return hits / lookups if lookups else 0.0
+
+    def snapshot(self) -> dict:
+        return {k: v.to_dict()
+                for k, v in sorted(self.per_category.items())}
+
+
+class CategoryMigration:
+    """Live category movement between shards: copy-then-cutover.
+
+    Protocol (single-writer; steps interleave freely with serving):
+
+    1. **Drain** (``step``): copy up to ``batch_size`` not-yet-copied
+       live entries source → target via ``export_rows`` →
+       ``adopt_entries`` (fp32 rows, preserved ``inserted`` timestamps
+       and hit counts, doc payloads re-minted under the target's doc-id
+       sequence; deterministic requantization reproduces the int8+scale
+       rows bit-identically). The source keeps serving ALL reads and
+       writes for the category — copies on the target are invisible to
+       its traffic because search is category-masked and routing still
+       points at the source.
+    2. **Cutover** (``cutover``): catch-up passes copy entries inserted
+       during the drain (and re-copy any whose target copy was lost);
+       reconciliation drops target copies whose source entry was evicted
+       mid-drain and refreshes drained-while-serving hit counts; then the
+       planner's routing flips and the source purges the category. Reads
+       are correct at every intermediate point: before the flip the
+       source holds (and serves) the authoritative set, after it the
+       target does.
+    """
+
+    def __init__(self, parent: "ShardedSemanticCache", category: str,
+                 src_id: int, dst_id: int, batch_size: int = 64):
+        self.parent = parent
+        self.category = category
+        self.src_id = src_id
+        self.dst_id = dst_id
+        self.batch_size = batch_size
+        self.moved = 0
+        self.done = False
+        # src doc_id -> (target slot, target doc_id): the copy registry
+        # reconciliation audits at cutover.
+        self._copied: dict[int, tuple[int, int]] = {}
+
+    # -- helpers ---------------------------------------------------------------
+    def _ends(self) -> tuple[SemanticCache, SemanticCache]:
+        return (self.parent.shards[self.src_id],
+                self.parent.shards[self.dst_id])
+
+    def _pending(self) -> np.ndarray:
+        """Source slots still to copy: live, this category, not in the
+        copy registry (covers both fresh writes and dropped copies)."""
+        src, _ = self._ends()
+        slots = src.category_slots(self.category)
+        todo = [s for s in slots
+                if int(src.slot_doc[s]) not in self._copied]
+        return np.asarray(todo, np.int64)
+
+    def _owns(self, slot: int, doc_id: int) -> bool:
+        _, dst = self._ends()
+        return bool(dst.slot_valid[slot]) and int(dst.slot_doc[slot]) == doc_id
+
+    # -- protocol --------------------------------------------------------------
+    def step(self, max_entries: int | None = None) -> int:
+        """Copy one batch; returns entries moved (0 = drained)."""
+        if self.done:
+            return 0
+        src, dst = self._ends()
+        slots = self._pending()[:max_entries or self.batch_size]
+        if slots.size == 0:
+            return 0
+        docs, keep = [], []
+        for s in slots:
+            doc = src.store.get(int(src.slot_doc[s]))
+            if doc is None:     # store lost the doc: drop at the source too
+                src._evict_slot(int(s), reason="missing_doc")
+                continue
+            docs.append(doc)
+            keep.append(int(s))
+        if not keep:
+            return 0
+        slots = np.asarray(keep, np.int64)
+        rows = src.index.export_rows(slots)
+        try:
+            adopted = dst.adopt_entries(rows["emb"],
+                                        [self.category] * len(keep),
+                                        rows["inserted"],
+                                        src.slot_hits[slots], docs)
+        except RuntimeError:
+            # Target out of physical slots (adopt_entries checks before
+            # mutating anything): undo the drain so the source stays
+            # authoritative and the migration is retryable after space
+            # frees up or with a bigger shard_capacity.
+            self.abort()
+            raise
+        for s, (dst_slot, dst_doc) in zip(slots, adopted):
+            self._copied[int(src.slot_doc[s])] = (dst_slot, dst_doc)
+        self.moved += len(keep)
+        return len(keep)
+
+    def remaining(self) -> int:
+        return int(self._pending().size)
+
+    def abort(self) -> None:
+        """Cancel a drain before cutover: drop every target copy, keep
+        the source (which served throughout) authoritative, unregister
+        the migration so it can be retried."""
+        if self.done:
+            return
+        _, dst = self._ends()
+        for dst_slot, dst_doc in self._copied.values():
+            if self._owns(dst_slot, dst_doc):
+                dst._evict_slot(dst_slot, reason="migration_abort")
+        self._copied.clear()
+        self.parent._migrations.pop(self.category, None)
+        self.done = True
+
+    def cutover(self) -> None:
+        """Final catch-up + reconcile, then flip routing and purge."""
+        if self.done:
+            return
+        src, dst = self._ends()
+        # Catch-up until a fixpoint: no pending entries AND every live
+        # source entry's copy still exists on the target (a copy lost to
+        # target-side eviction while the source entry lives re-copies).
+        while True:
+            if self.step(self.batch_size):
+                continue
+            live = {int(src.slot_doc[s])
+                    for s in src.category_slots(self.category)}
+            lost = [d for d in self._copied
+                    if d in live and not self._owns(*self._copied[d])]
+            if not lost:
+                break
+            for d in lost:
+                del self._copied[d]
+        # Reconcile: source evictions during the drain win (no
+        # resurrection), and hits accrued while the source served
+        # transfer so eviction scores stay continuous.
+        live_slots = {int(src.slot_doc[s]): int(s)
+                      for s in src.category_slots(self.category)}
+        for src_doc, (dst_slot, dst_doc) in self._copied.items():
+            if not self._owns(dst_slot, dst_doc):
+                continue
+            if src_doc not in live_slots:
+                dst._evict_slot(dst_slot, reason="migration_reconcile")
+            else:
+                dst.slot_hits[dst_slot] = src.slot_hits[live_slots[src_doc]]
+        # Flip routing, then purge the source's copies.
+        self.parent.planner.assign(self.category, self.dst_id)
+        for s in src.category_slots(self.category):
+            src._evict_slot(int(s), reason="migrated")
+        self.parent._migrations.pop(self.category, None)
+        self.done = True
+
+    def run(self) -> int:
+        """Drain to completion and cut over; returns entries moved."""
+        while self.step():
+            pass
+        self.cutover()
+        return self.moved
+
+
+class ShardedSemanticCache:
+    """N category-sharded ``SemanticCache``s behind the single-cache API.
+
+    ``capacity`` is the GLOBAL entry capacity: quota ceilings resolve
+    against it on every shard (``quota_capacity``), so a category's
+    entry budget is identical to the unsharded cache's. Each shard
+    preallocates ``shard_capacity`` physical slots (default: the global
+    capacity, the always-safe choice; size it from
+    ``planner.shard_bytes`` when per-device HBM is the constraint —
+    with quotas summing ≤ 1 a shard never holds more than its
+    categories' ceilings). Returned slot ids are globally encoded as
+    ``shard · shard_capacity + local`` — decode with ``doc_id_of`` /
+    ``shard_of_slot`` rather than indexing shard tables directly.
+    """
+
+    def __init__(self, policies: PolicyEngine, dim: int = 384,
+                 capacity: int = 65536, n_shards: int = 2,
+                 clock: Clock | None = None, index_kind: str = "hnsw",
+                 use_device: bool = False, search_ms: float = 2.0,
+                 insert_ms: float = 1.0, l1_capacity: int = 0,
+                 seed: int = 0, emb_dtype: str = "float32",
+                 planner=None, shard_capacity: int | None = None,
+                 store_factory=None):
+        self.policies = policies
+        self.dim = dim
+        self.capacity = capacity
+        self.n_shards = max(1, n_shards)
+        self.index_kind = index_kind
+        self.use_device = use_device
+        self.emb_dtype = emb_dtype
+        self.clock = clock or SimClock()
+        self.search_ms = search_ms
+        self.insert_ms = insert_ms
+        self.planner = planner if planner is not None else \
+            ShardPlanner.from_policies(policies, self.n_shards, capacity,
+                                       dim=dim, emb_dtype=emb_dtype)
+        self.shard_capacity = shard_capacity or capacity
+        self.shards = [
+            SemanticCache(policies, dim=dim, capacity=self.shard_capacity,
+                          store=(store_factory(i) if store_factory else None),
+                          clock=self.clock, index_kind=index_kind,
+                          use_device=use_device,
+                          # the front door owns the clock charges — one
+                          # advance per fan-out round, not one per shard
+                          search_ms=0.0, insert_ms=0.0,
+                          l1_capacity=l1_capacity, seed=seed + i,
+                          emb_dtype=emb_dtype, quota_capacity=capacity,
+                          doc_id_start=i, doc_id_step=self.n_shards)
+            for i in range(self.n_shards)]
+        # One shared cache-relative time origin: inserted timestamps are
+        # directly transferable between shards (migration preserves them).
+        self._t0 = self.shards[0]._t0
+        for s in self.shards:
+            s._t0 = self._t0
+        self.metrics = ShardedMetrics(self)
+        self.last_lookup_stats: dict = {}
+        self._migrations: dict[str, CategoryMigration] = {}
+
+    # ------------------------------------------------------------------ routing
+    def shard_of(self, category: str) -> int:
+        """The category's SERVING shard: its planned home, or — while a
+        migration drains — the source, which keeps authority until
+        cutover."""
+        mig = self._migrations.get(category)
+        return mig.src_id if mig is not None else \
+            self.planner.shard_of(category)
+
+    def shard_of_slot(self, slot: int) -> tuple[int, int]:
+        """Decode a globally-encoded slot id to (shard, local slot);
+        INVALID decodes to (INVALID, INVALID), never to a real shard."""
+        if slot < 0:
+            return INVALID, INVALID
+        return divmod(slot, self.shard_capacity)
+
+    def _global_slot(self, shard: int, local: int) -> int:
+        return shard * self.shard_capacity + local if local != INVALID \
+            else INVALID
+
+    def doc_id_of(self, slot: int) -> int:
+        shard, local = self.shard_of_slot(slot)
+        return self.shards[shard].doc_id_of(local) if shard != INVALID \
+            else INVALID
+
+    # ------------------------------------------------------------------ reads
+    def lookup(self, embedding: np.ndarray, category: str) -> CacheResult:
+        return self.lookup_batch(embedding[None, :], [category])[0]
+
+    def lookup_batch(self, embeddings: np.ndarray,
+                     categories: Sequence[str]) -> list[CacheResult]:
+        """Fan-out masked search: partition the batch per serving shard,
+        run each shard's (device-resident) search, merge back into
+        request order. One ``search_ms`` clock charge for the whole
+        round — the shards search in parallel on real hardware — and the
+        TTL ``now`` every shard classifies against is the same instant a
+        single cache would use."""
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        B = embeddings.shape[0]
+        assert len(categories) == B
+        results: list[CacheResult] = [None] * B  # type: ignore[list-item]
+        per_shard: dict[int, list[int]] = {}
+        for i, c in enumerate(categories):
+            per_shard.setdefault(self.shard_of(c), []).append(i)
+        agg = {"batch": 0, "hops": 0, "rows_gathered": 0,
+               "gathered_bytes": 0, "reranks": 0, "per_shard": {}}
+        any_active = False
+        for si in sorted(per_shard):
+            idxs = per_shard[si]
+            sub = self.shards[si].lookup_batch(
+                embeddings[idxs], [categories[i] for i in idxs])
+            ls = self.shards[si].last_lookup_stats
+            if ls:
+                agg["per_shard"][si] = dict(ls)
+                for k in ("batch", "hops", "rows_gathered",
+                          "gathered_bytes", "reranks"):
+                    agg[k] += ls.get(k, 0)
+            for i, r in zip(idxs, sub):
+                if r.reason != "compliance":
+                    any_active = True
+                    r.latency_ms = self.search_ms
+                if r.slot != INVALID:
+                    r.slot = self._global_slot(si, r.slot)
+                results[i] = r
+        # Mirrors the single cache: a batch that is 100 % compliance-
+        # rejected never reaches the index and costs no search time.
+        if any_active:
+            self.clock.advance(self.search_ms / 1e3)
+        self.last_lookup_stats = agg if any_active else {}
+        return results
+
+    # ------------------------------------------------------------------ writes
+    def insert(self, embedding: np.ndarray, category: str, request: str,
+               response: str, meta: dict | None = None) -> int:
+        return self.insert_batch(np.asarray(embedding)[None, :], [category],
+                                 [request], [response], [meta])[0]
+
+    def insert_batch(self, embeddings: np.ndarray,
+                     categories: Sequence[str], requests: Sequence[str],
+                     responses: Sequence[str],
+                     metas: Sequence[dict | None] | None = None) -> list[int]:
+        """Partition the write batch per serving shard; each sub-batch
+        pays the shard's single eviction-scoring/store/index pass and
+        its touched rows land in that shard's dirty log (one delta flush
+        per shard on its next search). Slot ids come back globally
+        encoded; INVALID for rejected items, as in the single cache."""
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        B = embeddings.shape[0]
+        metas = list(metas) if metas is not None else [None] * B
+        if not (len(categories) == len(requests) == len(responses)
+                == len(metas) == B):
+            raise ValueError("insert_batch: ragged batch")
+        # One write-round clock charge iff anything is admissible —
+        # matching the single cache, whose advance sits behind the
+        # compliance gate.
+        eff = {c: self.policies.effective(c)
+               for c in dict.fromkeys(categories)}
+        if any(eff[c].allow_caching and eff[c].quota > 0.0
+               for c in categories):
+            self.clock.advance(self.insert_ms / 1e3)
+        slots_out = [INVALID] * B
+        per_shard: dict[int, list[int]] = {}
+        for i, c in enumerate(categories):
+            per_shard.setdefault(self.shard_of(c), []).append(i)
+        for si in sorted(per_shard):
+            idxs = per_shard[si]
+            sub = self.shards[si].insert_batch(
+                embeddings[idxs], [categories[i] for i in idxs],
+                [requests[i] for i in idxs], [responses[i] for i in idxs],
+                [metas[i] for i in idxs])
+            for i, local in zip(idxs, sub):
+                slots_out[i] = self._global_slot(si, int(local))
+        return slots_out
+
+    def sweep_expired(self) -> int:
+        return sum(s.sweep_expired() for s in self.shards)
+
+    # ---------------------------------------------------------------- migration
+    def migrate_category(self, category: str, target: int,
+                         batch_size: int = 64,
+                         stepwise: bool = False) -> CategoryMigration | None:
+        """Move a category to ``target``. Default: drain + cutover in
+        one call. ``stepwise=True`` returns the live ``CategoryMigration``
+        so the caller interleaves ``step()`` with serving traffic and
+        invokes ``cutover()`` itself (reads stay on the source, and
+        correct, throughout). The target must have physical headroom for
+        the category: a drain step that finds the target full aborts the
+        whole migration atomically (target copies dropped, source still
+        authoritative, retryable) and re-raises."""
+        src = self.shard_of(category)
+        if target == src or not (0 <= target < self.n_shards):
+            return None
+        if category in self._migrations:
+            raise RuntimeError(f"migration of {category!r} already active")
+        mig = CategoryMigration(self, category, src, target, batch_size)
+        self._migrations[category] = mig
+        if not stepwise:
+            mig.run()
+        return mig
+
+    def rebalance(self, quotas: dict[str, float] | None = None) -> dict:
+        """Re-plan placement (quota reassignment, an AdaptiveController
+        retune, …) and live-migrate every category whose planned shard
+        moved. Returns {category: (src, dst)} for the moves made.
+        Requires a quota-byte ``ShardPlanner`` — the crc32 fallback has
+        no byte bookkeeping to re-plan against."""
+        if not isinstance(self.planner, ShardPlanner):
+            raise TypeError(
+                "rebalance() needs a ShardPlanner; this cache routes via "
+                f"{type(self.planner).__name__} (the quota-blind "
+                "fallback) — migrate_category() still works")
+        if quotas is None:
+            quotas = {n: self.policies.get(n).quota
+                      for n in self.policies.categories()
+                      if self.policies.get(n).allow_caching
+                      and self.policies.get(n).quota > 0}
+        scratch = ShardPlanner(self.n_shards, self.capacity,
+                               residency=self.planner.residency,
+                               policies=self.policies)
+        target = scratch.plan(quotas)
+        moves: dict[str, tuple[int, int]] = {}
+        for cat, dst in target.items():
+            src = self.planner.shard_of(cat)
+            if src != dst:
+                self.migrate_category(cat, dst)
+                moves[cat] = (src, dst)
+            # refresh the byte bookkeeping at the NEW quota weight (the
+            # cutover's assign reuses the stored pre-change weight)
+            self.planner.assign(cat, self.planner.shard_of(cat),
+                                nbytes=self.planner.quota_bytes(quotas[cat]))
+        return moves
+
+    # ---------------------------------------------------------------- reporting
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def category_count(self, name: str) -> int:
+        return sum(s.category_count(name) for s in self.shards)
+
+    @property
+    def sync_stats(self) -> dict:
+        """Delta-sync accounting summed across shards, with the
+        per-shard breakdown under ``per_shard`` (what ``launch/serve``'s
+        topology report prints)."""
+        agg: dict = {"full_uploads": 0, "delta_updates": 0,
+                     "rows_synced": 0, "bytes_synced": 0,
+                     "emb_bytes_synced": 0}
+        per = []
+        for s in self.shards:
+            st = dict(s.index.sync_stats)
+            per.append(st)
+            for k in agg:
+                agg[k] += st.get(k, 0)
+        agg["per_shard"] = per
+        return agg
+
+    def shard_report(self) -> list[dict]:
+        """Per-shard residency: entries, resident bytes (entries × the
+        resident tier's bytes/entry), categories served, sync counters —
+        the spread the placement benchmark gates on."""
+        out = []
+        for si, s in enumerate(self.shards):
+            rep = s.memory_report()
+            cats = sorted(c for c, sid in self.planner.assignments.items()
+                          if sid == si) if hasattr(self.planner,
+                                                   "assignments") else []
+            out.append({
+                "shard": si,
+                "entries": rep["entries"],
+                "resident_bytes": rep["entries"]
+                * rep["in_memory_bytes_per_entry"],
+                "categories": cats,
+                "sync_stats": dict(s.index.sync_stats),
+                "search_stats": dict(s.index.search_stats),
+            })
+        return out

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.cache import SemanticCache
 from repro.core.clock import WallClock
+from repro.core.shard import ShardedSemanticCache
 from repro.core.policy import AdaptiveController, PolicyEngine, \
     paper_policies
 from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
@@ -31,16 +32,18 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
                 max_batch: int = 8, prompt_len: int = 32,
                 max_new_tokens: int = 8, seed: int = 0,
                 index_kind: str = "flat", use_device: bool = False,
-                emb_dtype: str = "float32", log=print) -> dict:
+                emb_dtype: str = "float32", n_shards: int = 1,
+                log=print) -> dict:
     model = Model(cfg)
     params = model.init_params(jax.random.key(seed))
     controller = AdaptiveController()
     policies = PolicyEngine(paper_policies(), controller=controller)
 
-    cache = SemanticCache(policies, capacity=max(4096, n_requests),
-                          clock=WallClock(), index_kind=index_kind,
-                          use_device=use_device, l1_capacity=256,
-                          emb_dtype=emb_dtype)
+    kw = dict(capacity=max(4096, n_requests), clock=WallClock(),
+              index_kind=index_kind, use_device=use_device,
+              l1_capacity=256, emb_dtype=emb_dtype)
+    cache = (ShardedSemanticCache(policies, n_shards=n_shards, **kw)
+             if n_shards > 1 else SemanticCache(policies, **kw))
     if cache_kind == "none":
         for name in policies.categories():
             policies.update(name, allow_caching=False)
@@ -66,15 +69,28 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
         f"model_tokens={st.model_tokens}, "
         f"mean_latency={st.total_latency_ms / max(1, st.served):.1f}ms, "
         f"wall={wall:.1f}s")
-    sync = getattr(cache.index, "sync_stats", None)
+    # Data-plane counters aggregate across every index the cache owns
+    # (the engine sums cache.last_lookup_stats per step, which the
+    # sharded cache pre-merges over its fan-out).
+    log(f"[serve] search data plane: {st.search_hops} hops, "
+        f"{st.rows_gathered} embedding rows gathered "
+        f"across {n_shards} shard(s)")
+    sync = getattr(cache, "sync_stats", None)
     if sync is not None:
-        log(f"[serve] index sync ({cache.index.emb_dtype} residency): "
+        log(f"[serve] index sync ({emb_dtype} residency): "
             f"{sync['full_uploads']} full / "
             f"{sync['delta_updates']} delta uploads, "
             f"{sync['bytes_synced'] / 1e6:.2f} MB synced "
             f"({sync['emb_bytes_synced'] / 1e6:.2f} MB embeddings)")
+        for si, ss in enumerate(sync.get("per_shard", [])):
+            log(f"[serve]   shard {si}: {ss['full_uploads']} full / "
+                f"{ss['delta_updates']} delta, "
+                f"{ss['bytes_synced'] / 1e6:.2f} MB synced")
     return {"served": st.served, "hit_rate": st.hit_rate,
             "model_tokens": st.model_tokens, "wall_s": wall,
+            "search_hops": st.search_hops,
+            "rows_gathered": st.rows_gathered,
+            "n_shards": n_shards,
             "per_category": cache.metrics.snapshot(),
             "index_sync": dict(sync) if sync is not None else None}
 
@@ -98,6 +114,11 @@ def main():
                          "residency (fused-dequant kernels, ~4x fewer "
                          "sync/gather bytes, fp32 re-rank at the τ "
                          "boundary)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="category-sharded cache tier: N device-resident "
+                         "shards with quota-byte planner placement "
+                         "(core/shard.py); the report shows per-shard "
+                         "sync accounting")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -105,7 +126,8 @@ def main():
         cfg = cfg.reduced()
     run_serving(cfg, n_requests=args.requests, cache_kind=args.cache,
                 max_batch=args.max_batch, index_kind=args.index,
-                use_device=args.use_device, emb_dtype=args.emb_dtype)
+                use_device=args.use_device, emb_dtype=args.emb_dtype,
+                n_shards=args.shards)
 
 
 if __name__ == "__main__":

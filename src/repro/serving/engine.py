@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.cache import SemanticCache
 from repro.core.embedding import FeatureHashEmbedder
 from repro.core.policy import AdaptiveController, LoadSignal
+from repro.core.shard import ShardedSemanticCache
 from repro.models.model import Model
 
 
@@ -80,7 +81,15 @@ class EngineStats:
 
 
 class ServingEngine:
-    def __init__(self, model: Model, params, cache: SemanticCache,
+    """Queue → embed → cache lookup → model on misses → batched
+    write-back. ``cache`` is a ``SemanticCache`` or, for multi-shard
+    residency, a ``ShardedSemanticCache`` — the fan-out/merge happens
+    behind the same lookup_batch/insert_batch API, and
+    ``last_lookup_stats`` arrives pre-aggregated across shards so the
+    hop/row counters below stay topology-blind."""
+
+    def __init__(self, model: Model, params,
+                 cache: SemanticCache | ShardedSemanticCache,
                  *, max_batch: int = 8, prompt_len: int = 64,
                  max_new_tokens: int = 16,
                  controller: AdaptiveController | None = None,

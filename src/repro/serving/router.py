@@ -8,8 +8,10 @@ expensive model.
 
 Also supports **category-sharded cache groups** (paper §7.4: beyond 10 M
 entries, shard by category): the router owns N caches and routes lookups
-by category hash, which is how the data-parallel serving groups of the
-production mesh each hold a category shard.
+by category through a ``ShardPlanner`` — quota-byte bin-packing
+(core/shard.py), so head categories spread across shards instead of
+colliding the way the old crc32-mod hash let them. The hash survives
+only as the no-planner fallback.
 """
 
 from __future__ import annotations
@@ -21,6 +23,7 @@ import numpy as np
 from repro.core.cache import SemanticCache
 from repro.core.policy import (AdaptiveController, CategoryConfig,
                                LoadSignal, PolicyEngine)
+from repro.core.shard import ShardPlanner, crc32_shard
 
 
 @dataclass
@@ -45,7 +48,9 @@ class ModelRouter:
                  backends: list[ModelBackend],
                  controller: AdaptiveController | None = None,
                  n_cache_shards: int = 1,
-                 cache_factory=None):
+                 cache_factory=None,
+                 planner: ShardPlanner | None = None,
+                 shard_capacity: int = 65536):
         self.policies = policies
         self.controller = controller or AdaptiveController()
         self.policies.controller = self.controller
@@ -55,6 +60,14 @@ class ModelRouter:
                 b.name, latency_target_ms=b.latency_target_ms,
                 queue_target=b.queue_target)
         self.n_shards = n_cache_shards
+        # Placement: quota-byte bin-packing over the registered policies
+        # (core/shard.py). A caller-provided planner wins; the crc32 hash
+        # remains only as the explicit no-planner fallback
+        # (``planner=False`` forces it, for the baseline benchmarks).
+        if planner is None and n_cache_shards > 1:
+            planner = ShardPlanner.from_policies(
+                policies, n_cache_shards, shard_capacity)
+        self.planner = planner or None
         if cache_factory is not None:
             self.caches = [cache_factory(i) for i in range(n_cache_shards)]
         else:
@@ -69,8 +82,13 @@ class ModelRouter:
         return b
 
     def shard_for(self, category: str) -> int:
-        import zlib
-        return zlib.crc32(category.encode()) % max(1, self.n_shards)
+        """Cache shard for a category: the quota-byte planner's
+        placement (balanced by construction, migration-aware via
+        ``planner.assign``); crc32-mod only when no planner exists —
+        the legacy hash collides head categories onto one shard."""
+        if self.planner is not None:
+            return self.planner.shard_of(category)
+        return crc32_shard(category, self.n_shards)
 
     def cache_for(self, category: str) -> SemanticCache | None:
         if not self.caches:

@@ -30,9 +30,9 @@ import numpy as np
 
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
-from repro.core.hnsw import HNSWIndex
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
+from repro.core.shard import ShardedSemanticCache
 from repro.core.storage import Document, VectorDBEmulator
 from repro.core.workload import Query, WorkloadGenerator
 
@@ -44,6 +44,8 @@ class SimConfig:
     index_kind: str = "hnsw"            # hybrid only: hnsw | flat
     use_device: bool = False            # hybrid: device-resident search
                                         # (beam search / flat_topk kernel)
+    n_shards: int = 1                   # hybrid: >1 = ShardedSemanticCache
+                                        # (quota-byte planner placement)
     search_ms: float = 2.0
     fetch_ms: float = 5.0
     insert_ms: float = 1.0
@@ -71,8 +73,9 @@ class SimResult:
     n_queries: int
     traffic_to_models: dict              # per model, query counts
     metrics: MetricsRegistry
-    # hybrid + hnsw only: device-sync accounting (full vs delta uploads,
-    # bytes moved) — the data-plane cost "Rethinking Caching" argues
+    # hybrid only: device-sync accounting (full vs delta uploads, bytes
+    # moved; summed across shards with a per_shard breakdown when
+    # n_shards > 1) — the data-plane cost "Rethinking Caching" argues
     # decides viability alongside hit rate
     index_sync: dict | None = None
 
@@ -102,11 +105,14 @@ class ServingSimulator:
             self.policies.controller = self.controller
 
         if sim.architecture == "hybrid":
-            self.cache = SemanticCache(
-                policies, capacity=sim.cache_capacity, clock=self.clock,
-                index_kind=sim.index_kind, use_device=sim.use_device,
-                search_ms=sim.search_ms, insert_ms=sim.insert_ms,
-                l1_capacity=sim.l1_capacity, seed=sim.seed)
+            kw = dict(capacity=sim.cache_capacity, clock=self.clock,
+                      index_kind=sim.index_kind, use_device=sim.use_device,
+                      search_ms=sim.search_ms, insert_ms=sim.insert_ms,
+                      l1_capacity=sim.l1_capacity, seed=sim.seed)
+            self.cache = (ShardedSemanticCache(policies,
+                                               n_shards=sim.n_shards, **kw)
+                          if sim.n_shards > 1
+                          else SemanticCache(policies, **kw))
             # external fetch latency charged here (LatencyModelStore-like)
             self._fetch_ms = sim.fetch_ms
         elif sim.architecture == "vdb":
@@ -182,7 +188,8 @@ class ServingSimulator:
             slot = self.cache.insert(q.embedding, q.category, q.text,
                                      f"response:{q.text}")
             if slot >= 0:
-                doc_id = int(self.cache.slot_doc[slot])
+                # doc_id_of decodes sharded caches' global slot ids too
+                doc_id = self.cache.doc_id_of(slot)
                 self._truth[doc_id] = (q.intent_id, q.content_version)
         return (self.clock.now() - t0) * 1e3
 
@@ -267,8 +274,8 @@ class ServingSimulator:
             n_queries=n_queries,
             traffic_to_models=dict(self._model_calls),
             metrics=reg,
-            index_sync=(dict(self.cache.index.sync_stats)
-                        if self.sim.architecture == "hybrid"
-                        and isinstance(self.cache.index, HNSWIndex)
-                        else None),
+            # Both index kinds carry the residency protocol now, and the
+            # sharded cache aggregates it (per-shard breakdown included).
+            index_sync=(dict(self.cache.sync_stats)
+                        if self.sim.architecture == "hybrid" else None),
         )
