@@ -11,8 +11,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.cache import SemanticCache
-from repro.core.economics import HYBRID_COSTS, VDB_COSTS, category_economics, \
-    workload_report
+from repro.core.economics import category_economics, workload_report
 from repro.core.embedding import SyntheticCategorySpace
 from repro.core.hnsw import INVALID
 from repro.core.policy import CategoryConfig, PolicyEngine, paper_policies

@@ -21,6 +21,12 @@ Decision parity at the τ boundary is the re-rank tier's property test
 (tests/test_quantized.py), not a wall-clock concern; this bench reports
 hit rates as a sanity row only.
 
+A fourth, fully static gate reads the COMPILED search itself: the
+per-dtype byte split of the lowered HLO (``hlo_cost.bytes_by_dtype`` —
+the same accounting path the ``contracts.DtypeDiscipline`` rule uses),
+asserting the int8 run's executable actually moves its table bytes as
+s8 and carries no silent fp32 rematerialization.
+
 Emits CSV rows and ``results/BENCH_quant.json``; ``--check`` is the CI
 smoke gate (~4x resident/sync, >3x gather).
 
@@ -34,6 +40,8 @@ import argparse
 import numpy as np
 
 from benchmarks.common import emit, index_meta, write_bench_json
+from repro.analysis import hlo_cost
+from repro.analysis.contracts import DtypeDiscipline, lower_classified_search
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.embedding import SyntheticCategorySpace
@@ -101,6 +109,15 @@ def _run_dtype(emb_dtype: str, *, capacity: int, prefill: int, steps: int,
                        for st in cache.metrics.per_category.values()),
     }
     out["sync_emb_bytes_per_step"] = out["sync_emb_bytes"] // max(1, steps)
+    # Static HLO gate: the compiled search's per-dtype byte split, off
+    # the SAME accounting path as contracts.DtypeDiscipline.
+    trace = lower_classified_search(cache.index,
+                                    name=f"bench_quant[{emb_dtype}]")
+    split = hlo_cost.analyze(trace.hlo).bytes_by_dtype
+    out["hlo_s8_bytes"] = int(split.get("s8", 0))
+    out["hlo_f32_bytes"] = int(split.get("f32", 0))
+    out["hlo_dtype_violations"] = [str(v)
+                                   for v in DtypeDiscipline().check(trace)]
     emit(f"quant.{emb_dtype}.cap{capacity}", 0.0, **{
         k: v for k, v in out.items() if k not in ("emb_dtype", "capacity")})
     return out
@@ -154,9 +171,26 @@ def check(payload: dict) -> None:
             f"gather-bytes regression: bytes gathered per query shrink "
             f"only {r['gathered_bytes_per_query']}x under int8 "
             f"(expected ~4x modulo small beam-path drift)")
+    runs = {run["emb_dtype"]: run for run in payload["runs"]}
+    f32, i8 = runs["float32"], runs["int8"]
+    if i8["hlo_dtype_violations"]:
+        raise SystemExit(
+            "DtypeDiscipline violation in the int8 search executable:\n"
+            + "\n".join(i8["hlo_dtype_violations"]))
+    if i8["hlo_s8_bytes"] <= i8["hlo_f32_bytes"]:
+        raise SystemExit(
+            f"quantized HLO regression: the compiled int8 search moves "
+            f"{i8['hlo_s8_bytes']} s8 bytes vs {i8['hlo_f32_bytes']} f32 "
+            f"bytes — the int8 table should dominate its own traffic")
+    if f32["hlo_s8_bytes"] >= 4096:
+        raise SystemExit(
+            f"fp32 HLO oddity: the fp32 search moves "
+            f"{f32['hlo_s8_bytes']} s8 bytes (expected ~none)")
     print(f"# check ok: fp32/int8 byte ratios — resident "
           f"{r['resident_emb_bytes']}x, sync {r['sync_emb_bytes']}x, "
-          f"gather {r['gathered_bytes_per_query']}x (sync rows equal)")
+          f"gather {r['gathered_bytes_per_query']}x (sync rows equal); "
+          f"compiled int8 search moves {i8['hlo_s8_bytes']} s8 bytes, "
+          f"0 dtype violations")
 
 
 def main() -> None:

@@ -8,8 +8,7 @@ Paper example: Model A (o1, $0.10, 500 ms) under 3× spike vs Model B
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.policy import (AdaptiveController, CategoryConfig,
-                               LoadSignal, PolicyEngine)
+from repro.core.policy import CategoryConfig, PolicyEngine
 from repro.serving.router import ModelBackend, ModelRouter
 
 

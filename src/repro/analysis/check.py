@@ -1,0 +1,136 @@
+"""``python -m repro.analysis.check`` — the static-analysis CI gate.
+
+Applies every hot-path contract to the real system, with zero
+wall-clock-dependent assertions (everything is lowered, parsed or
+AST-walked — nothing is timed):
+
+1. **HLO contracts** (``contracts.py``) on every {index kind} x
+   {resident dtype} cell: the classified-search executable (fused
+   Pallas hop forced, as production dispatches on compiled backends)
+   and both delta-flush scatter executables, checked for materialized
+   embedding gathers, host transfers, dropped donation and int8
+   rematerialization.
+2. **Compile budget** on the serving tier: a {flat,hnsw} x
+   {fp32,int8} x {1,2}-shard sweep of ``ShardedSemanticCache`` serve
+   batches B = 1..8, asserting each shard-index family compiled exactly
+   one program (bucketing's contract).
+3. **Pallas VMEM/SMEM budget** (``vmem.py``): static footprint of
+   every production kernel across the supported shape families.
+4. **Mirror-coherence lint** (``mirror_lint.py``) over the core
+   index/cache/shard modules.
+
+Exit status 0 = every contract holds; 1 = violations (printed one per
+line with evidence). CI gates on it in the ``static-analysis`` job.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.analysis import mirror_lint, vmem
+from repro.analysis.contracts import (CompileBudget, Violation,
+                                      collect_compile_census,
+                                      collect_hot_path_traces, run_rules)
+
+INDEX_KINDS = ("flat", "hnsw")
+EMB_DTYPES = ("float32", "int8")
+SHARD_COUNTS = (1, 2)
+SERVE_BATCHES = (1, 2, 3, 5, 8)
+
+
+def _policies():
+    from repro.core.policy import CategoryConfig, PolicyEngine
+    return PolicyEngine([
+        CategoryConfig("a", threshold=0.85, ttl=1e6, quota=0.4),
+        CategoryConfig("b", threshold=0.80, ttl=1e6, quota=0.4),
+    ])
+
+
+def check_hlo_contracts(log=print) -> list[Violation]:
+    out: list[Violation] = []
+    for kind in INDEX_KINDS:
+        for dtype in EMB_DTYPES:
+            traces = collect_hot_path_traces(kind, dtype)
+            viols = run_rules(traces)
+            log(f"  {kind}/{dtype}: {len(traces)} traces "
+                f"({', '.join(t.name.split(':')[1] for t in traces)}) — "
+                f"{len(viols)} violations")
+            out.extend(viols)
+    return out
+
+
+def check_compile_budget(log=print) -> list[Violation]:
+    from repro.core.shard import ShardedSemanticCache
+    out: list[Violation] = []
+    rng = np.random.default_rng(0)
+    for kind in INDEX_KINDS:
+        for dtype in EMB_DTYPES:
+            for n_shards in SHARD_COUNTS:
+                cache = ShardedSemanticCache(
+                    _policies(), dim=384, capacity=256, n_shards=n_shards,
+                    index_kind=kind, use_device=True, emb_dtype=dtype,
+                    seed=0)
+                # Seed a little content so the sweep searches a live
+                # index, then serve every queue-drain batch size.
+                vecs = rng.standard_normal((8, 384)).astype(np.float32)
+                vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+                cats = ["a", "b"] * 4
+                cache.insert_batch(vecs, cats, [f"q{i}" for i in range(8)],
+                                   [f"r{i}" for i in range(8)])
+                census = collect_compile_census(
+                    cache, batches=SERVE_BATCHES,
+                    name=f"{kind}/{dtype}/shards={n_shards}")
+                viols = CompileBudget().check(census)
+                log(f"  {census.name}: families="
+                    f"{ {k: v for k, v in sorted(census.families.items())} }"
+                    f" — {len(viols)} violations")
+                out.extend(viols)
+    return out
+
+
+def check_vmem(log=print) -> list[Violation]:
+    viols, report = vmem.check_kernels()
+    peak = max(report, key=lambda t: t[1].vmem_bytes)
+    log(f"  {len(report)} kernel launches estimated; peak VMEM "
+        f"{peak[1].vmem_bytes / 2**20:.2f} MiB ({peak[0]}) of "
+        f"{vmem.VMEM_BYTES / 2**20:.0f} MiB budget — "
+        f"{len(viols)} violations")
+    return viols
+
+
+def check_mirror(log=print) -> list[Violation]:
+    paths = mirror_lint.default_paths()
+    viols = mirror_lint.lint_paths(paths)
+    log(f"  {len(paths)} modules linted "
+        f"({', '.join(p.name for p in paths)}) — {len(viols)} violations")
+    return viols
+
+
+def main(argv=None) -> int:
+    quiet = bool(argv) and "-q" in argv
+    log = (lambda *a, **k: None) if quiet else print
+    sections = (
+        ("HLO contracts (gather / host-transfer / donation / dtype)",
+         check_hlo_contracts),
+        ("Compile budget (serve-batch bucketing)", check_compile_budget),
+        ("Pallas VMEM/SMEM budget", check_vmem),
+        ("Mirror-coherence lint", check_mirror),
+    )
+    violations: list[Violation] = []
+    for title, fn in sections:
+        log(f"[{title}]")
+        violations.extend(fn(log))
+    if violations:
+        print(f"\nFAIL: {len(violations)} contract violation(s)",
+              file=sys.stderr)
+        for v in violations:
+            print(str(v), file=sys.stderr)
+        return 1
+    log("\nOK: all hot-path contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,460 @@
+"""Static hot-path contract checker: rules over jaxprs and optimized HLO.
+
+The paper's economics — a 2 ms miss cost making long-tail categories
+cacheable (break-even 3-5 % instead of 15-20 %) — hold only while the
+compiled hot path keeps its structural invariants. Each invariant was
+introduced by a specific PR and was, until now, pinned by at most one
+scattered dynamic assertion:
+
+* **NoMaterializedGather** (PR 3): the fused frontier-hop path never
+  materializes a ``(B, F·M, d)`` embedding gather in XLA — candidate
+  rows move as per-candidate kernel DMAs, so HBM traffic is
+  O(rows actually gathered), not O(B·F·M·d) per hop.
+* **NoHostTransfer**: no host callbacks / infeed / outfeed inside a
+  hot-path executable — a host round trip inside the 2 ms budget is a
+  silent 10-100x regression that wall-clock CI noise can hide.
+* **DonationHonored** (PR 2): the delta-flush scatter really aliases
+  its table operand (input donated), so a sync moves O(delta) bytes
+  instead of copying the whole O(capacity·d) table every flush.
+* **DtypeDiscipline** (PR 4): a quantized trace reads the ``emb_q``
+  table *as s8* and never silently rematerializes it as a full fp32
+  table before the dot (the dequant must stay fused per-row/tile).
+* **CompileBudget** (PR 3): batch bucketing gives ONE executable per
+  {index kind, dtype} family across B = 1..max_batch — not one per
+  batch size, which would multiply warm-up latency and jit-cache
+  footprint under serving traffic.
+
+This module turns those into reusable :class:`Rule` objects over two
+target kinds — :class:`HloTrace` (a lowered + compiled hot-path
+executable: optimized HLO text parsed with the ``hlo_cost`` analyzer,
+plus the StableHLO lowering, which carries the donation attributes that
+CPU executables drop) and :class:`CompileCensus` (deterministic
+compilation counters observed over a batch-size sweep). It parses, it
+never times: every check here is wall-clock independent and safe to
+gate CI on. ``python -m repro.analysis.check`` applies the rules to
+every real hot path; ``tests/test_contracts.py`` holds the
+synthetic-violation fixtures each rule must flag.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analysis import hlo_cost
+
+# Embedding-payload dtypes: the only dtypes a materialized (B, K, d)
+# candidate gather could carry. Index/id gathers (s32) are fine.
+_EMB_DTYPES = ("f64", "f32", "bf16", "f16", "s8")
+
+# Host-transfer fingerprints in optimized HLO. ``custom-call`` is NOT
+# enough by itself — TopK lowers to a benign custom-call on CPU — so
+# custom-call targets are matched against the blocklist below.
+_HOST_TRANSFER_OPS = frozenset({
+    "outfeed", "infeed", "send", "recv", "send-done", "recv-done",
+})
+_HOST_CUSTOM_CALL_RE = re.compile(
+    r"callback|host|py_func|xla_ffi_python", re.IGNORECASE)
+_CUSTOM_CALL_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+# StableHLO donation attribute: jit donation survives lowering on every
+# backend (CPU executables drop the HLO-level input_output_alias, so the
+# compiled text cannot be used for this check).
+_ALIAS_ATTR_RE = re.compile(r"tf\.aliasing_output|jax\.buffer_donor")
+_MAIN_ARG_RE = re.compile(r"%arg(\d+):\s*tensor<[^>]*>\s*(\{[^}]*\})?")
+
+
+# ---------------------------------------------------------------------------
+# Targets.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Violation:
+    """One broken contract: which rule, on which target, and the HLO /
+    source evidence a reviewer needs to locate the regression."""
+    rule: str
+    target: str
+    message: str
+    evidence: str = ""
+
+    def __str__(self) -> str:
+        ev = f"\n      {self.evidence}" if self.evidence else ""
+        return f"[{self.rule}] {self.target}: {self.message}{ev}"
+
+
+@dataclass
+class HloTrace:
+    """One hot-path executable as a static-analysis target.
+
+    ``hlo`` is the optimized HLO text (``lowered.compile().as_text()``)
+    — what actually runs, post-fusion. ``stablehlo`` is the lowering
+    text (``lowered.as_text()``), kept because donation is recorded
+    there as ``tf.aliasing_output`` argument attributes on every
+    backend. ``meta`` carries the structural facts rules check against:
+
+      d            lane-padded embedding width of this trace
+      capacity     index capacity (full-table row count)
+      emb_dtype    "float32" | "int8" — selects DtypeDiscipline
+      donated_args tuple of argument indices that MUST be donated
+    """
+    name: str
+    hlo: str = ""
+    stablehlo: str = ""
+    meta: dict = field(default_factory=dict)
+    _comps: dict | None = field(default=None, repr=False)
+
+    def computations(self) -> dict[str, list]:
+        """Parsed op lists per HLO computation (hlo_cost's parser)."""
+        if self._comps is None:
+            self._comps = hlo_cost._parse_computations(self.hlo)
+        return self._comps
+
+    def ops(self):
+        for ops in self.computations().values():
+            yield from ops
+
+
+@dataclass
+class CompileCensus:
+    """Compilation counters per executable family, observed over a
+    deterministic batch-size sweep (``search_stats["compilations"]``
+    counts distinct compiled signatures). Bucketing's contract: each
+    family compiles ``expected`` programs no matter how many batch
+    sizes it served."""
+    name: str
+    families: dict[str, int] = field(default_factory=dict)
+    expected: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Rule framework.
+# ---------------------------------------------------------------------------
+
+class Rule:
+    """One hot-path contract. ``target_kind`` selects which targets the
+    rule sees; ``check`` returns the violations (empty = contract
+    holds). Rules must be pure functions of their target — no clocks,
+    no device state — so the checker is deterministic in CI."""
+
+    name = "Rule"
+    target_kind: type = HloTrace
+
+    def check(self, target) -> list[Violation]:
+        raise NotImplementedError
+
+    def _v(self, target, message: str, evidence: str = "") -> Violation:
+        return Violation(self.name, target.name, message, evidence)
+
+
+def run_rules(targets, rules=None) -> list[Violation]:
+    """Apply every rule to every target it understands."""
+    rules = DEFAULT_RULES if rules is None else rules
+    out: list[Violation] = []
+    for t in targets:
+        for r in rules:
+            if isinstance(t, r.target_kind):
+                out.extend(r.check(t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rules.
+# ---------------------------------------------------------------------------
+
+class NoMaterializedGather(Rule):
+    """No XLA-materialized ``(B, K, d)`` embedding gather on a fused
+    trace (PR 3's zero-gather invariant, previously a one-off regex in
+    tests/test_lookup_pipeline.py). A rank >= 3 gather whose minor dim
+    is the trace's embedding width is candidate rows round-tripping
+    through HBM — the exact thing the frontier-hop kernel exists to
+    avoid."""
+
+    name = "NoMaterializedGather"
+
+    def check(self, trace: HloTrace) -> list[Violation]:
+        d = int(trace.meta.get("d", 0))
+        out = []
+        for op in trace.ops():
+            if op.kind != "gather":
+                continue
+            for dt, dims in hlo_cost._SHAPE_RE.findall(op.result_type):
+                if dt not in _EMB_DTYPES:
+                    continue
+                shape = [int(x) for x in dims.split(",") if x]
+                if len(shape) >= 3 and d and shape[-1] == d:
+                    out.append(self._v(
+                        trace,
+                        f"materialized {dt}{shape} embedding gather — "
+                        f"candidate rows must move as per-candidate "
+                        f"kernel DMAs, not an XLA gather",
+                        op.line.strip()[:160]))
+        return out
+
+
+class NoHostTransfer(Rule):
+    """No host transfers inside a hot-path executable: infeed/outfeed/
+    send/recv ops, or custom-calls into python/host callbacks. One host
+    round trip inside the 2 ms search budget silently costs more than
+    the entire local search."""
+
+    name = "NoHostTransfer"
+
+    def check(self, trace: HloTrace) -> list[Violation]:
+        out = []
+        for op in trace.ops():
+            if op.kind in _HOST_TRANSFER_OPS:
+                out.append(self._v(trace,
+                                   f"host-transfer op '{op.kind}' on the "
+                                   f"hot path", op.line.strip()[:160]))
+            elif op.kind == "custom-call":
+                m = _CUSTOM_CALL_TARGET_RE.search(op.line)
+                target = m.group(1) if m else ""
+                if _HOST_CUSTOM_CALL_RE.search(target):
+                    out.append(self._v(
+                        trace,
+                        f"host-callback custom-call "
+                        f"'{target}' on the hot path",
+                        op.line.strip()[:160]))
+        return out
+
+
+class DonationHonored(Rule):
+    """Every buffer the flush path donates is actually aliased in the
+    lowering (``tf.aliasing_output`` on the argument). A dropped alias
+    means the 'in-place' delta scatter quietly copies the whole
+    O(capacity·d) table every sync — the exact cost delta sync exists
+    to avoid — and nothing at runtime would ever notice."""
+
+    name = "DonationHonored"
+
+    def check(self, trace: HloTrace) -> list[Violation]:
+        donated = trace.meta.get("donated_args", ())
+        if not donated or not trace.stablehlo:
+            return []
+        m = re.search(r"func\.func public @main\((.*?)\)\s*->",
+                      trace.stablehlo, re.S)
+        sig = m.group(1) if m else trace.stablehlo
+        attrs = {int(i): (a or "") for i, a in _MAIN_ARG_RE.findall(sig)}
+        out = []
+        for i in donated:
+            if not _ALIAS_ATTR_RE.search(attrs.get(i, "")):
+                out.append(self._v(
+                    trace,
+                    f"argument {i} is not donated/aliased in the "
+                    f"lowering — the delta flush copies the full table "
+                    f"instead of updating in place",
+                    f"main arg attrs: {attrs.get(i, '<missing>')!r}"))
+        return out
+
+
+class DtypeDiscipline(Rule):
+    """Quantized traces keep the int8 table int8. Two checks, sharing
+    the ``hlo_cost`` per-dtype byte accounting with bench_quant's gate:
+    (1) no ``convert`` rematerializes a capacity-row fp32 copy of the
+    int8 table (per-row/tile converts inside the fused kernels are the
+    *intended* dequant and stay untouched); (2) the trace actually
+    moves s8 bytes at all — a quantized trace with zero s8 traffic
+    means the fp32 control-plane table leaked onto the hot path."""
+
+    name = "DtypeDiscipline"
+    # A convert is "full-table" when it covers at least this fraction of
+    # capacity rows in ONE op. Tile-streamed dequant (flat_topk converts
+    # one block_n = 1024 row tile per loop trip) stays under it as long
+    # as traces are collected at capacity >= 2x the largest tile — which
+    # is why ``collect_hot_path_traces`` defaults to capacity 4096.
+    full_table_frac = 0.5
+
+    def check(self, trace: HloTrace) -> list[Violation]:
+        if trace.meta.get("emb_dtype") != "int8":
+            return []
+        cap = int(trace.meta.get("capacity", 0))
+        d = int(trace.meta.get("d", 0))
+        out = []
+        for op in trace.ops():
+            if op.kind != "convert":
+                continue
+            for dt, dims in hlo_cost._SHAPE_RE.findall(op.result_type):
+                if dt not in ("f32", "f64", "bf16", "f16"):
+                    continue
+                shape = [int(x) for x in dims.split(",") if x]
+                if (len(shape) >= 2 and cap and shape[-1] == d
+                        and shape[0] >= cap * self.full_table_frac):
+                    out.append(self._v(
+                        trace,
+                        f"silent fp32 materialization: convert -> "
+                        f"{dt}{shape} rebuilds the int8 table as fp32 "
+                        f"before the dot (dequant must stay fused "
+                        f"per-row)", op.line.strip()[:160]))
+        split = hlo_cost.analyze(trace.hlo).bytes_by_dtype
+        if split.get("s8", 0) == 0:
+            out.append(self._v(
+                trace,
+                "quantized trace moves zero s8 bytes — the int8 "
+                "resident table is not on this hot path (fp32 "
+                "control plane leaked into the compiled search?)",
+                f"bytes_by_dtype: { {k: int(v) for k, v in split.items()} }"))
+        return out
+
+
+class CompileBudget(Rule):
+    """One executable per {index kind, dtype} family across the whole
+    serve-batch sweep: bucketing pads B to powers of two so B = 1..max
+    share one compiled program. families maps family key -> distinct
+    compiled signatures observed; each must equal ``expected``."""
+
+    name = "CompileBudget"
+    target_kind = CompileCensus
+
+    def check(self, census: CompileCensus) -> list[Violation]:
+        out = []
+        for fam, n in sorted(census.families.items()):
+            if n != census.expected:
+                out.append(Violation(
+                    self.name, census.name,
+                    f"family {fam}: {n} compiled programs over the "
+                    f"batch sweep (expected {census.expected}) — "
+                    f"batch bucketing regressed",
+                    f"families: {census.families}"))
+        return out
+
+
+DEFAULT_RULES: tuple[Rule, ...] = (
+    NoMaterializedGather(), NoHostTransfer(), DonationHonored(),
+    DtypeDiscipline(), CompileBudget(),
+)
+
+
+# ---------------------------------------------------------------------------
+# Trace collection: the real hot paths, lowered the way production
+# dispatches them (fused kernels forced so the CPU checker sees the
+# same program structure the TPU runs).
+# ---------------------------------------------------------------------------
+
+def _unit_rows(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _padded_d(d: int) -> int:
+    return d + ((-d) % 128)
+
+
+def build_index(index_kind: str, emb_dtype: str, *, dim: int = 384,
+                capacity: int = 4096, n: int = 64, seed: int = 0):
+    """A small populated index of the production shape family (d = 384
+    lane-native): capacity only scales table rows, not trace structure,
+    so contract checks stay cheap. Capacity must stay >= 2x the largest
+    scoring tile (flat_topk's block_n = 1024 rows) so DtypeDiscipline
+    can tell tile-streamed dequant from full-table rematerialization."""
+    from repro.core.hnsw import FlatIndex, HNSWIndex, HNSWParams
+    rng = np.random.default_rng(seed)
+    vecs = _unit_rows(rng, n, dim)
+    cats = (np.arange(n) % 2).astype(np.int32)
+    if index_kind == "flat":
+        idx = FlatIndex(dim, capacity, emb_dtype=emb_dtype)
+    else:
+        idx = HNSWIndex(dim, capacity,
+                        params=HNSWParams(M=4, M0=8, beam=8, max_hops=4,
+                                          n_entries=4, emb_dtype=emb_dtype),
+                        seed=seed)
+    idx.add_batch(vecs, cats)
+    return idx
+
+
+def lower_classified_search(index, *, B: int = 8, seed: int = 0,
+                            name: str | None = None) -> HloTrace:
+    """Lower the index's real classified-search hot path — the fused
+    Pallas hop forced for HNSW (the jnp reference is the CPU *oracle*,
+    not the production trace) — into an :class:`HloTrace`."""
+    import jax.numpy as jnp
+
+    from repro.core import hnsw as H
+    rng = np.random.default_rng(seed)
+    q = _unit_rows(rng, B, index.dim)
+    taus = np.full(B, 0.9, np.float32)
+    qcat = (np.arange(B) % 2).astype(np.int32)
+    ttls = np.full(B, 60.0, np.float32)
+    t = index.device_tables()
+    _, Bp, qp, taup, qcp, tp = H._pad_query_batch(q, taus, qcat, ttls)
+    meta = {"d": _padded_d(index.dim), "capacity": index.capacity,
+            "emb_dtype": index.emb_dtype, "B": Bp}
+    if isinstance(index, H.FlatIndex):
+        lowered = H._flat_search_classified.lower(
+            t["emb"], t["valid"], t["category"], t["inserted"],
+            jnp.asarray(qp), jnp.asarray(taup), jnp.asarray(qcp),
+            jnp.asarray(tp), jnp.float32(0.0), t.get("scale"))
+        label = f"flat_search_classified[{index.emb_dtype}]"
+    else:
+        lowered = H.beam_search_classified.lower(
+            t["emb"], t["neighbors"], t["valid"], t["entries"],
+            t["inserted"], jnp.asarray(qp), jnp.asarray(taup),
+            jnp.asarray(tp), jnp.float32(0.0), t["category"],
+            jnp.asarray(qcp), t.get("scale"), beam=index.p.beam,
+            max_hops=index.p.max_hops, hop_impl="fused_pallas")
+        label = f"beam_search_classified[{index.emb_dtype}]"
+    return HloTrace(name=name or label, hlo=lowered.compile().as_text(),
+                    stablehlo=lowered.as_text(), meta=meta)
+
+
+def lower_delta_flush(index, *, rows: int = 8,
+                      name: str | None = None) -> list[HloTrace]:
+    """Lower the delta-flush scatters for the index's embedding table:
+    the Pallas row-scatter kernel (the lane-aligned production path)
+    AND the XLA in-place scatter (the narrow-table / CPU path). Both
+    donate the table operand (argument 0) — DonationHonored pins it."""
+    import jax
+
+    from repro.kernels import ops as K
+    from repro.kernels import scatter_update as SU
+    emb = index._emb_tables()["emb"]
+    table = jax.ShapeDtypeStruct(emb.shape, emb.dtype)
+    ridx = jax.ShapeDtypeStruct((rows,), np.int32)
+    vals = jax.ShapeDtypeStruct((rows,) + emb.shape[1:], emb.dtype)
+    base = name or f"delta_flush[{index.emb_dtype}]"
+    meta = {"d": emb.shape[1], "capacity": index.capacity,
+            "emb_dtype": index.emb_dtype, "donated_args": (0,)}
+    out = []
+    for label, lowered in (
+            (f"{base}.pallas",
+             SU.scatter_rows.lower(table, ridx, vals, interpret=True)),
+            (f"{base}.xla",
+             K._scatter_rows_xla.lower(table, ridx, vals))):
+        out.append(HloTrace(name=label, hlo=lowered.compile().as_text(),
+                            stablehlo=lowered.as_text(), meta=dict(meta)))
+    return out
+
+
+def collect_hot_path_traces(index_kind: str, emb_dtype: str, *,
+                            dim: int = 384, capacity: int = 4096,
+                            seed: int = 0) -> list[HloTrace]:
+    """All HLO-level contract targets for one {index kind, dtype} cell:
+    the classified search (the read hot loop) and the delta-flush
+    scatters (the write hot loop)."""
+    idx = build_index(index_kind, emb_dtype, dim=dim, capacity=capacity,
+                      seed=seed)
+    prefix = f"{index_kind}/{emb_dtype}"
+    traces = [lower_classified_search(
+        idx, seed=seed, name=f"{prefix}:search_classified")]
+    traces += lower_delta_flush(idx, name=f"{prefix}:delta_flush")
+    return traces
+
+
+def collect_compile_census(cache, *, batches=(1, 2, 3, 5, 8),
+                           name: str = "serve") -> CompileCensus:
+    """Drive a (possibly sharded) cache through a serve-batch sweep and
+    censor each shard-index's compilation counter. Deterministic: the
+    counter counts distinct compiled signatures, never wall clock."""
+    rng = np.random.default_rng(0)
+    cats = sorted(cache.policies.categories())
+    for B in batches:
+        q = _unit_rows(rng, B, cache.dim)
+        cache.lookup_batch(q, [cats[i % len(cats)] for i in range(B)])
+    shards = getattr(cache, "shards", None) or [cache]
+    families = {}
+    for si, shard in enumerate(shards):
+        key = (f"{shard.index.__class__.__name__}"
+               f"[{shard.index.emb_dtype}] shard{si}")
+        families[key] = shard.index.search_stats["compilations"]
+    return CompileCensus(name=name, families=families, expected=1)

@@ -22,7 +22,6 @@ per-device. This is the measurement backing EXPERIMENTS.md §Roofline.
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 
@@ -64,6 +63,30 @@ def _shape_elems_bytes(text: str) -> tuple[int, int]:
     return elems, total
 
 
+def _bytes_by_dtype(text: str) -> dict[str, int]:
+    """Bytes per dtype over all shapes in a type string — the s8-vs-f32
+    split the quantized-residency contracts gate on (a quantized trace
+    must move its table bytes as s8; an f32 rematerialization of the
+    int8 table shows up here as f32 bytes it should not have)."""
+    out: dict[str, int] = {}
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[dt] = out.get(dt, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+def _primary_dtype(text: str) -> str | None:
+    for dt, _dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            return dt
+    return None
+
+
 @dataclass
 class Op:
     name: str
@@ -79,16 +102,36 @@ class Op:
 class Totals:
     flops: float = 0.0
     bytes: float = 0.0
+    bytes_by_dtype: dict = field(default_factory=dict)
     collective_bytes: dict = field(default_factory=dict)
     collective_counts: dict = field(default_factory=dict)
 
     def add(self, other: "Totals", mult: float = 1.0) -> None:
         self.flops += other.flops * mult
         self.bytes += other.bytes * mult
+        for k, v in other.bytes_by_dtype.items():
+            self.bytes_by_dtype[k] = self.bytes_by_dtype.get(k, 0) + v * mult
         for k, v in other.collective_bytes.items():
             self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v * mult
         for k, v in other.collective_counts.items():
             self.collective_counts[k] = self.collective_counts.get(k, 0) + v * mult
+
+    def count_bytes(self, type_text: str) -> float:
+        """Charge every shape in ``type_text`` to the total AND to its
+        dtype bucket. Returns the bytes charged."""
+        nbytes = 0.0
+        for dt, v in _bytes_by_dtype(type_text).items():
+            self.bytes_by_dtype[dt] = self.bytes_by_dtype.get(dt, 0) + v
+            nbytes += v
+        self.bytes += nbytes
+        return nbytes
+
+    def count_bytes_as(self, nbytes: float, dtype: str | None) -> None:
+        """Charge pre-computed bytes to one dtype bucket (partially
+        touched operands, where the byte count is not the full shape)."""
+        self.bytes += nbytes
+        key = dtype or "unknown"
+        self.bytes_by_dtype[key] = self.bytes_by_dtype.get(key, 0) + nbytes
 
     @property
     def total_collective_bytes(self) -> float:
@@ -96,6 +139,7 @@ class Totals:
 
     def to_dict(self) -> dict:
         return {"flops": self.flops, "bytes": self.bytes,
+                "bytes_by_dtype": dict(self.bytes_by_dtype),
                 "collective_bytes": dict(self.collective_bytes),
                 "collective_counts": dict(self.collective_counts),
                 "total_collective_bytes": self.total_collective_bytes}
@@ -216,12 +260,11 @@ def analyze(hlo: str, entry: str | None = None) -> Totals:
                 continue
             base = op.kind.replace("-start", "")
             if base in COLLECTIVES:
-                _, rbytes = _shape_elems_bytes(op.result_type)
+                rbytes = t.count_bytes(op.result_type)
                 t.collective_bytes[base] = \
                     t.collective_bytes.get(base, 0) + rbytes
                 t.collective_counts[base] = \
                     t.collective_counts.get(base, 0) + 1
-                t.bytes += rbytes
                 continue
             if op.kind.endswith("-done"):
                 continue
@@ -238,13 +281,15 @@ def analyze(hlo: str, entry: str | None = None) -> Totals:
                 # operands charged at the bytes actually touched (a
                 # dynamic-slice fusion inside a scan reads ONE slice per
                 # iteration, not the whole stacked tensor).
-                _, rbytes = _shape_elems_bytes(op.result_type)
+                t.count_bytes(op.result_type)
                 touched = _sliced_param_bytes(op, comps)
-                obytes = 0
                 for i, o in enumerate(op.operands):
-                    full = _shape_elems_bytes(sym.get(o, ""))[1]
-                    obytes += min(full, touched[i]) if i in touched else full
-                t.bytes += rbytes + obytes
+                    otype = sym.get(o, "")
+                    full = _shape_elems_bytes(otype)[1]
+                    if i in touched and touched[i] < full:
+                        t.count_bytes_as(touched[i], _primary_dtype(otype))
+                    else:
+                        t.count_bytes(otype)
                 # recurse for dots hidden inside (flops only)
                 for callee in op.calls:
                     inner = comp_totals(callee, stack + (name,))
@@ -256,16 +301,14 @@ def analyze(hlo: str, entry: str | None = None) -> Totals:
                 continue
             if op.kind in ("dot", "convolution"):
                 t.flops += _dot_flops(op, sym)
-                _, rbytes = _shape_elems_bytes(op.result_type)
-                obytes = sum(_shape_elems_bytes(sym.get(o, ""))[1]
-                             for o in op.operands)
-                t.bytes += rbytes + obytes
+                t.count_bytes(op.result_type)
+                for o in op.operands:
+                    t.count_bytes(sym.get(o, ""))
                 continue
             # generic op: boundary bytes + 1 flop/elem for arithmetic
-            _, rbytes = _shape_elems_bytes(op.result_type)
-            obytes = sum(_shape_elems_bytes(sym.get(o, ""))[1]
-                         for o in op.operands)
-            t.bytes += rbytes + obytes
+            t.count_bytes(op.result_type)
+            for o in op.operands:
+                t.count_bytes(sym.get(o, ""))
         memo[name] = t
         return t
 

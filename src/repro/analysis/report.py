@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 
 from repro.analysis.roofline import load_reports
 from repro.configs import skipped_cells

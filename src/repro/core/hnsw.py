@@ -250,8 +250,8 @@ class DeviceResidentIndex:
         write (callers already mark the row dirty)."""
         if self.quantized:
             q, s = quantize_rows(vec[None])
-            self.emb_q[slot] = q[0]
-            self.emb_scale[slot] = s[0]
+            self.emb_q[slot] = q[0]        # mirror-ok
+            self.emb_scale[slot] = s[0]    # mirror-ok
 
     def export_rows(self, slots: np.ndarray) -> dict[str, np.ndarray]:
         """Copy the per-slot tables for ``slots`` out of the index — the
@@ -1123,5 +1123,9 @@ class HNSWIndex(DeviceResidentIndex):
                     piv_nodes[pnn[j][:kp]]
         idx.entry_point = int(piv_nodes[0])
         idx.max_level = 1
+        # Every row was written above; log them all dirty. The first sync
+        # is a full upload anyway (no device mirror exists yet), but a
+        # build into a PRE-SYNCED index must not skip the delta log.
+        idx._dirty.update(range(n))
         idx._version += 1
         return idx

@@ -18,7 +18,7 @@ hit rates, false positives (matched a different intent) and staleness.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -13,9 +13,8 @@ Axis convention (DESIGN.md §4):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -15,7 +15,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa

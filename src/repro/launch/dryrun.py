@@ -30,14 +30,14 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import roofline as rl
-from repro.configs import (ARCH_IDS, SHAPES, get_config, runnable_cells,
+from repro.configs import (SHAPES, get_config, runnable_cells,
                            skipped_cells)
 from repro.distributed.context import Dist
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step, \
     make_train_step
-from repro.models.model import Model, padded_vocab
+from repro.models.model import Model
 from repro.models.transformer import init_cache
 from repro.optim.adamw import AdamWConfig, init_opt_state
 

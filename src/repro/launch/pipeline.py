@@ -26,7 +26,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.context import Dist
 from repro.models import transformer as tf
 from repro.models.layers import rms_norm
 from repro.models.model import Model

@@ -3,7 +3,6 @@ decode. These are what the dry-run lowers and what the drivers run."""
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

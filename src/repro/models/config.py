@@ -8,7 +8,7 @@ variant (same family/topology, tiny dims). Exact assigned configs live in
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

@@ -12,7 +12,6 @@ masked to −1e30 before softmax.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -20,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.distributed.context import Dist
 from repro.models import transformer as tf
-from repro.models.attention import qkv_project
 from repro.models.config import ArchConfig
 from repro.models.layers import dtype_of, rms_norm
 

@@ -22,7 +22,6 @@ Modes:
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

@@ -18,7 +18,6 @@ GSPMD derives from the shardings.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

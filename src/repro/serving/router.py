@@ -16,13 +16,11 @@ only as the no-planner fallback.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import numpy as np
 
 from repro.core.cache import SemanticCache
-from repro.core.policy import (AdaptiveController, CategoryConfig,
-                               LoadSignal, PolicyEngine)
+from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
 from repro.core.shard import ShardPlanner, crc32_shard
 
 

@@ -1,0 +1,263 @@
+"""Static contract checker (ISSUE 6): the checker itself is under test.
+
+Two suites. NO-FALSE-NEGATIVE: a synthetic violation per rule — a
+gather-materializing search, a host callback, an un-donated scatter, a
+full-table int8→fp32 rematerialization, a per-batch-size compile blowup,
+a mirror write with no dirty marking, an oversized BlockSpec — each of
+which the intended rule MUST flag, and (for the HLO rules, which share
+targets) no *other* rule may flag. NO-FALSE-POSITIVE: every real hot
+path — both index kinds, both resident dtypes, the delta-flush
+scatters, the sharded serve sweep, the production kernel shape sweep,
+the real core modules — comes back clean. Everything here is static
+(lower/parse/AST): zero wall-clock-dependent assertions.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_cost, mirror_lint, vmem
+from repro.analysis.contracts import (CompileCensus, DonationHonored,
+                                      DtypeDiscipline, HloTrace,
+                                      NoHostTransfer, build_index,
+                                      collect_compile_census,
+                                      collect_hot_path_traces,
+                                      lower_delta_flush, run_rules)
+
+D = 384
+
+
+def _unit(rng, n, d=D):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _trace(fn, *args, meta, name="synthetic") -> HloTrace:
+    lowered = jax.jit(fn).lower(*args)
+    return HloTrace(name=name, hlo=lowered.compile().as_text(),
+                    stablehlo=lowered.as_text(), meta=meta)
+
+
+def _rule_names(violations) -> set:
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# No-false-negative: each synthetic violation trips exactly its rule.
+# ---------------------------------------------------------------------------
+
+def test_flags_materialized_gather_and_only_that():
+    """A search that expands candidates through a (B, K, d) XLA gather —
+    the exact shape the fused hop exists to avoid."""
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(_unit(rng, 64))
+    idx = jnp.asarray(rng.integers(0, 64, (8, 16)), jnp.int32)
+    q = jnp.asarray(_unit(rng, 8))
+
+    def bad_search(emb, idx, q):
+        rows = emb[idx]                          # (B, K, d) materialized
+        return jnp.einsum("bkd,bd->bk", rows, q)
+
+    t = _trace(bad_search, emb, idx, q, meta={"d": D})
+    viols = run_rules([t])
+    assert _rule_names(viols) == {"NoMaterializedGather"}
+    assert "gather" in viols[0].message
+
+
+def test_flags_host_callback_and_only_that():
+    """A host callback spliced into a 'hot path' executable."""
+    def bad(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2.0,
+            jax.ShapeDtypeStruct((8,), jnp.float32), x)
+        return y + 1.0
+
+    t = _trace(bad, jnp.zeros(8, jnp.float32), meta={"d": D})
+    viols = run_rules([t])
+    assert _rule_names(viols) == {"NoHostTransfer"}
+    assert "callback" in viols[0].message
+
+
+def test_topk_custom_call_is_whitelisted():
+    """CPU TopK lowers to a custom-call; it is NOT a host transfer."""
+    t = _trace(lambda x: jax.lax.top_k(x, 4)[0],
+               jnp.zeros((8, 64), jnp.float32), meta={"d": D})
+    assert NoHostTransfer().check(t) == []
+
+
+def test_flags_undonated_scatter_and_only_that():
+    """The delta-flush scatter with donation dropped: functionally
+    identical, but every sync now copies the whole table."""
+    table = jax.ShapeDtypeStruct((256, D), jnp.float32)
+    rows = jax.ShapeDtypeStruct((8,), jnp.int32)
+    vals = jax.ShapeDtypeStruct((8, D), jnp.float32)
+    t = _trace(lambda t, r, v: t.at[r].set(v), table, rows, vals,
+               meta={"d": D, "capacity": 256, "donated_args": (0,)})
+    viols = run_rules([t])
+    assert _rule_names(viols) == {"DonationHonored"}
+    assert "argument 0" in viols[0].message
+
+
+def test_flags_fp32_rematerialization_and_only_that():
+    """A quantized 'search' that converts the whole int8 table to fp32
+    before the dot — the silent 4x HBM regression DtypeDiscipline pins."""
+    cap = 4096
+    emb_q = jnp.zeros((cap, D), jnp.int8)
+    scale = jnp.ones((cap,), jnp.float32)
+    q = jnp.zeros((8, D), jnp.float32)
+
+    def bad_quant_search(emb_q, scale, q):
+        table = emb_q.astype(jnp.float32) * scale[:, None]  # full fp32 copy
+        return q @ table.T
+
+    t = _trace(bad_quant_search, emb_q, scale, q,
+               meta={"d": D, "capacity": cap, "emb_dtype": "int8"})
+    viols = run_rules([t])
+    assert _rule_names(viols) == {"DtypeDiscipline"}
+    assert any("materialization" in v.message for v in viols)
+
+
+def test_flags_quantized_trace_with_no_s8_traffic():
+    """A trace claiming int8 residency that never touches s8 bytes: the
+    fp32 control-plane table leaked onto the hot path."""
+    q = jnp.zeros((8, D), jnp.float32)
+    emb = jnp.zeros((4096, D), jnp.float32)
+    t = _trace(lambda e, q: q @ e.T, emb, q,
+               meta={"d": D, "capacity": 4096, "emb_dtype": "int8"})
+    viols = DtypeDiscipline().check(t)
+    assert len(viols) == 1 and "zero s8 bytes" in viols[0].message
+
+
+def test_flags_per_batch_compile_blowup():
+    """Bucketing regressed: one compiled program per batch size."""
+    census = CompileCensus(name="sweep",
+                           families={"FlatIndex[float32] shard0": 5,
+                                     "FlatIndex[float32] shard1": 1})
+    viols = run_rules([census])
+    assert _rule_names(viols) == {"CompileBudget"}
+    assert len(viols) == 1 and "shard0" in viols[0].message
+
+
+def test_flags_mirror_write_without_dirty_marking():
+    """A host-table write whose rows never reach the dirty log."""
+    src = '''
+class Index:
+    def evict(self, slot):
+        self.valid[slot] = False
+        self.category[slot] = -1
+
+    def good_evict(self, slot):
+        self.valid[slot] = False
+        self._dirty.add(slot)
+'''
+    viols = mirror_lint.lint_source(src, filename="synthetic.py")
+    assert len(viols) == 1
+    assert viols[0].target.endswith(":evict")
+    assert "'category'" in viols[0].message and "'valid'" in viols[0].message
+
+
+def test_mirror_lint_pragma_and_delegate_are_honored():
+    src = '''
+def quantize(self, slot, q):
+    self.emb_q[slot] = q    # mirror-ok
+
+def insert(self, vec):
+    self.slot_inserted[3] = 1.0
+    self.index.add_batch(vec)
+'''
+    assert mirror_lint.lint_source(src) == []
+
+
+def test_flags_oversized_blockspec():
+    """A flat_topk tile fattened past VMEM: 32768 x 384 fp32 x 2
+    (double-buffered) = 96 MiB >> 16 MiB. Static estimate, no device."""
+    from repro.kernels import flat_topk as FT
+    N = 32768
+    thunk = lambda: FT.flat_topk(
+        jax.ShapeDtypeStruct((N, D), jnp.float32),
+        jax.ShapeDtypeStruct((N,), jnp.int8),
+        jax.ShapeDtypeStruct((8, D), jnp.float32), block_n=N)
+    (fp,) = vmem.estimate(thunk)
+    viols = fp.violations("oversized")
+    assert len(viols) == 1 and "VMEM" in viols[0].message
+    assert fp.vmem_bytes > vmem.VMEM_BYTES
+
+
+# ---------------------------------------------------------------------------
+# No-false-positive: every real hot path is clean.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,dtype", [
+    ("flat", "float32"), ("flat", "int8"),
+    ("hnsw", "float32"), ("hnsw", "int8"),
+])
+def test_real_hot_paths_clean(kind, dtype):
+    traces = collect_hot_path_traces(kind, dtype)
+    assert len(traces) == 3            # search + both flush scatters
+    assert run_rules(traces) == []
+
+
+def test_real_delta_flush_is_donated():
+    """Positive control for DonationHonored: the real scatters carry the
+    alias attribute the synthetic fixture lacks."""
+    idx = build_index("flat", "float32", capacity=256)
+    for t in lower_delta_flush(idx):
+        assert t.meta["donated_args"] == (0,)
+        assert DonationHonored().check(t) == []
+
+
+def test_real_serve_sweep_compiles_once_per_shard():
+    from repro.core.policy import CategoryConfig, PolicyEngine
+    from repro.core.shard import ShardedSemanticCache
+    pol = PolicyEngine([
+        CategoryConfig("a", threshold=0.85, ttl=1e6, quota=0.5),
+        CategoryConfig("b", threshold=0.80, ttl=1e6, quota=0.5),
+    ])
+    cache = ShardedSemanticCache(pol, dim=48, capacity=64, n_shards=2,
+                                 index_kind="flat", use_device=True, seed=0)
+    rng = np.random.default_rng(0)
+    cache.insert_batch(_unit(rng, 6, 48), ["a", "b"] * 3,
+                       [f"q{i}" for i in range(6)],
+                       [f"r{i}" for i in range(6)])
+    census = collect_compile_census(cache, batches=(1, 2, 3, 5, 8))
+    assert len(census.families) == 2
+    assert run_rules([census]) == []
+
+
+def test_production_kernel_sweep_fits_budget():
+    viols, report = vmem.check_kernels()
+    assert viols == []
+    assert len(report) >= 24           # all kernels x dtypes x shapes
+    names = {fp.name for _, fp in report}
+    assert {"_flat_topk_kernel", "_frontier_hop_kernel",
+            "_scatter_rows_kernel"} <= names
+
+
+def test_real_core_modules_pass_mirror_lint():
+    assert mirror_lint.lint_paths() == []
+
+
+# ---------------------------------------------------------------------------
+# Shared accounting: hlo_cost's per-dtype byte split (satellite 2).
+# ---------------------------------------------------------------------------
+
+def test_bytes_by_dtype_partitions_total_bytes():
+    for kind, dtype in (("flat", "int8"), ("hnsw", "float32")):
+        trace = collect_hot_path_traces(kind, dtype)[0]
+        t = hlo_cost.analyze(trace.hlo)
+        assert t.bytes > 0
+        assert sum(t.bytes_by_dtype.values()) == pytest.approx(t.bytes)
+
+
+def test_quantized_trace_moves_mostly_s8_table_bytes():
+    """The int8 search's table traffic shows up in the s8 bucket — the
+    same accounting path bench_quant's byte gate reads."""
+    fp32 = hlo_cost.analyze(
+        collect_hot_path_traces("flat", "float32")[0].hlo).bytes_by_dtype
+    int8 = hlo_cost.analyze(
+        collect_hot_path_traces("flat", "int8")[0].hlo).bytes_by_dtype
+    assert fp32.get("s8", 0) < int8["s8"]
+    assert int8["s8"] > int8.get("f32", 0) * 0.5   # table dominates
+    assert int8.get("f32", 1e18) < fp32["f32"]     # fp32 traffic shrank

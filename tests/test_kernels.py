@@ -4,7 +4,6 @@ Every kernel sweeps shapes + dtypes and must allclose its ref.py oracle.
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -7,8 +7,6 @@ mode) must agree on idx, score, hit class and the deterministic counters
 over random graphs with tombstones, wildcard queries and mixed categories.
 """
 
-import re
-
 import numpy as np
 import pytest
 
@@ -270,7 +268,10 @@ def test_fused_path_has_no_materialized_embedding_gather():
     gather shaped (B, K, d) — hop scoring goes through ops.hop_scores /
     the frontier-hop kernel, so candidate embeddings never materialize as
     an XLA gather. The reference path (the CPU oracle) does contain one,
-    which also proves the detector works."""
+    which also proves the rule works. The check itself is the
+    ``contracts.NoMaterializedGather`` rule (the shared static-analysis
+    gate), not a local regex."""
+    from repro.analysis.contracts import HloTrace, NoMaterializedGather
     d, B = 256, 8
     idx, vecs, _cats, rng = _random_graph(41, n=40, d=d)
     t = idx.device_tables()
@@ -279,12 +280,13 @@ def test_fused_path_has_no_materialized_embedding_gather():
             jnp.asarray(np.full(B, 0.9, np.float32)), t["category"],
             jnp.asarray(np.zeros(B, np.int32)))
 
-    def hlo(impl):
-        return beam_search.lower(*args, beam=idx.p.beam, max_hops=3,
-                                 hop_impl=impl).compile().as_text()
+    def trace(impl):
+        hlo = beam_search.lower(*args, beam=idx.p.beam, max_hops=3,
+                                hop_impl=impl).compile().as_text()
+        return HloTrace(name=impl, hlo=hlo, meta={"d": d})
 
-    emb_gather = re.compile(r"f32\[\d+,\d+,%d\][^)]*\bgather\(" % d)
-    assert emb_gather.search(hlo("reference")) is not None, \
-        "detector broken: reference path should materialize the gather"
-    assert emb_gather.search(hlo("fused_pallas")) is None, \
+    rule = NoMaterializedGather()
+    assert rule.check(trace("reference")), \
+        "rule broken: reference path should materialize the gather"
+    assert rule.check(trace("fused_pallas")) == [], \
         "fused path still materializes a (B, K, d) embedding gather"

@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import SemanticCache, SimClock
-from repro.core.hnsw import (FlatIndex, HNSWIndex, HNSWParams, INVALID,
+from repro.core.hnsw import (FlatIndex, HNSWIndex, HNSWParams,
                              quantize_rows)
 from repro.core.policy import CategoryConfig, PolicyEngine
 from repro.core.storage import Document, InMemoryStore

@@ -1,11 +1,9 @@
 """End-to-end simulator behavior: Table 1 bands, baseline comparisons,
 adaptive load reduction, staleness/TTL trade-offs."""
 
-import numpy as np
 import pytest
 
-from repro.core.policy import AdaptiveController, PolicyEngine, \
-    paper_policies
+from repro.core.policy import PolicyEngine, paper_policies
 from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
 from repro.serving.simulator import ServingSimulator, SimConfig
 
