@@ -21,6 +21,10 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
     bench_shard       — sharded tier: planner-vs-crc32 placement balance
                         on Table 1 + per-shard sync flatness across a
                         capacity sweep, counter-gated
+    bench_admission   — admission gate + cost-aware eviction: hit rate
+                        per resident byte on the scenario matrix,
+                        counter-gated (uniform_tail improves strictly,
+                        power_law head untouched)
 """
 
 from __future__ import annotations
@@ -30,11 +34,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_adaptive, bench_breakeven, bench_hnsw,
-                        bench_kernels, bench_latency, bench_longtail,
-                        bench_lookup, bench_memory, bench_quant,
-                        bench_routing, bench_serve, bench_shard,
-                        bench_thresholds)
+from benchmarks import (bench_adaptive, bench_admission, bench_breakeven,
+                        bench_hnsw, bench_kernels, bench_latency,
+                        bench_longtail, bench_lookup, bench_memory,
+                        bench_quant, bench_routing, bench_serve,
+                        bench_shard, bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -50,6 +54,7 @@ ALL = {
     "lookup": bench_lookup.run,
     "quant": bench_quant.run,
     "shard": bench_shard.run,
+    "admission": bench_admission.run,
 }
 
 

@@ -2,6 +2,8 @@
 
 Modules:
     policy     — per-category configs + adaptive load-based controller (§3, §7.5)
+    admission  — frequency-sketch admission control + cost-aware eviction
+                 scoring (expected-hits × miss-cost per resident byte)
     embedding  — 384-d feature-hash embedder + synthetic category spaces (§3.1)
     hnsw       — TPU-adapted batched-frontier HNSW index (§5, §5.3)
     cache      — hybrid cache: Algorithm 1 lookup, insert, evict, quotas (§5)
@@ -19,6 +21,14 @@ from repro.core.policy import (  # noqa: F401
     PolicyEngine,
     AdaptiveController,
     LoadSignal,
+)
+from repro.core.admission import (  # noqa: F401
+    AdmissionController,
+    CategoryTracker,
+    FrequencySketch,
+    QueryFingerprinter,
+    CostAwareEvictionScorer,
+    StaticEvictionScorer,
 )
 from repro.core.cache import SemanticCache, CacheResult  # noqa: F401
 from repro.core.shard import (  # noqa: F401

@@ -55,6 +55,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro.core.admission import AdmissionController, make_eviction_scorer
 from repro.core.clock import Clock, SimClock
 from repro.core.hnsw import CLS_EXPIRED, CLS_HIT, CLS_MISS, FlatIndex, \
     HNSWIndex, HNSWParams, INVALID
@@ -95,7 +96,8 @@ class SemanticCache:
                  insert_ms: float = 1.0, l1_capacity: int = 0,
                  seed: int = 0, emb_dtype: str = "float32",
                  quota_capacity: int | None = None,
-                 doc_id_start: int = 0, doc_id_step: int = 1):
+                 doc_id_start: int = 0, doc_id_step: int = 1,
+                 eviction: str = "static"):
         self.policies = policies
         self.dim = dim
         self.capacity = capacity
@@ -116,6 +118,17 @@ class SemanticCache:
         self.search_ms = search_ms
         self.insert_ms = insert_ms
         self.metrics = MetricsRegistry()
+        # Eviction scorer (core/admission.py): "static" = the §5.4
+        # priority × 1/age × hitRate formula (seed behavior, default);
+        # "cost_aware" prices slots by expected-hits × miss-cost per
+        # resident byte (economics.ResidencyModel).
+        self.eviction = eviction
+        self._evictor = make_eviction_scorer(eviction)
+        # Admission control plane: per-category repetition sketches,
+        # lazily built and seeded from the category NAME, so shards of a
+        # sharded cache reach identical admission decisions. Consulted
+        # only for categories with admit_after > 1 — zero cost otherwise.
+        self.admission = AdmissionController(dim)
 
         if index_kind == "hnsw":
             self.index: HNSWIndex | FlatIndex = HNSWIndex(
@@ -151,6 +164,9 @@ class SemanticCache:
         # Device-search observability (hops, rows gathered) from the last
         # lookup_batch, materialized at the single host-conversion point.
         self.last_lookup_stats: dict = {}
+        # Write-path observability from the last insert_batch: batch
+        # size, items past the compliance gate, admission skips.
+        self.last_insert_stats: dict = {}
 
         # §7.6 hot-document L1: doc_id -> response, LRU by insertion order
         # (move-to-end on touch, evict from the front) — O(1) per hit.
@@ -436,11 +452,45 @@ class SemanticCache:
             else:
                 admitted.append(i)
         if not admitted:
+            self.last_insert_stats = {"batch": B, "admitted": 0,
+                                      "admission_skips": 0,
+                                      "insert_rejects": B}
             return slots_out
 
         self.clock.advance(self.insert_ms / 1e3)   # one batched write round
         now = self._now()
         cids = {c: self._cat_id(c) for c in eff}
+
+        # Admission gate (core/admission.py): a category with
+        # admit_after > 1 only caches a miss once its canonical key has
+        # repeated enough in the per-category sketch. The repetition
+        # test reuses the category's OWN similarity threshold — "would
+        # this query have hit, had we cached its earlier occurrence?" —
+        # so gate and cache agree on what a repeat is. Skipped items
+        # return INVALID and count as admission_skips — they were still
+        # misses upstream (lookup already counted them), they just don't
+        # spend quota bytes. The observed repetition count feeds the
+        # fresh-entry eviction prior for items that DO land.
+        freq: dict[int, int] = {}
+        gated: list[int] = []
+        for i in admitted:
+            c = categories[i]
+            k = eff[c].admit_after
+            if k > 1:
+                cnt = self.admission.observe(c, embeddings[i],
+                                             tau=eff[c].threshold)
+                if cnt < k:
+                    self.metrics.cat(c).admission_skips += 1
+                    continue
+                freq[i] = cnt
+            gated.append(i)
+        self.last_insert_stats = {
+            "batch": B, "admitted": len(gated),
+            "admission_skips": len(admitted) - len(gated),
+            "insert_rejects": B - len(admitted)}
+        if not gated:
+            return slots_out
+        admitted = gated
 
         # Occupancy bookkeeping is one cheap pass; the eviction SCORING
         # pass (+inf marks non-candidates so victim selection is a masked
@@ -451,7 +501,6 @@ class SemanticCache:
         cat_counts = {cid: int((live_mask & (cat_snapshot == cid)).sum())
                       for cid in cids.values()}
         live_count = int(live_mask.sum())
-        _, pri_by_cid = self._per_category_arrays()
         scores: np.ndarray | None = None
 
         def ensure_scores() -> np.ndarray:
@@ -464,9 +513,11 @@ class SemanticCache:
             return scores
 
         # pending: admitted items not yet materialized, as (batch_i, cid,
-        # score) — a fresh entry's score is pri × 1/age_clamp × 1, so a
-        # later item's quota pressure can evict an earlier batch item
-        # exactly like the sequential path would.
+        # score) — a fresh entry's score comes from the active scorer's
+        # ``fresh_score`` (static: pri × 1/age_clamp × 1; cost-aware:
+        # sketch-repetition prior × miss-cost / bytes), so a later item's
+        # quota pressure can evict an earlier batch item exactly like the
+        # sequential path would.
         pending: list[list] = []
         pending_counts: dict[int, int] = {}
 
@@ -537,7 +588,9 @@ class SemanticCache:
                     self.metrics.cat(vic_cat).capacity_evictions += 1
                 elif pos >= 0:
                     drop_pending(pos, "capacity_evictions")
-            pending.append([i, cid, float(pri_by_cid[cid]) * 1e3])
+            pending.append([i, cid,
+                            self._evictor.fresh_score(self, cid,
+                                                      freq.get(i, 1))])
             pending_counts[cid] = pending_counts.get(cid, 0) + 1
 
         if not pending:
@@ -672,14 +725,12 @@ class SemanticCache:
         return ttl, pri
 
     def _entry_score(self, slots: np.ndarray) -> np.ndarray:
-        """§5.4: score = priority × 1/age × hitRate (hits+1 so fresh entries
-        aren't instantly evicted). Higher = more valuable. Vectorized over
-        ``slots`` via the per-category priority table."""
-        now = self._now()
-        age = np.maximum(now - self.slot_inserted[slots], 1e-3)
-        _, pri_by_cid = self._per_category_arrays()
-        pri = pri_by_cid[self.slot_category[slots]]
-        return pri * (1.0 / age) * (self.slot_hits[slots] + 1)
+        """Entry value under the active eviction scorer (higher = more
+        valuable; the lowest-scored candidate evicts). ``static`` is the
+        §5.4 priority × 1/age × hitRate formula; ``cost_aware`` prices
+        slots by expected-hits × miss-cost per resident byte
+        (core/admission.py). Vectorized over ``slots``."""
+        return self._evictor.score(self, slots)
 
     def _evict_slot(self, slot: int, reason: str = "") -> None:
         if not self.slot_valid[slot]:

@@ -144,6 +144,18 @@ class ResidencyModel:
         return int(quota_fraction * capacity_entries) * self.bytes_per_entry()
 
 
+def entry_value_density(expected_hits_per_s, t_llm_ms, bytes_per_entry):
+    """Economic eviction score: expected model-ms saved per second of
+    residency, per byte pinned (core/admission.CostAwareEvictionScorer).
+
+    ``density = E[hits/s] × T_llm / bytes_per_entry`` — an entry that
+    re-hits often, fronts an expensive model, and costs few resident
+    bytes is the last to evict; maximizing this over resident slots
+    maximizes hit-rate-per-resident-byte, the unit ``bench_admission``
+    gates on. Accepts scalars or numpy arrays (broadcasting)."""
+    return expected_hits_per_s * t_llm_ms / bytes_per_entry
+
+
 def residency_capacity_table(budget_mb: float, quotas: dict[str, float],
                              dim: int = 384, graph_degree: int = 32,
                              dtypes: tuple[str, ...] = ("float32", "int8")

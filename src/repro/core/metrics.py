@@ -12,6 +12,7 @@ class CategoryStats:
     misses: int = 0
     compliance_rejects: int = 0
     insert_rejects: int = 0
+    admission_skips: int = 0       # misses not cached by the admission gate
     ttl_evictions: int = 0
     quota_evictions: int = 0
     capacity_evictions: int = 0
@@ -44,6 +45,7 @@ class CategoryStats:
             "mean_latency_ms": round(self.mean_latency_ms, 3),
             "compliance_rejects": self.compliance_rejects,
             "insert_rejects": self.insert_rejects,
+            "admission_skips": self.admission_skips,
             "ttl_evictions": self.ttl_evictions,
             "quota_evictions": self.quota_evictions,
             "capacity_evictions": self.capacity_evictions,

@@ -35,6 +35,15 @@ class CategoryConfig:
     # Dense categories sitting close to their τ (code) may widen it;
     # 0 disables re-ranking for the category.
     rerank_margin: float = 0.02
+    # Admission control (core/admission.py): a miss is only cached once
+    # its canonical repetition key (nearest recent representative within
+    # the category's own threshold τ, else a fresh SimHash fingerprint)
+    # has been observed ``admit_after`` times by the per-category
+    # frequency sketch. 1 (default) admits every miss unconditionally —
+    # the seed behavior. Uniform-repetition categories (Table 1:
+    # conversational) set 2 so the never-repeating tail stops churning
+    # quota.
+    admit_after: int = 1
     # Adaptive-policy parameters (§7.5.4):
     delta_max: float = 0.05           # max threshold relaxation δ_max
     beta_max: float = 2.0             # max TTL extension factor β_max
@@ -55,6 +64,8 @@ class CategoryConfig:
             raise ValueError(f"{self.name}: invalid adaptive bounds")
         if self.rerank_margin < 0:
             raise ValueError(f"{self.name}: rerank_margin must be >= 0")
+        if self.admit_after < 1:
+            raise ValueError(f"{self.name}: admit_after must be >= 1")
 
     def effective(self, load_factor: float) -> "EffectivePolicy":
         """Resolve τ(λ), t(λ) under load factor λ ∈ [0,1] (§7.5.4)."""
@@ -66,7 +77,8 @@ class CategoryConfig:
         return EffectivePolicy(threshold=tau, ttl=ttl, quota=self.quota,
                                priority=self.priority,
                                allow_caching=self.allow_caching,
-                               rerank_margin=self.rerank_margin)
+                               rerank_margin=self.rerank_margin,
+                               admit_after=self.admit_after)
 
 
 @dataclass(frozen=True)
@@ -77,6 +89,7 @@ class EffectivePolicy:
     priority: float
     allow_caching: bool
     rerank_margin: float = 0.02
+    admit_after: int = 1
 
 
 @dataclass

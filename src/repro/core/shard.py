@@ -370,8 +370,14 @@ class CategoryMigration:
                 dst._evict_slot(dst_slot, reason="migration_reconcile")
             else:
                 dst.slot_hits[dst_slot] = src.slot_hits[live_slots[src_doc]]
-        # Flip routing, then purge the source's copies.
+        # Flip routing, then purge the source's copies. The category's
+        # admission sketch moves with it: both ends derive the tracker
+        # from the category NAME, so the counts transfer verbatim and
+        # repetition history (admit-on-kth-touch progress) survives the
+        # migration instead of resetting mid-stream.
         self.parent.planner.assign(self.category, self.dst_id)
+        dst.admission.adopt_state(self.category,
+                                  src.admission.export_state(self.category))
         for s in src.category_slots(self.category):
             src._evict_slot(int(s), reason="migrated")
         self.parent._migrations.pop(self.category, None)
@@ -407,7 +413,7 @@ class ShardedSemanticCache:
                  insert_ms: float = 1.0, l1_capacity: int = 0,
                  seed: int = 0, emb_dtype: str = "float32",
                  planner=None, shard_capacity: int | None = None,
-                 store_factory=None):
+                 store_factory=None, eviction: str = "static"):
         self.policies = policies
         self.dim = dim
         self.capacity = capacity
@@ -418,6 +424,7 @@ class ShardedSemanticCache:
         self.clock = clock or SimClock()
         self.search_ms = search_ms
         self.insert_ms = insert_ms
+        self.eviction = eviction
         self.planner = planner if planner is not None else \
             ShardPlanner.from_policies(policies, self.n_shards, capacity,
                                        dim=dim, emb_dtype=emb_dtype)
@@ -432,7 +439,11 @@ class ShardedSemanticCache:
                           search_ms=0.0, insert_ms=0.0,
                           l1_capacity=l1_capacity, seed=seed + i,
                           emb_dtype=emb_dtype, quota_capacity=capacity,
-                          doc_id_start=i, doc_id_step=self.n_shards)
+                          doc_id_start=i, doc_id_step=self.n_shards,
+                          # Admission state is seeded per category NAME
+                          # (not this seed+i), so every shard reaches the
+                          # single cache's admission decisions.
+                          eviction=eviction)
             for i in range(self.n_shards)]
         # One shared cache-relative time origin: inserted timestamps are
         # directly transferable between shards (migration preserves them).
@@ -441,6 +452,7 @@ class ShardedSemanticCache:
             s._t0 = self._t0
         self.metrics = ShardedMetrics(self)
         self.last_lookup_stats: dict = {}
+        self.last_insert_stats: dict = {}
         self._migrations: dict[str, CategoryMigration] = {}
 
     # ------------------------------------------------------------------ routing
@@ -547,14 +559,22 @@ class ShardedSemanticCache:
         per_shard: dict[int, list[int]] = {}
         for i, c in enumerate(categories):
             per_shard.setdefault(self.shard_of(c), []).append(i)
+        agg = {"batch": B, "admitted": 0, "admission_skips": 0,
+               "insert_rejects": 0, "per_shard": {}}
         for si in sorted(per_shard):
             idxs = per_shard[si]
             sub = self.shards[si].insert_batch(
                 embeddings[idxs], [categories[i] for i in idxs],
                 [requests[i] for i in idxs], [responses[i] for i in idxs],
                 [metas[i] for i in idxs])
+            ins = self.shards[si].last_insert_stats
+            if ins:
+                agg["per_shard"][si] = dict(ins)
+                for k in ("admitted", "admission_skips", "insert_rejects"):
+                    agg[k] += ins.get(k, 0)
             for i, local in zip(idxs, sub):
                 slots_out[i] = self._global_slot(si, int(local))
+        self.last_insert_stats = agg
         return slots_out
 
     def sweep_expired(self) -> int:

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
+from repro.core.economics import ResidencyModel
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
 from repro.core.shard import ShardedSemanticCache
@@ -52,6 +53,8 @@ class SimConfig:
     vdb_search_ms: float = 30.0
     vdb_threshold: float = 0.85
     vdb_ttl_s: float = 3600.0
+    eviction: str = "static"            # hybrid: static | cost_aware
+                                        # (core/admission.py scorers)
     adaptive: bool = False
     fp_rate_limit: float = 0.05     # §7.5.6 safety (1.0 disables feedback)
     # exogenous load profile: list of (t_start_s, t_end_s, model, alpha)
@@ -78,6 +81,13 @@ class SimResult:
     # n_shards > 1) — the data-plane cost "Rethinking Caching" argues
     # decides viability alongside hit rate
     index_sync: dict | None = None
+    # hybrid only: residency efficiency — mean resident entries sampled
+    # once per query (a deterministic counter integral, not wall clock)
+    # and hits per resident MB under the ResidencyModel's bytes/entry.
+    # This is the unit admission control optimizes: the same hits out of
+    # fewer resident bytes (benchmarks/bench_admission.py gates on it).
+    mean_resident_entries: float = 0.0
+    hits_per_resident_mb: float = 0.0
 
     def summary(self) -> dict:
         return {
@@ -108,7 +118,8 @@ class ServingSimulator:
             kw = dict(capacity=sim.cache_capacity, clock=self.clock,
                       index_kind=sim.index_kind, use_device=sim.use_device,
                       search_ms=sim.search_ms, insert_ms=sim.insert_ms,
-                      l1_capacity=sim.l1_capacity, seed=sim.seed)
+                      l1_capacity=sim.l1_capacity, seed=sim.seed,
+                      eviction=sim.eviction)
             self.cache = (ShardedSemanticCache(policies,
                                                n_shards=sim.n_shards, **kw)
                           if sim.n_shards > 1
@@ -229,6 +240,7 @@ class ServingSimulator:
     # -- main loop -------------------------------------------------------------
     def run(self, gen: WorkloadGenerator, n_queries: int) -> SimResult:
         queries = gen.generate(n_queries)
+        resident_integral = 0
         for q in queries:
             # advance the sim clock to the arrival time if ahead
             if q.timestamp > self.clock.now():
@@ -237,6 +249,7 @@ class ServingSimulator:
             if self.sim.architecture == "hybrid":
                 lat = self._serve_hybrid(q, gen)
                 st = self.cache.metrics.cat(q.category)
+                resident_integral += len(self.cache)
             elif self.sim.architecture == "vdb":
                 lat = self._serve_vdb(q, gen)
             else:
@@ -249,6 +262,15 @@ class ServingSimulator:
         lat = np.asarray(self._latencies)
         reg = (self.cache.metrics if self.sim.architecture == "hybrid"
                else self.metrics)
+        mean_resident = 0.0
+        hits_per_mb = 0.0
+        if self.sim.architecture == "hybrid" and n_queries:
+            mean_resident = resident_integral / n_queries
+            total_hits = sum(s.hits for s in reg.per_category.values())
+            bpe = ResidencyModel(dim=getattr(self.cache, "dim", 384)) \
+                .bytes_per_entry()
+            resident_mb = mean_resident * bpe / 1e6
+            hits_per_mb = total_hits / resident_mb if resident_mb else 0.0
         # merge ground-truth counters into the hybrid registry view
         per_cat = {}
         for name, st in reg.per_category.items():
@@ -278,4 +300,6 @@ class ServingSimulator:
             # sharded cache aggregates it (per-shard breakdown included).
             index_sync=(dict(self.cache.sync_stats)
                         if self.sim.architecture == "hybrid" else None),
+            mean_resident_entries=mean_resident,
+            hits_per_resident_mb=hits_per_mb,
         )

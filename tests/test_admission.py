@@ -1,0 +1,292 @@
+"""Admission control plane (core/admission.py): frequency-sketch
+properties, paraphrase canonicalization, controller determinism and
+migration handoff, and the pluggable eviction scorers.
+
+The sketch properties are the contract the admission gate leans on —
+a conservative-update count-min sketch can OVER-count (collisions) but
+must never under-count, so ``admit_after`` can only admit EARLY, never
+starve a genuinely repeating intent. Property-tested with hypothesis
+when available (skipped cleanly otherwise, per _hypothesis_compat).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.admission import (AdmissionController, CategoryTracker,
+                                  CostAwareEvictionScorer, FrequencySketch,
+                                  QueryFingerprinter, StaticEvictionScorer,
+                                  make_eviction_scorer)
+from repro.core.cache import SemanticCache
+from repro.core.clock import SimClock
+from repro.core.policy import CategoryConfig, PolicyEngine
+
+DIM = 48
+
+keys = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+def _unit(rng, n=1, dim=DIM):
+    v = rng.standard_normal((n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# FrequencySketch properties.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(stream=st.lists(keys, max_size=300), seed=st.integers(0, 2**31))
+def test_sketch_never_undercounts_and_bounded_by_traffic(stream, seed):
+    """Without decay: true_count(k) ≤ estimate(k) ≤ total observations,
+    for every key in the stream."""
+    sk = FrequencySketch(width=64, depth=2, seed=seed, decay_every=0)
+    true = {}
+    for k in stream:
+        sk.observe(k)
+        true[k] = true.get(k, 0) + 1
+    assert sk.observations == len(stream)
+    for k, n in true.items():
+        assert n <= sk.estimate(k) <= len(stream)
+
+
+@settings(max_examples=40, deadline=None)
+@given(stream=st.lists(keys, max_size=200), seed=st.integers(0, 2**31))
+def test_sketch_deterministic_at_fixed_seed(stream, seed):
+    a = FrequencySketch(width=128, depth=3, seed=seed)
+    b = FrequencySketch(width=128, depth=3, seed=seed)
+    ra = [a.observe(k) for k in stream]
+    rb = [b.observe(k) for k in stream]
+    assert ra == rb
+    assert np.array_equal(a.counts, b.counts)
+    # a different seed re-hashes: state need not match, API still works
+    c = FrequencySketch(width=128, depth=3, seed=seed + 1)
+    for k in stream:
+        c.observe(k)
+    assert c.observations == len(stream)
+
+
+@settings(max_examples=40, deadline=None)
+@given(stream=st.lists(keys, min_size=1, max_size=120))
+def test_sketch_decay_halves_every_estimate(stream):
+    sk = FrequencySketch(width=64, depth=2, seed=7, decay_every=0)
+    for k in stream:
+        sk.observe(k)
+    before = {k: sk.estimate(k) for k in stream}
+    sk.decay()
+    for k, est in before.items():
+        assert sk.estimate(k) == est // 2   # >>1 is monotone, min commutes
+
+
+@settings(max_examples=30, deadline=None)
+@given(s1=st.lists(keys, max_size=100), s2=st.lists(keys, max_size=100))
+def test_sketch_merge_never_undercounts_combined_stream(s1, s2):
+    """Merging two shards' sketches keeps the no-undercount guarantee
+    over the union stream (cell-wise add can only raise estimates)."""
+    a = FrequencySketch(width=64, depth=2, seed=3, decay_every=0)
+    b = FrequencySketch(width=64, depth=2, seed=3, decay_every=0)
+    for k in s1:
+        a.observe(k)
+    for k in s2:
+        b.observe(k)
+    ea = {k: a.estimate(k) for k in s1 + s2}
+    a.merge(b)
+    assert a.observations == len(s1) + len(s2)
+    true = {}
+    for k in s1 + s2:
+        true[k] = true.get(k, 0) + 1
+    for k, n in true.items():
+        assert a.estimate(k) >= n
+        assert a.estimate(k) >= ea[k]       # merge never lowers
+
+
+def test_sketch_auto_decay_and_validation():
+    sk = FrequencySketch(width=32, depth=2, seed=0, decay_every=4)
+    for _ in range(3):
+        sk.observe(42)
+    assert sk.estimate(42) == 3
+    sk.observe(42)                           # 4th observation → decay fires
+    assert sk.estimate(42) == 2              # 4 >> 1
+    with pytest.raises(ValueError):
+        FrequencySketch(width=0)
+    with pytest.raises(ValueError):
+        sk.merge(FrequencySketch(width=32, depth=2, seed=99))
+    with pytest.raises(ValueError):
+        sk.merge(FrequencySketch(width=16, depth=2, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# Fingerprinter + tracker canonicalization.
+# ---------------------------------------------------------------------------
+
+def test_fingerprinter_deterministic_and_bounded():
+    fp1 = QueryFingerprinter(DIM, n_bits=16, seed=5)
+    fp2 = QueryFingerprinter(DIM, n_bits=16, seed=5)
+    embs = _unit(np.random.default_rng(0), 32)
+    for e in embs:
+        k = fp1.key(e)
+        assert k == fp2.key(e)
+        assert 0 <= k < 2**16
+    with pytest.raises(ValueError):
+        QueryFingerprinter(DIM, n_bits=0)
+    with pytest.raises(ValueError):
+        QueryFingerprinter(DIM, n_bits=65)
+
+
+def test_tracker_counts_repeats_and_canonicalizes_paraphrases():
+    """An exact repeat counts up 1, 2, 3…; a paraphrase within τ of a
+    representative inherits its key and counts as the same intent."""
+    tr = CategoryTracker(DIM, tau=0.8, seed=1)
+    rng = np.random.default_rng(2)
+    intent = _unit(rng)[0]
+    assert [tr.observe(intent) for _ in range(3)] == [1, 2, 3]
+    para = intent + 0.1 * _unit(rng)[0]      # cos ≈ 0.995 ≥ τ
+    para /= np.linalg.norm(para)
+    assert tr.observe(para) == 4
+    other = _unit(rng)[0]                    # cos ≈ 0.14 at dim 48: new
+    assert tr.observe(other) == 1
+    assert tr.representatives == 2
+
+
+def test_tracker_exact_repeat_survives_ring_eviction():
+    """The SimHash mint is a deterministic function of the embedding, so
+    an EXACT repeat re-mints the identical key even after its
+    representative aged out of the ring buffer — only paraphrase linkage
+    is bounded by the window."""
+    tr = CategoryTracker(DIM, tau=0.8, buffer_size=2, seed=1)
+    rng = np.random.default_rng(3)
+    first, a, b = _unit(rng, 3)
+    assert tr.observe(first) == 1
+    tr.observe(a)
+    tr.observe(b)                            # ring size 2: first evicted
+    assert tr.representatives == 2
+    assert tr.observe(first) == 2            # same mint → count continues
+
+
+def test_tracker_key_of_enrolls_without_counting():
+    tr = CategoryTracker(DIM, tau=0.8, seed=1)
+    e = _unit(np.random.default_rng(4))[0]
+    k = tr.key_of(e)
+    assert tr.estimate(e) == 0
+    assert tr.sketch.observations == 0
+    assert tr.observe(e) == 1
+    assert tr.key_of(e) == k                 # representative key is stable
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController: name seeding, determinism, migration handoff.
+# ---------------------------------------------------------------------------
+
+def test_controller_decisions_independent_of_owner():
+    """Two controllers (e.g. two shards) fed the same per-category
+    stream make identical decisions — state is seeded from the category
+    NAME, never from the owning cache."""
+    embs = _unit(np.random.default_rng(5), 40)
+    stream = list(embs) + list(embs[:10])    # some repeats
+    a, b = AdmissionController(DIM), AdmissionController(DIM)
+    ca = [a.observe("chat", e, tau=0.8) for e in stream]
+    cb = [b.observe("chat", e, tau=0.8) for e in stream]
+    assert ca == cb
+    assert ca[-10:] == [2] * 10              # the repeats were recognized
+    # distinct categories track independently
+    assert a.observe("code", embs[0]) == 1
+    assert a.estimate("never_seen", embs[0]) == 0
+
+
+def test_controller_export_adopt_preserves_history():
+    """Migration handoff: the destination continues the count where the
+    source left off; adopting into an existing tracker merges counts."""
+    e = _unit(np.random.default_rng(6))[0]
+    src, dst = AdmissionController(DIM), AdmissionController(DIM)
+    for _ in range(3):
+        src.observe("chat", e)
+    assert src.export_state("missing") is None
+    dst.adopt_state("chat", None)            # no-op
+    dst.adopt_state("chat", src.export_state("chat"))
+    assert src.stats() == {}                 # detached from the source
+    assert dst.observe("chat", e) == 4       # history survived the move
+    # merge path: both sides tracked the category before the handoff
+    other = AdmissionController(DIM)
+    other.observe("chat", e)
+    other.adopt_state("chat", dst.export_state("chat"))
+    assert other.estimate("chat", e) >= 5
+    assert other.stats()["chat"]["observations"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Eviction scorers.
+# ---------------------------------------------------------------------------
+
+def test_make_eviction_scorer():
+    assert isinstance(make_eviction_scorer("static"), StaticEvictionScorer)
+    assert isinstance(make_eviction_scorer("cost_aware"),
+                      CostAwareEvictionScorer)
+    with pytest.raises(ValueError, match="unknown eviction"):
+        make_eviction_scorer("lru")
+
+
+def _two_cat_cache(eviction):
+    pol = PolicyEngine([
+        CategoryConfig("cheap", threshold=0.80, ttl=1e6, quota=1.0,
+                       priority=1.0, expected_tllm_ms=100.0),
+        CategoryConfig("dear", threshold=0.80, ttl=1e6, quota=1.0,
+                       priority=1.0, expected_tllm_ms=1000.0),
+    ])
+    return SemanticCache(pol, dim=DIM, capacity=8, clock=SimClock(),
+                         index_kind="flat", eviction=eviction)
+
+
+def test_cost_aware_eviction_prefers_expensive_misses():
+    """At equal priority and hit history, capacity pressure evicts the
+    entry whose miss is CHEAP to recompute (expected_tllm_ms 100 vs
+    1000) under cost_aware — while static scoring (equal priority) has
+    no basis to distinguish the categories."""
+    cache = _two_cat_cache("cost_aware")
+    rng = np.random.default_rng(7)
+    vecs = _unit(rng, 9)
+    cats = ["cheap", "dear"] * 4
+    cache.insert_batch(vecs[:8], cats, [f"q{i}" for i in range(8)],
+                       [f"r{i}" for i in range(8)])
+    cache.clock.advance(5.0)
+    cache.insert_batch(vecs[8:], ["dear"], ["q8"], ["r8"])  # forces 1 evict
+    assert cache.category_count("cheap") == 3               # victim: cheap
+    assert cache.category_count("dear") == 5
+    # and the new entry is resident
+    res = cache.lookup_batch(vecs[8:], ["dear"])
+    assert res[0].hit and res[0].response == "r8"
+
+
+def test_cost_aware_scores_scale_with_bytes_and_cost():
+    """score = rate × cost / bytes: the dear category outranks the cheap
+    one 10× at equal hit history, on both resident and fresh entries."""
+    cache = _two_cat_cache("cost_aware")
+    rng = np.random.default_rng(8)
+    vecs = _unit(rng, 2)
+    slots = cache.insert_batch(vecs, ["cheap", "dear"], ["q0", "q1"],
+                               ["r0", "r1"])
+    cache.clock.advance(1.0)
+    scorer = cache._evictor
+    s = scorer.score(cache, np.asarray(slots))
+    assert s[1] == pytest.approx(10.0 * s[0])
+    cheap_id = cache._cat_id("cheap")
+    dear_id = cache._cat_id("dear")
+    assert scorer.fresh_score(cache, dear_id) == \
+        pytest.approx(10.0 * scorer.fresh_score(cache, cheap_id))
+    # the admission-frequency prior raises the fresh score linearly
+    assert scorer.fresh_score(cache, cheap_id, freq=5) == \
+        pytest.approx(5.0 * scorer.fresh_score(cache, cheap_id, freq=1))
+
+
+def test_static_scorer_matches_seed_formula():
+    cache = _two_cat_cache("static")
+    rng = np.random.default_rng(9)
+    vecs = _unit(rng, 2)
+    slots = cache.insert_batch(vecs, ["cheap", "dear"], ["q0", "q1"],
+                               ["r0", "r1"])
+    cache.lookup_batch(vecs[1:], ["dear"])   # one hit on the dear entry
+    cache.clock.advance(2.0)
+    s = cache._entry_score(np.asarray(slots))
+    now = cache._now()
+    age = now - cache.slot_inserted[np.asarray(slots)]
+    assert s[0] == pytest.approx(1.0 / age[0] * 1.0)
+    assert s[1] == pytest.approx(1.0 / age[1] * 2.0)   # (hits+1) = 2

@@ -189,6 +189,93 @@ def test_aggregated_stats_views():
     assert all(r["resident_bytes"] > 0 for r in rep)
 
 
+def _admission_policies() -> PolicyEngine:
+    """_policies() with admission gating on "a"/"c" and distinct miss
+    costs, so admit-on-2nd-touch skips and cost_aware scoring both fire."""
+    return PolicyEngine([
+        CategoryConfig("a", threshold=0.80, ttl=25.0, quota=0.30,
+                       priority=2.0, admit_after=2, expected_tllm_ms=800.0),
+        CategoryConfig("b", threshold=0.78, ttl=1e6, quota=0.30,
+                       expected_tllm_ms=200.0),
+        CategoryConfig("c", threshold=0.75, ttl=1e6, quota=0.05,
+                       priority=0.5, admit_after=2, expected_tllm_ms=500.0),
+        CategoryConfig("d", threshold=0.95, ttl=1.0, quota=0.0,
+                       allow_caching=False),
+    ])
+
+
+@pytest.mark.parametrize("index_kind,use_device", [
+    ("flat", False),
+    ("flat", True),
+    ("hnsw", True),
+])
+def test_sharded_parity_with_admission_and_cost_aware_eviction(
+        index_kind, use_device):
+    """The parity contract survives the new control plane: with
+    admit_after=2 on two categories AND cost_aware eviction scoring, the
+    sharded cache still reproduces the single cache bit-for-bit over
+    shard counts {1, 2, 4} — admission state is seeded from the category
+    NAME (not the shard's seed+i), and both quota eviction and admission
+    skips are shard-local decisions over identical per-category streams.
+    """
+    banks = _banks()
+    sched = _workload(rounds=10)
+    kw = dict(dim=DIM, capacity=256, index_kind=index_kind,
+              use_device=use_device, eviction="cost_aware", seed=0)
+    single = SemanticCache(_admission_policies(), clock=SimClock(), **kw)
+    baseline = _run(single, banks, sched)
+    snap = single.metrics.snapshot()
+    base_skips = {c: s["admission_skips"] for c, s in snap.items()}
+    assert base_skips["a"] > 0 and base_skips["c"] > 0   # the gate fired
+    assert base_skips["b"] == 0                          # ungated category
+    # gated intents that DO repeat still get admitted and then hit
+    assert any(t[1] == "hit" for t in baseline)
+    assert single.eviction == "cost_aware"
+    for n in (1, 2, 4):
+        sharded = ShardedSemanticCache(_admission_policies(), n_shards=n,
+                                       clock=SimClock(), **kw)
+        trace = _run(sharded, banks, sched)
+        assert trace == baseline, \
+            f"n_shards={n} diverged with admission + cost_aware enabled"
+        ssnap = sharded.metrics.snapshot()
+        assert {c: s["admission_skips"] for c, s in ssnap.items()} \
+            == base_skips
+        agg = sharded.last_insert_stats
+        assert agg["admission_skips"] == sum(
+            s.get("admission_skips", 0) for s in agg["per_shard"].values())
+
+
+def test_migration_hands_admission_state_to_target():
+    """After a live migration, the target shard continues the source's
+    repetition counts: an intent one touch short of admission on the
+    source is admitted by its FIRST post-cutover touch on the target."""
+    pol = PolicyEngine([
+        CategoryConfig("a", threshold=0.80, ttl=1e6, quota=0.45,
+                       admit_after=3),
+        CategoryConfig("b", threshold=0.80, ttl=1e6, quota=0.45),
+    ])
+    planner = ShardPlanner(2, 256, policies=pol)
+    planner.plan({"a": 0.45, "b": 0.45})
+    cache = ShardedSemanticCache(pol, dim=DIM, capacity=256, n_shards=2,
+                                 clock=SimClock(), index_kind="flat",
+                                 planner=planner)
+    banks = _banks()
+    emb = banks["a"][:1]
+    for _ in range(2):                      # two touches: still below k=3
+        cache.insert_batch(emb, ["a"], ["q"], ["r"])
+    assert cache.category_count("a") == 0
+    src, dst = cache.shard_of("a"), 1 - cache.shard_of("a")
+    assert cache.shards[src].admission.stats()["a"]["observations"] == 2
+    cache.migrate_category("a", dst)
+    assert cache.shard_of("a") == dst
+    assert "a" not in cache.shards[src].admission.stats()   # detached
+    assert cache.shards[dst].admission.stats()["a"]["observations"] == 2
+    cache.insert_batch(emb, ["a"], ["q"], ["r"])   # 3rd touch, on target
+    assert cache.category_count("a") == 1
+    res = cache.lookup_batch(emb, ["a"])
+    assert res[0].hit and res[0].response == "r"
+
+
 # ---------------------------------------------------------------------------
 # Planner placement.
 # ---------------------------------------------------------------------------
