@@ -1,0 +1,231 @@
+"""Fault-injected degraded-mode serving: availability under shard
+outages, store retry/backoff, and the no-fault parity baseline.
+
+Gated ONLY on deterministic counters (the FaultSchedule is data, the
+clock is simulated — no fire-time randomness, no wall time):
+
+    baseline     — the SAME run three ways: no injector at all
+                   (fault_schedule=None), an EMPTY FaultSchedule (the
+                   whole fault stack wired in but inert), and the empty
+                   schedule again. All hit/miss/sync counters must be
+                   EXACTLY identical: the fault layer is provably free
+                   when nothing is scheduled, and runs are reproducible.
+    shard_outage — two scheduled outage windows on a 2-shard tier.
+                   Down-shard lookups are counted ``degraded_misses``
+                   (an availability loss, never a hit-rate denominator
+                   leak); down-shard writes park in the bounded
+                   write-behind queue and MUST fully replay after
+                   recovery (wb_pending == 0, zero acknowledged-write
+                   loss). Accounting: hits + misses + degraded ==
+                   lookups per category and overall.
+    store_flaky  — scheduled transient runs on the doc store's get
+                   path: a short run the RetryingStore's bounded
+                   Clock-charged backoff absorbs (retries > 0), and a
+                   long run that exhausts the retry budget and degrades
+                   the would-be hit to a ``store_timeout`` miss
+                   (timeouts > 0, entry stays resident, accounting
+                   still closes).
+
+Full mode re-runs the outage scenario on the hnsw index (same gates)
+to cover the delta-synced device path under degradation.
+
+Emits CSV rows and ``results/BENCH_faults.json`` (CI smoke runs
+``--quick --check``).
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--quick] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.faults import FaultSchedule
+from repro.core.policy import PolicyEngine, paper_policies
+from repro.core.workload import scenario_generator
+from repro.serving.simulator import ServingSimulator, SimConfig
+
+CAPACITY = 4000
+SCENARIO = "flash_crowd"        # two categories -> both shards exercised
+# Outage windows in simulated seconds (flash_crowd streams ~30 qps, so
+# n=2000 spans ~67 s): each shard goes down once, recovers with plenty
+# of post-window traffic to drain the write-behind queues.
+OUTAGES = [(5.0, 20.0, 0), (30.0, 40.0, 1)]
+# Store-transient runs over the *get* op index (hit-path doc fetches):
+# ops 10-11 are a short run absorbed by retries=3; ops 40-49 are a long
+# run that exhausts the ladder at least once before healing.
+FLAKY_GETS = (FaultSchedule.op_range(10, 2) | FaultSchedule.op_range(40, 10))
+
+
+def run_scenario(*, schedule: FaultSchedule | None, n: int,
+                 n_shards: int = 2, index_kind: str = "flat",
+                 seed: int = 0) -> dict:
+    """One deterministic simulator run; returns the gate counters."""
+    pol = PolicyEngine(paper_policies())
+    sim = ServingSimulator(pol, SimConfig(
+        architecture="hybrid", cache_capacity=CAPACITY,
+        index_kind=index_kind, n_shards=n_shards, seed=seed,
+        fault_schedule=schedule))
+    res = sim.run(scenario_generator(SCENARIO, seed=seed), n)
+    per = res.metrics.per_category
+    out = {
+        "n_queries": n, "n_shards": n_shards, "index_kind": index_kind,
+        "lookups": sum(s.lookups for s in per.values()),
+        "hits": sum(s.hits for s in per.values()),
+        "misses": sum(s.misses for s in per.values()),
+        "degraded_misses": sum(s.degraded_misses for s in per.values()),
+        "store_timeouts": sum(s.store_timeouts for s in per.values()),
+        "hit_rate": round(res.overall_hit_rate, 4),
+        "sync": dict(res.index_sync or {}),
+        "per_category": {
+            name: {"lookups": s.lookups, "hits": s.hits,
+                   "misses": s.misses, "degraded": s.degraded_misses}
+            for name, s in per.items()},
+    }
+    if res.fault_stats is not None:
+        out["fault"] = res.fault_stats
+    return out
+
+
+def run(n: int = 5000, seed: int = 0, sweep: bool = True,
+        out_dir: str = "results") -> dict:
+    # Baseline parity: no injector vs empty schedule vs empty again.
+    base = run_scenario(schedule=None, n=n, seed=seed)
+    inert = run_scenario(schedule=FaultSchedule(), n=n, seed=seed)
+    inert2 = run_scenario(schedule=FaultSchedule(), n=n, seed=seed)
+    emit("faults.baseline.no_injector", 0.0, hit_rate=base["hit_rate"],
+         hits=base["hits"], misses=base["misses"])
+    emit("faults.baseline.empty_schedule", 0.0, hit_rate=inert["hit_rate"],
+         hits=inert["hits"], misses=inert["misses"])
+
+    outage = run_scenario(
+        schedule=FaultSchedule(shard_outages=list(OUTAGES)), n=n, seed=seed)
+    emit("faults.shard_outage", 0.0, hit_rate=outage["hit_rate"],
+         degraded=outage["degraded_misses"],
+         availability=outage["fault"]["availability"],
+         wb_replayed=outage["fault"]["front_door"]["wb_replayed"],
+         wb_pending=outage["fault"]["wb_pending"])
+
+    flaky = run_scenario(
+        schedule=FaultSchedule(store_get_failures=FLAKY_GETS), n=n,
+        seed=seed)
+    emit("faults.store_flaky", 0.0, hit_rate=flaky["hit_rate"],
+         timeouts=flaky["store_timeouts"],
+         get_retries=flaky["fault"]["store"]["get_retries"],
+         backoff_ms=round(flaky["fault"]["store"]["backoff_ms_charged"], 3))
+
+    payload = {
+        "n_queries": n, "seed": seed, "scenario": SCENARIO,
+        "capacity": CAPACITY, "outage_windows": [list(w) for w in OUTAGES],
+        "baseline": {"no_injector": base, "empty_schedule": inert,
+                     "empty_schedule_rerun": inert2},
+        "shard_outage": outage,
+        "store_flaky": flaky,
+    }
+    if sweep:
+        # Same outage gates on the delta-synced hnsw device path.
+        hnsw = run_scenario(
+            schedule=FaultSchedule(shard_outages=list(OUTAGES)), n=n,
+            index_kind="hnsw", seed=seed)
+        payload["shard_outage_hnsw"] = hnsw
+        emit("faults.shard_outage.hnsw", 0.0, hit_rate=hnsw["hit_rate"],
+             degraded=hnsw["degraded_misses"],
+             wb_pending=hnsw["fault"]["wb_pending"])
+    write_bench_json("faults", payload, out_dir=out_dir)
+    return payload
+
+
+def _check_accounting(name: str, r: dict) -> None:
+    if r["hits"] + r["misses"] + r["degraded_misses"] != r["lookups"]:
+        raise SystemExit(
+            f"accounting leak ({name}): hits {r['hits']} + misses "
+            f"{r['misses']} + degraded {r['degraded_misses']} != "
+            f"lookups {r['lookups']}")
+    if r["lookups"] != r["n_queries"]:
+        raise SystemExit(
+            f"accounting leak ({name}): {r['lookups']} lookups != "
+            f"{r['n_queries']} queries issued")
+    for cat, c in r["per_category"].items():
+        if c["hits"] + c["misses"] + c["degraded"] != c["lookups"]:
+            raise SystemExit(
+                f"accounting leak ({name}/{cat}): "
+                f"{c['hits']}+{c['misses']}+{c['degraded']} != "
+                f"{c['lookups']}")
+
+
+def check(payload: dict) -> None:
+    """The deterministic acceptance gates (CI smoke)."""
+    base = payload["baseline"]["no_injector"]
+    inert = payload["baseline"]["empty_schedule"]
+    inert2 = payload["baseline"]["empty_schedule_rerun"]
+    for k in ("lookups", "hits", "misses", "hit_rate", "sync",
+              "per_category"):
+        if base[k] != inert[k]:
+            raise SystemExit(
+                f"fault layer not free: empty-schedule {k} {inert[k]!r} "
+                f"!= no-injector baseline {base[k]!r}")
+        if inert[k] != inert2[k]:
+            raise SystemExit(
+                f"non-deterministic run: {k} differs across identical "
+                f"empty-schedule runs")
+
+    outages = [("shard_outage", payload["shard_outage"])]
+    if "shard_outage_hnsw" in payload:
+        outages.append(("shard_outage_hnsw", payload["shard_outage_hnsw"]))
+    for name, r in outages:
+        _check_accounting(name, r)
+        if r["degraded_misses"] <= 0:
+            raise SystemExit(
+                f"{name}: outage windows never degraded a lookup "
+                f"(degraded_misses == 0) — injector not consulted")
+        fd = r["fault"]["front_door"]
+        if fd["wb_enqueued"] <= 0 or fd["wb_replayed"] != fd["wb_enqueued"]:
+            raise SystemExit(
+                f"{name}: write-behind replay incomplete — enqueued "
+                f"{fd['wb_enqueued']}, replayed {fd['wb_replayed']} "
+                f"(acknowledged-write loss)")
+        if r["fault"]["wb_pending"] != 0:
+            raise SystemExit(
+                f"{name}: write-behind queue never drained "
+                f"(wb_pending == {r['fault']['wb_pending']})")
+        if not 0.0 < r["fault"]["availability"] < 1.0:
+            raise SystemExit(
+                f"{name}: availability {r['fault']['availability']} "
+                f"not in (0, 1) despite scheduled outage windows")
+
+    flaky = payload["store_flaky"]
+    _check_accounting("store_flaky", flaky)
+    st = flaky["fault"]["store"]
+    if flaky["store_timeouts"] <= 0 or st.get("get_timeouts", 0) <= 0:
+        raise SystemExit(
+            "store_flaky: the long transient run never exhausted the "
+            "retry budget (store_timeouts == 0)")
+    if st["get_retries"] <= 0 or st["backoff_ms_charged"] <= 0.0:
+        raise SystemExit(
+            "store_flaky: bounded retries never fired / no backoff "
+            "charged — the short transient run was not absorbed")
+    print(f"# check ok: baseline bit-identical, outage degraded "
+          f"{payload['shard_outage']['degraded_misses']} lookups at "
+          f"availability {payload['shard_outage']['fault']['availability']}"
+          f" with full write-behind replay, store path absorbed "
+          f"{st['get_retries']} retries and degraded "
+          f"{flaky['store_timeouts']} timeouts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer queries, flat index only")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the parity / accounting / "
+                         "replay / retry gates hold")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    n = 2000 if args.quick else 5000
+    payload = run(n=n, sweep=not args.quick, out_dir=args.out)
+    if args.check:
+        check(payload)
+
+
+if __name__ == "__main__":
+    main()

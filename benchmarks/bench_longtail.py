@@ -15,7 +15,8 @@ from repro.core.economics import category_economics, workload_report
 from repro.core.embedding import SyntheticCategorySpace
 from repro.core.hnsw import INVALID
 from repro.core.policy import CategoryConfig, PolicyEngine, paper_policies
-from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
+from repro.core.workload import (TABLE1_WORKLOAD, WorkloadGenerator,
+                                 scenario_generator)
 from repro.serving.simulator import ServingSimulator, SimConfig
 
 PAPER_TABLE1 = {   # category -> (traffic %, paper hit rate %)
@@ -24,6 +25,30 @@ PAPER_TABLE1 = {   # category -> (traffic %, paper hit rate %)
     "legal_queries": (8, 10), "medical_queries": (4, 6),
     "specialized_domains": (3, 7),
 }
+
+# Scenario sweep reported next to Table 1: temporal shapes the paper's
+# steady-state table can't show — bursty on/off arrival phases and a
+# flash-crowd spike concentrating traffic on one hot intent.
+SCENARIO_SWEEP = ("bursty", "flash_crowd", "power_law", "uniform_tail")
+
+
+def run_scenarios(n_queries: int = 4000, seed: int = 42) -> dict:
+    """Per-scenario hit rates through the same hybrid stack as Table 1
+    (same capacity / flat index), emitted alongside the table rows."""
+    out = {}
+    for name in SCENARIO_SWEEP:
+        eng = PolicyEngine(paper_policies())
+        sim = ServingSimulator(eng, SimConfig(architecture="hybrid",
+                                              cache_capacity=12000,
+                                              index_kind="flat", seed=seed))
+        res = sim.run(scenario_generator(name, seed=seed), n_queries)
+        per = {c: d["hit_rate"] for c, d in res.per_category.items()}
+        out[name] = res.overall_hit_rate
+        emit(f"table1.scenario.{name}", 0.0,
+             hit_rate=res.overall_hit_rate,
+             p95_latency_ms=res.p95_latency_ms,
+             **{f"hit_{c}": v for c, v in sorted(per.items())})
+    return out
 
 
 def run_mixed_category(n_intents: int = 300, head_paraphrases: int = 3,
@@ -105,6 +130,7 @@ def run(n_queries: int = 8000, seed: int = 42):
          mean_latency_vdb=rep["mean_latency_vdb_ms"],
          mean_latency_hybrid=rep["mean_latency_hybrid_ms"],
          overall_hit_rate=res.overall_hit_rate)
+    run_scenarios()
     run_mixed_category()
 
 

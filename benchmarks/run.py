@@ -25,6 +25,10 @@ Output: ``name,us_per_call,derived`` CSV rows (stdout).
                         per resident byte on the scenario matrix,
                         counter-gated (uniform_tail improves strictly,
                         power_law head untouched)
+    bench_faults      — fault-injected degraded serving: shard-outage
+                        availability + write-behind replay, store
+                        retry/backoff/timeouts, counter-gated (empty
+                        schedule bit-identical to no injector)
 """
 
 from __future__ import annotations
@@ -35,10 +39,10 @@ import time
 import traceback
 
 from benchmarks import (bench_adaptive, bench_admission, bench_breakeven,
-                        bench_hnsw, bench_kernels, bench_latency,
-                        bench_longtail, bench_lookup, bench_memory,
-                        bench_quant, bench_routing, bench_serve,
-                        bench_shard, bench_thresholds)
+                        bench_faults, bench_hnsw, bench_kernels,
+                        bench_latency, bench_longtail, bench_lookup,
+                        bench_memory, bench_quant, bench_routing,
+                        bench_serve, bench_shard, bench_thresholds)
 
 ALL = {
     "longtail": bench_longtail.run,
@@ -55,6 +59,7 @@ ALL = {
     "quant": bench_quant.run,
     "shard": bench_shard.run,
     "admission": bench_admission.run,
+    "faults": bench_faults.run,
 }
 
 

@@ -10,6 +10,8 @@ Modules:
     shard      — sharded cache tier: quota-byte placement planner, fan-out
                  masked search, live category migration (§7.4 scaling)
     storage    — external document stores + vector-DB baseline emulator (§4)
+    faults     — deterministic fault injection: shard outages, transient
+                 store errors, migration crash points (degraded serving)
     economics  — break-even analysis, eqs (1)-(6) (§4.4, §5.5, §7.5.1)
     workload   — heterogeneous category workload generator (Table 1)
     metrics    — per-category statistics
@@ -50,7 +52,16 @@ from repro.core.storage import (  # noqa: F401
     InMemoryStore,
     FileStore,
     LatencyModelStore,
+    FlakyStore,
+    RetryingStore,
     VectorDBEmulator,
+)
+from repro.core.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSchedule,
+    InjectedCrash,
+    StoreTimeout,
+    TransientStoreError,
 )
 from repro.core.workload import WorkloadGenerator, CategorySpec, TABLE1_WORKLOAD  # noqa: F401
 from repro.core.clock import SimClock, WallClock  # noqa: F401

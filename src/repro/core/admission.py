@@ -224,6 +224,52 @@ class CategoryTracker:
                 tau: float | None = None) -> int:
         return self.sketch.observe(self.key_of(embedding, tau))
 
+    def observe_batch(self, embeddings: np.ndarray,
+                      tau: float | None = None) -> np.ndarray:
+        """Sequential-equivalent batched observe: ONE ``(n_reps, B)``
+        matmul scores the whole batch against the pre-batch ring buffer
+        instead of an O(buffer·dim) host matvec per item, then the
+        items resolve IN ORDER so intra-batch enrollments (an item
+        minting a new representative that canonicalizes a later item)
+        behave exactly like B sequential ``observe`` calls: slots
+        (re)written within the batch are re-scored with a per-slot dot
+        (at most B of them), everything else reads the snapshot column.
+        Tie-breaking (argmax → lowest slot) matches the sequential
+        path. B == 1 routes through ``observe`` itself, so single-item
+        streams — the simulator's per-miss inserts — are bit-identical
+        to the pre-batching behavior.
+        """
+        t = self.tau if tau is None else tau
+        embs = np.atleast_2d(np.asarray(embeddings, np.float32))
+        B = embs.shape[0]
+        if B == 1:
+            return np.asarray([self.observe(embs[0], t)], np.int64)
+        base_n = self._buf_n
+        snap = (self._buf_emb[:base_n] @ embs.T if base_n
+                else np.zeros((0, B), np.float32))
+        touched: set[int] = set()      # ring slots written by this batch
+        out = np.empty(B, np.int64)
+        for i in range(B):
+            n = self._buf_n
+            if n:
+                sims = np.full(n, -np.inf, np.float32)
+                m = min(base_n, n)
+                sims[:m] = snap[:m, i]
+                for j in touched:
+                    sims[j] = self._buf_emb[j] @ embs[i]
+                j = int(np.argmax(sims))
+                if float(sims[j]) >= t:
+                    out[i] = self.sketch.observe(int(self._buf_key[j]))
+                    continue
+            key = self.fingerprinter.key(embs[i])
+            self._buf_emb[self._buf_pos] = embs[i]
+            self._buf_key[self._buf_pos] = np.uint64(key)
+            touched.add(self._buf_pos)
+            self._buf_pos = (self._buf_pos + 1) % len(self._buf_key)
+            self._buf_n = min(self._buf_n + 1, len(self._buf_key))
+            out[i] = self.sketch.observe(key)
+        return out
+
     def estimate(self, embedding: np.ndarray,
                  tau: float | None = None) -> int:
         return self.sketch.estimate(self.key_of(embedding, tau))
@@ -273,6 +319,13 @@ class AdmissionController:
         """Count one occurrence of the query's canonical key; returns
         the post-update repetition estimate (1 = first sighting)."""
         return self.tracker(category).observe(embedding, tau)
+
+    def observe_batch(self, category: str, embeddings: np.ndarray,
+                      tau: float | None = None) -> np.ndarray:
+        """Batched ``observe`` over one category's items (in stream
+        order): one ring-buffer matmul for the batch instead of a host
+        matvec per item, with sequential-equivalent enrollment."""
+        return self.tracker(category).observe_batch(embeddings, tau)
 
     def estimate(self, category: str, embedding: np.ndarray,
                  tau: float | None = None) -> int:

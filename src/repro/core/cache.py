@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.admission import AdmissionController, make_eviction_scorer
 from repro.core.clock import Clock, SimClock
+from repro.core.faults import StoreTimeout
 from repro.core.hnsw import CLS_EXPIRED, CLS_HIT, CLS_MISS, FlatIndex, \
     HNSWIndex, HNSWParams, INVALID
 from repro.core.metrics import MetricsRegistry
@@ -313,7 +314,22 @@ class SemanticCache:
                                          doc_id=doc_id, reason="hit_l1",
                                          latency_ms=self.search_ms)
                 continue
-            doc = rerank_docs.get(doc_id) or self.store.get(doc_id)
+            try:
+                doc = rerank_docs.get(doc_id) or self.store.get(doc_id)
+            except StoreTimeout:
+                # Retry budget exhausted on a transient store fault: the
+                # would-be hit degrades to a served-from-model miss. The
+                # entry STAYS resident (unlike missing_doc — the data is
+                # not lost, the store is slow) and the hit bookkeeping
+                # rolls back so counters match the serving outcome.
+                st.store_timeouts += 1
+                st.misses += 1
+                st.hits -= 1
+                self.slot_hits[slot] -= 1
+                results[i] = CacheResult(False, score=score, category=cat,
+                                         reason="store_timeout",
+                                         latency_ms=self.search_ms)
+                continue
             if doc is None:   # store lost the doc (crash recovery): treat as miss
                 self._evict_slot(slot, reason="missing_doc")
                 st.misses += 1
@@ -351,7 +367,13 @@ class SemanticCache:
         emb = None
         doc_id = int(self.slot_doc[slot])
         if doc_id != INVALID:
-            doc = self.store.get(doc_id)
+            try:
+                doc = self.store.get(doc_id)
+            except StoreTimeout:
+                # Transient store fault mid-re-rank: the host fp32
+                # control-plane row is the same exact embedding, so the
+                # decision stays exact without the external fetch.
+                doc = None
             if doc is not None:
                 doc_cache[doc_id] = doc
                 emb = doc.embedding_array()
@@ -473,12 +495,27 @@ class SemanticCache:
         # fresh-entry eviction prior for items that DO land.
         freq: dict[int, int] = {}
         gated: list[int] = []
+        # One batched ring-buffer/sketch pass per gated category (stream
+        # order preserved; trackers are per-category, so grouping by
+        # category is observation-order-equivalent to the item loop —
+        # and a sharded front door routes a category wholly to one
+        # shard, so the per-category groups are identical across
+        # topologies, keeping single-vs-sharded parity exact).
+        by_cat: dict[str, list[int]] = {}
+        for i in admitted:
+            c = categories[i]
+            if eff[c].admit_after > 1:
+                by_cat.setdefault(c, []).append(i)
+        counts: dict[int, int] = {}
+        for c, items in by_cat.items():
+            cnts = self.admission.observe_batch(c, embeddings[items],
+                                                tau=eff[c].threshold)
+            counts.update(zip(items, (int(x) for x in cnts)))
         for i in admitted:
             c = categories[i]
             k = eff[c].admit_after
             if k > 1:
-                cnt = self.admission.observe(c, embeddings[i],
-                                             tau=eff[c].threshold)
+                cnt = counts[i]
                 if cnt < k:
                     self.metrics.cat(c).admission_skips += 1
                     continue

@@ -295,10 +295,23 @@ class DeviceResidentIndex:
         """
         if self._device is not None and self._device_version == self._version:
             return self._device
-        self._device = _flush_device_tables(
-            self._device, self._host_tables(), self._dirty, self.capacity,
-            self._rebuild_threshold(), self._row_nbytes(),
-            self.emb_row_nbytes(), self.sync_stats)
+        try:
+            self._device = _flush_device_tables(
+                self._device, self._host_tables(), self._dirty, self.capacity,
+                self._rebuild_threshold(), self._row_nbytes(),
+                self.emb_row_nbytes(), self.sync_stats)
+        except BaseException:
+            # A flush that dies mid-delta (device OOM, injected fault)
+            # may have DONATED some of the old mirror's buffers to
+            # scatters that never completed — the old self._device can
+            # no longer be trusted. Drop it so the retry rebuilds the
+            # mirror from the (authoritative, untouched) host tables
+            # with a clean full upload; the dirty log is preserved
+            # unconsumed. tests/test_coherence.py injects exactly this
+            # and checks the retried flush restores exact table
+            # equality.
+            self._device = None
+            raise
         self._finish_sync(self._device)
         self._dirty.clear()
         self._device_version = self._version

@@ -13,6 +13,15 @@ class CategoryStats:
     compliance_rejects: int = 0
     insert_rejects: int = 0
     admission_skips: int = 0       # misses not cached by the admission gate
+    degraded_misses: int = 0       # lookups served-from-model because the
+                                   # category's shard was down (availability
+                                   # accounting: hits + misses + degraded ==
+                                   # lookups; degraded never enters the
+                                   # hit-rate denominator)
+    store_timeouts: int = 0        # would-be hits degraded to misses by an
+                                   # exhausted store retry budget (these DO
+                                   # count in misses — the entry stays
+                                   # resident, the lookup still missed)
     ttl_evictions: int = 0
     quota_evictions: int = 0
     capacity_evictions: int = 0
@@ -26,7 +35,20 @@ class CategoryStats:
 
     @property
     def hit_rate(self) -> float:
-        return self.hits / self.lookups if self.lookups else 0.0
+        """hits / lookups the cache actually SERVED: degraded lookups
+        (shard down — the cache never searched) are excluded from the
+        denominator, like ``admission_skips`` on the insert side, so an
+        outage window degrades availability, not the measured hit rate.
+        With no faults injected this is exactly hits / lookups."""
+        served = self.lookups - self.degraded_misses
+        return self.hits / served if served else 0.0
+
+    @property
+    def availability(self) -> float:
+        """Fraction of lookups the cache was reachable for."""
+        if not self.lookups:
+            return 1.0
+        return 1.0 - self.degraded_misses / self.lookups
 
     @property
     def false_positive_rate(self) -> float:
@@ -46,6 +68,8 @@ class CategoryStats:
             "compliance_rejects": self.compliance_rejects,
             "insert_rejects": self.insert_rejects,
             "admission_skips": self.admission_skips,
+            "degraded_misses": self.degraded_misses,
+            "store_timeouts": self.store_timeouts,
             "ttl_evictions": self.ttl_evictions,
             "quota_evictions": self.quota_evictions,
             "capacity_evictions": self.capacity_evictions,

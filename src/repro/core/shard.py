@@ -39,7 +39,23 @@ Three pieces:
   read and write until cutover. Cutover runs catch-up passes (entries
   written mid-drain), reconciles copies whose source entry was evicted
   during the drain, flips the planner's routing, then purges the source.
-  At no point does a read see a missing or doubly-served entry.
+  At no point does a read see a missing or doubly-served entry. The
+  cutover is journaled (fence → catchup → reconcile → flip → purge →
+  unfence) with crash points between steps: an injected crash at ANY
+  step index leaves exactly one authoritative owner — source until the
+  journaled flip, target after — and ``recover()`` finishes or rolls
+  back from whatever prefix the journal records.
+
+Degraded mode (``core/faults.FaultInjector`` wired via ``faults=``):
+a lookup routed to a shard inside a scheduled outage window resolves as
+a counted ``degraded_miss`` — never an exception, never a hit-rate
+denominator entry — and a write to a down shard lands in a bounded
+per-shard write-behind queue that replays FIFO through the front door
+once the shard recovers. Enqueued writes are ACKNOWLEDGED (the caller
+got a normal INVALID-slot return); the zero-acknowledged-write-loss
+property tests in tests/test_faults.py pin that replay preserves them
+all. An absent/inert injector leaves every hook a no-op, so the
+no-fault path is bit-identical to the pre-fault-injection code.
 
 Clock semantics: shards are constructed with ``search_ms = insert_ms =
 0`` and the sharded front door advances the SHARED clock exactly once
@@ -53,6 +69,7 @@ All shards also share the cache-relative time origin ``_t0``, so
 from __future__ import annotations
 
 import zlib
+from collections import deque
 from typing import Sequence
 
 import numpy as np
@@ -60,6 +77,7 @@ import numpy as np
 from repro.core.cache import CacheResult, SemanticCache
 from repro.core.clock import Clock, SimClock
 from repro.core.economics import ResidencyModel
+from repro.core.faults import FaultInjector
 from repro.core.hnsw import INVALID
 from repro.core.metrics import CategoryStats
 from repro.core.policy import PolicyEngine
@@ -243,14 +261,27 @@ class CategoryMigration:
        writes for the category — copies on the target are invisible to
        its traffic because search is category-masked and routing still
        points at the source.
-    2. **Cutover** (``cutover``): catch-up passes copy entries inserted
-       during the drain (and re-copy any whose target copy was lost);
-       reconciliation drops target copies whose source entry was evicted
-       mid-drain and refreshes drained-while-serving hit counts; then the
-       planner's routing flips and the source purges the category. Reads
+    2. **Cutover** (``cutover``): a write fence goes up for the
+       category; catch-up passes copy entries inserted during the drain
+       (and re-copy any whose target copy was lost); reconciliation
+       drops target copies whose source entry was evicted mid-drain and
+       refreshes drained-while-serving hit counts; the planner's routing
+       flips (the point of no return); the source purges its copies; the
+       fence drops and queued writes replay into the new owner. Reads
        are correct at every intermediate point: before the flip the
        source holds (and serves) the authoritative set, after it the
        target does.
+
+    Crash safety: each completed cutover step appends to ``journal``,
+    and ``faults.crash_point("migration")`` sites sit between steps (and
+    inside the drain's adopt→registry window, the one place a copy can
+    exist that the registry doesn't know about). ``recover()`` reads the
+    journal: pre-flip the source never lost authority, so the migration
+    aborts (or, with ``mode="resume"``, sweeps orphan target copies and
+    re-runs — every pre-flip step is idempotent); post-flip the target
+    owns the category and recovery finishes the purge + fence replay.
+    Either way exactly one shard serves the category afterwards, and
+    every fenced (acknowledged) write survives into the final owner.
     """
 
     def __init__(self, parent: "ShardedSemanticCache", category: str,
@@ -265,6 +296,15 @@ class CategoryMigration:
         # src doc_id -> (target slot, target doc_id): the copy registry
         # reconciliation audits at cutover.
         self._copied: dict[int, tuple[int, int]] = {}
+        # Completed protocol steps, in order. In-process it is just a
+        # list; it stands in for the persisted step journal a multi-
+        # process deployment would fsync — recover() trusts it alone.
+        self.journal: list[str] = []
+        # Write fence: while up, front-door writes for the category
+        # queue here (bounded by parent.write_behind_capacity) instead
+        # of racing the flip; _drain_fence replays them to the owner.
+        self.fenced = False
+        self.fence_queue: deque = deque()
 
     # -- helpers ---------------------------------------------------------------
     def _ends(self) -> tuple[SemanticCache, SemanticCache]:
@@ -284,11 +324,34 @@ class CategoryMigration:
         _, dst = self._ends()
         return bool(dst.slot_valid[slot]) and int(dst.slot_doc[slot]) == doc_id
 
+    def _journal(self, entry: str) -> None:
+        if entry not in self.journal:
+            self.journal.append(entry)
+
+    def _cp(self) -> None:
+        faults = getattr(self.parent, "faults", None)
+        if faults is not None:
+            faults.crash_point("migration")
+
+    @property
+    def flipped(self) -> bool:
+        """Past the point of no return? The journaled flip is the single
+        bit authority pivots on."""
+        return "flip" in self.journal
+
+    @property
+    def owner_id(self) -> int:
+        """The shard currently authoritative for the category — what
+        ``ShardedSemanticCache.shard_of`` routes by at every protocol
+        point, crashed or not."""
+        return self.dst_id if self.flipped else self.src_id
+
     # -- protocol --------------------------------------------------------------
     def step(self, max_entries: int | None = None) -> int:
         """Copy one batch; returns entries moved (0 = drained)."""
         if self.done:
             return 0
+        self._cp()      # a drain-batch boundary
         src, dst = self._ends()
         slots = self._pending()[:max_entries or self.batch_size]
         if slots.size == 0:
@@ -317,6 +380,11 @@ class CategoryMigration:
             # frees up or with a bigger shard_capacity.
             self.abort()
             raise
+        # The adopt→registry window: a crash HERE leaves copies on the
+        # target that _copied doesn't know about (orphans). Pre-flip
+        # they are invisible to traffic (routing still points at the
+        # source); recover() sweeps or purges them.
+        self._cp()
         for s, (dst_slot, dst_doc) in zip(slots, adopted):
             self._copied[int(src.slot_doc[s])] = (dst_slot, dst_doc)
         self.moved += len(keep)
@@ -326,24 +394,44 @@ class CategoryMigration:
         return int(self._pending().size)
 
     def abort(self) -> None:
-        """Cancel a drain before cutover: drop every target copy, keep
-        the source (which served throughout) authoritative, unregister
-        the migration so it can be retried."""
+        """Cancel before the flip: drop every target copy — registry-
+        known AND orphans a crash in the adopt→registry window left
+        behind (pre-flip the target never serves the category, so its
+        category slots are exactly the copies) — keep the source (which
+        served throughout) authoritative, unregister the migration so it
+        can be retried, and replay any fenced writes to the source."""
         if self.done:
             return
+        if self.flipped:
+            raise RuntimeError(
+                "cannot abort after the routing flip — the target owns "
+                f"{self.category!r}; recover()/resume instead")
         _, dst = self._ends()
-        for dst_slot, dst_doc in self._copied.values():
-            if self._owns(dst_slot, dst_doc):
-                dst._evict_slot(dst_slot, reason="migration_abort")
+        for s in dst.category_slots(self.category):
+            dst._evict_slot(int(s), reason="migration_abort")
         self._copied.clear()
         self.parent._migrations.pop(self.category, None)
         self.done = True
+        self._journal("abort")
+        self._drain_fence()
 
     def cutover(self) -> None:
-        """Final catch-up + reconcile, then flip routing and purge."""
+        """Final catch-up + reconcile behind a write fence, then flip
+        routing, purge the source, and replay fenced writes into the new
+        owner. Journaled step by step with a crash point between steps;
+        every pre-flip step is idempotent, so ``recover(mode="resume")``
+        can re-run from the top after a crash at any index."""
         if self.done:
             return
         src, dst = self._ends()
+        self._cp()
+        # Fence first: from here to the flip, front-door writes for the
+        # category queue on the migration instead of landing on either
+        # end — a late write can no longer race the routing flip, and
+        # the catch-up fixpoint below sees a quiescent source.
+        self.fenced = True
+        self._journal("fence")
+        self._cp()
         # Catch-up until a fixpoint: no pending entries AND every live
         # source entry's copy still exists on the target (a copy lost to
         # target-side eviction while the source entry lives re-copies).
@@ -358,6 +446,8 @@ class CategoryMigration:
                 break
             for d in lost:
                 del self._copied[d]
+        self._journal("catchup")
+        self._cp()
         # Reconcile: source evictions during the drain win (no
         # resurrection), and hits accrued while the source served
         # transfer so eviction scores stay continuous.
@@ -370,7 +460,9 @@ class CategoryMigration:
                 dst._evict_slot(dst_slot, reason="migration_reconcile")
             else:
                 dst.slot_hits[dst_slot] = src.slot_hits[live_slots[src_doc]]
-        # Flip routing, then purge the source's copies. The category's
+        self._journal("reconcile")
+        self._cp()
+        # Flip routing — the point of no return. The category's
         # admission sketch moves with it: both ends derive the tracker
         # from the category NAME, so the counts transfer verbatim and
         # repetition history (admit-on-kth-touch progress) survives the
@@ -378,10 +470,68 @@ class CategoryMigration:
         self.parent.planner.assign(self.category, self.dst_id)
         dst.admission.adopt_state(self.category,
                                   src.admission.export_state(self.category))
+        self._journal("flip")
+        self._cp()
+        self._finish_post_flip()
+
+    def _finish_post_flip(self) -> None:
+        """Purge the source's copies and drop the fence — the post-flip
+        tail, shared by the success path and post-flip recovery. Both
+        steps are idempotent."""
+        src, _ = self._ends()
         for s in src.category_slots(self.category):
             src._evict_slot(int(s), reason="migrated")
+        self._journal("purge")
+        self._cp()
         self.parent._migrations.pop(self.category, None)
         self.done = True
+        self._journal("unfence")
+        self._drain_fence()
+
+    def _drain_fence(self) -> None:
+        """Replay fenced (acknowledged) writes through the front door.
+        Runs after the migration is unregistered, so routing points at
+        the final owner and the replay takes the normal write path —
+        admission, quota, and (if that owner is down) the write-behind
+        queue all apply."""
+        self.fenced = False
+        if not self.fence_queue:
+            return
+        items = list(self.fence_queue)
+        self.fence_queue.clear()
+        embs = np.stack([it[0] for it in items])
+        self.parent.insert_batch(embs, [self.category] * len(items),
+                                 [it[1] for it in items],
+                                 [it[2] for it in items],
+                                 [it[3] for it in items])
+        self.parent.fault_stats["fence_replayed"] += len(items)
+
+    def recover(self, mode: str = "auto") -> str:
+        """Resume-or-abort after a crash left the protocol mid-flight.
+
+        Post-flip the journal names the target as owner, so the only
+        legal move — whatever ``mode`` says — is to finish (idempotent
+        purge + fence replay). Pre-flip the source never lost authority:
+        ``"abort"`` (the ``"auto"`` default — cheapest path back to a
+        steady state) rolls the copies back; ``"resume"`` sweeps orphan
+        target copies from the adopt→registry window, then re-runs the
+        drain + cutover from the top. Returns the action taken
+        (``"resumed"`` | ``"aborted"`` | ``"noop"``)."""
+        if self.done:
+            return "noop"
+        if self.flipped:
+            self._finish_post_flip()
+            return "resumed"
+        if mode == "resume":
+            _, dst = self._ends()
+            known = {doc for (_, doc) in self._copied.values()}
+            for s in dst.category_slots(self.category):
+                if int(dst.slot_doc[s]) not in known:
+                    dst._evict_slot(int(s), reason="migration_recover")
+            self.run()
+            return "resumed"
+        self.abort()
+        return "aborted"
 
     def run(self) -> int:
         """Drain to completion and cut over; returns entries moved."""
@@ -413,8 +563,15 @@ class ShardedSemanticCache:
                  insert_ms: float = 1.0, l1_capacity: int = 0,
                  seed: int = 0, emb_dtype: str = "float32",
                  planner=None, shard_capacity: int | None = None,
-                 store_factory=None, eviction: str = "static"):
+                 store_factory=None, eviction: str = "static",
+                 faults: FaultInjector | None = None,
+                 write_behind_capacity: int = 1024):
         self.policies = policies
+        # Fault wiring: an absent (or inert — empty schedule) injector
+        # makes every degraded-mode hook a no-op, keeping this cache
+        # bit-identical to the pre-fault-injection behavior.
+        self.faults = faults
+        self.write_behind_capacity = write_behind_capacity
         self.dim = dim
         self.capacity = capacity
         self.n_shards = max(1, n_shards)
@@ -454,15 +611,61 @@ class ShardedSemanticCache:
         self.last_lookup_stats: dict = {}
         self.last_insert_stats: dict = {}
         self._migrations: dict[str, CategoryMigration] = {}
+        # Bounded per-shard write-behind queues (writes acknowledged
+        # while a shard is down; FIFO-replayed on recovery) plus the
+        # degraded-serving counters bench_faults gates on.
+        self._write_behind: list[deque] = [deque()
+                                           for _ in range(self.n_shards)]
+        self._replaying = False
+        self.fault_stats = {"degraded_misses": 0, "wb_enqueued": 0,
+                            "wb_replayed": 0, "wb_dropped": 0,
+                            "fenced_writes": 0, "fence_replayed": 0,
+                            "fence_dropped": 0}
 
     # ------------------------------------------------------------------ routing
     def shard_of(self, category: str) -> int:
         """The category's SERVING shard: its planned home, or — while a
-        migration drains — the source, which keeps authority until
-        cutover."""
+        migration is in flight — whichever end the migration's journal
+        says is authoritative (source until the cutover's flip, target
+        after; a crashed cutover parks here until ``recover()``)."""
         mig = self._migrations.get(category)
-        return mig.src_id if mig is not None else \
+        return mig.owner_id if mig is not None else \
             self.planner.shard_of(category)
+
+    # -------------------------------------------------------------- degradation
+    def _shard_down(self, shard: int) -> bool:
+        return self.faults is not None and self.faults.shard_down(shard)
+
+    @property
+    def wb_pending(self) -> int:
+        """Writes acknowledged during outages, not yet replayed."""
+        return sum(len(q) for q in self._write_behind)
+
+    def _maybe_replay(self) -> None:
+        """FIFO-replay each recovered shard's write-behind queue through
+        the normal front-door write path (categories may have migrated
+        while queued; a still-down target just re-enqueues). Runs at the
+        top of every public lookup/insert, so recovery drains on the
+        first post-outage operation — no background thread."""
+        if self.faults is None or self._replaying:
+            return
+        todo = [si for si in range(self.n_shards)
+                if self._write_behind[si] and not self._shard_down(si)]
+        if not todo:
+            return
+        self._replaying = True
+        try:
+            for si in todo:
+                items = list(self._write_behind[si])
+                self._write_behind[si].clear()
+                embs = np.stack([it[0] for it in items])
+                self.insert_batch(embs, [it[1] for it in items],
+                                  [it[2] for it in items],
+                                  [it[3] for it in items],
+                                  [it[4] for it in items])
+                self.fault_stats["wb_replayed"] += len(items)
+        finally:
+            self._replaying = False
 
     def shard_of_slot(self, slot: int) -> tuple[int, int]:
         """Decode a globally-encoded slot id to (shard, local slot);
@@ -495,15 +698,43 @@ class ShardedSemanticCache:
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
         B = embeddings.shape[0]
         assert len(categories) == B
+        self._maybe_replay()
         results: list[CacheResult] = [None] * B  # type: ignore[list-item]
         per_shard: dict[int, list[int]] = {}
         for i, c in enumerate(categories):
             per_shard.setdefault(self.shard_of(c), []).append(i)
         agg = {"batch": 0, "hops": 0, "rows_gathered": 0,
-               "gathered_bytes": 0, "reranks": 0, "per_shard": {}}
+               "gathered_bytes": 0, "reranks": 0, "degraded": 0,
+               "per_shard": {}}
         any_active = False
         for si in sorted(per_shard):
             idxs = per_shard[si]
+            if self._shard_down(si):
+                # Degraded mode: the shard's index is unreachable, so
+                # every cacheable lookup routed here resolves as a
+                # counted degraded_miss — the caller serves from the
+                # model, exactly like a miss, and the hit-rate
+                # denominator never sees it (metrics.CategoryStats).
+                # Compliance-blocked traffic classifies as usual: that
+                # decision is policy-side and needs no index.
+                for i in idxs:
+                    c = categories[i]
+                    st = self.metrics.cat(c)
+                    st.lookups += 1
+                    if not self.policies.effective(c).allow_caching:
+                        st.compliance_rejects += 1
+                        st.misses += 1
+                        results[i] = CacheResult(False, category=c,
+                                                 reason="compliance")
+                        continue
+                    st.degraded_misses += 1
+                    self.fault_stats["degraded_misses"] += 1
+                    agg["degraded"] += 1
+                    any_active = True
+                    results[i] = CacheResult(False, category=c,
+                                             reason="degraded",
+                                             latency_ms=self.search_ms)
+                continue
             sub = self.shards[si].lookup_batch(
                 embeddings[idxs], [categories[i] for i in idxs])
             ls = self.shards[si].last_lookup_stats
@@ -547,6 +778,7 @@ class ShardedSemanticCache:
         if not (len(categories) == len(requests) == len(responses)
                 == len(metas) == B):
             raise ValueError("insert_batch: ragged batch")
+        self._maybe_replay()
         # One write-round clock charge iff anything is admissible —
         # matching the single cache, whose advance sits behind the
         # compliance gate.
@@ -556,13 +788,53 @@ class ShardedSemanticCache:
                for c in categories):
             self.clock.advance(self.insert_ms / 1e3)
         slots_out = [INVALID] * B
-        per_shard: dict[int, list[int]] = {}
-        for i, c in enumerate(categories):
-            per_shard.setdefault(self.shard_of(c), []).append(i)
         agg = {"batch": B, "admitted": 0, "admission_skips": 0,
                "insert_rejects": 0, "per_shard": {}}
+        per_shard: dict[int, list[int]] = {}
+        for i, c in enumerate(categories):
+            mig = self._migrations.get(c)
+            if mig is not None and mig.fenced:
+                # Cutover write fence: the write queues on the migration
+                # (acknowledged — INVALID slot, like any deferred write)
+                # and replays to whichever shard owns the category once
+                # the fence drops. Non-cacheable traffic short-circuits
+                # as usual; the fence only defers writes that would land.
+                e = eff[c]
+                if not e.allow_caching or e.quota <= 0.0:
+                    self.metrics.cat(c).insert_rejects += 1
+                    agg["insert_rejects"] += 1
+                    continue
+                if len(mig.fence_queue) >= self.write_behind_capacity:
+                    self.fault_stats["fence_dropped"] += 1
+                    continue
+                mig.fence_queue.append((embeddings[i].copy(), requests[i],
+                                        responses[i], metas[i]))
+                self.fault_stats["fenced_writes"] += 1
+                continue
+            per_shard.setdefault(self.shard_of(c), []).append(i)
         for si in sorted(per_shard):
             idxs = per_shard[si]
+            if self._shard_down(si):
+                # Shard outage: acknowledge the write into the bounded
+                # write-behind queue (replayed FIFO on recovery by
+                # _maybe_replay). A full queue DROPS — the drop is
+                # counted and unacknowledged-by-construction: only
+                # enqueued writes carry the zero-loss replay guarantee.
+                q = self._write_behind[si]
+                for i in idxs:
+                    c = categories[i]
+                    e = eff[c]
+                    if not e.allow_caching or e.quota <= 0.0:
+                        self.metrics.cat(c).insert_rejects += 1
+                        agg["insert_rejects"] += 1
+                        continue
+                    if len(q) >= self.write_behind_capacity:
+                        self.fault_stats["wb_dropped"] += 1
+                        continue
+                    q.append((embeddings[i].copy(), c, requests[i],
+                              responses[i], metas[i]))
+                    self.fault_stats["wb_enqueued"] += 1
+                continue
             sub = self.shards[si].insert_batch(
                 embeddings[idxs], [categories[i] for i in idxs],
                 [requests[i] for i in idxs], [responses[i] for i in idxs],

@@ -8,6 +8,13 @@ accessed by primary key. Stores are pluggable:
     FileStore          — one file per doc + manifest (restart-durable)
     LatencyModelStore  — wraps any store and charges simulated latency on a
                          ``Clock`` (the 5 ms fetch of §4.4)
+    FlakyStore         — wraps any store and injects scheduled transient
+                         failures from a ``core.faults.FaultInjector``
+    RetryingStore      — wraps any store with bounded retries, Clock-charged
+                         deterministic exponential backoff and a per-call
+                         latency budget; exhaustion raises ``StoreTimeout``
+                         (the cache lookup path degrades it to a counted
+                         served-from-model miss instead of a stall)
     VectorDBEmulator   — the *baseline the paper argues against*: coupled
                          remote search+storage. Charges 30 ms search on every
                          query (hit or miss), applies thresholds post-search,
@@ -27,6 +34,8 @@ from typing import Any
 import numpy as np
 
 from repro.core.clock import Clock, SimClock
+from repro.core.faults import FaultInjector, StoreTimeout, \
+    TransientStoreError
 
 
 @dataclass
@@ -196,6 +205,109 @@ class LatencyModelStore(DocumentStore):
     def delete(self, doc_id: int) -> None:
         self.clock.advance(self.delete_ms / 1e3)
         self.inner.delete(doc_id)
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+
+class FlakyStore(DocumentStore):
+    """Injects scheduled transient failures in front of any store.
+
+    Every operation first consults the shared ``FaultInjector`` (which
+    counts ops globally and raises ``TransientStoreError`` on scheduled
+    indices), then delegates. With an inert injector the consult is a
+    no-op and behavior is identical to the inner store — the
+    empty-schedule baseline gate depends on that.
+    """
+
+    def __init__(self, inner: DocumentStore, faults: FaultInjector):
+        self.inner = inner
+        self.faults = faults
+
+    def put(self, doc: Document) -> None:
+        self.faults.store_op("put")
+        self.inner.put(doc)
+
+    def put_many(self, docs: list[Document]) -> None:
+        # one batched round trip = one failure opportunity
+        self.faults.store_op("put")
+        self.inner.put_many(docs)
+
+    def get(self, doc_id: int) -> Document | None:
+        self.faults.store_op("get")
+        return self.inner.get(doc_id)
+
+    def delete(self, doc_id: int) -> None:
+        self.faults.store_op("delete")
+        self.inner.delete(doc_id)
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+
+class RetryingStore(DocumentStore):
+    """Bounded retries + deterministic Clock-charged backoff + a per-call
+    latency budget over any store.
+
+    A failed operation (``TransientStoreError`` from the inner store)
+    retries up to ``retries`` times with exponential backoff
+    ``backoff_ms · 2^attempt`` charged on the injected ``Clock`` — on a
+    ``SimClock`` that is simulated latency, never a wall-clock sleep, so
+    retry behavior is deterministic in tests and benchmarks. Retrying
+    stops early once the CUMULATIVE backoff would exceed ``budget_ms``
+    (the per-lookup latency budget: a cache hit that needs the external
+    doc is only worth so much stall). Exhaustion — by retry count or by
+    budget — raises ``StoreTimeout``; ``SemanticCache.lookup_batch``
+    catches it on the hit path and degrades the lookup to a
+    served-from-model miss with a ``store_timeouts`` counter, keeping
+    the entry resident (the fault was transient, not data loss).
+
+    ``stats`` counts retries/timeouts/backoff per op kind — all
+    deterministic under a fixed schedule.
+    """
+
+    def __init__(self, inner: DocumentStore, clock: Clock | None = None,
+                 retries: int = 3, backoff_ms: float = 1.0,
+                 budget_ms: float = 50.0):
+        self.inner = inner
+        self.clock = clock or SimClock()
+        self.retries = int(retries)
+        self.backoff_ms = float(backoff_ms)
+        self.budget_ms = float(budget_ms)
+        self.stats = {"get_retries": 0, "put_retries": 0,
+                      "delete_retries": 0, "get_timeouts": 0,
+                      "put_timeouts": 0, "delete_timeouts": 0,
+                      "backoff_ms_charged": 0.0}
+
+    def _call(self, op: str, fn):
+        spent = 0.0
+        last: BaseException | None = None
+        for attempt in range(self.retries + 1):
+            try:
+                return fn()
+            except TransientStoreError as e:
+                last = e
+                wait = self.backoff_ms * (2.0 ** attempt)
+                if attempt >= self.retries or spent + wait > self.budget_ms:
+                    break
+                spent += wait
+                self.stats[f"{op}_retries"] += 1
+                self.stats["backoff_ms_charged"] += wait
+                self.clock.advance(wait / 1e3)
+        self.stats[f"{op}_timeouts"] += 1
+        raise StoreTimeout(op) from last
+
+    def put(self, doc: Document) -> None:
+        self._call("put", lambda: self.inner.put(doc))
+
+    def put_many(self, docs: list[Document]) -> None:
+        self._call("put", lambda: self.inner.put_many(docs))
+
+    def get(self, doc_id: int) -> Document | None:
+        return self._call("get", lambda: self.inner.get(doc_id))
+
+    def delete(self, doc_id: int) -> None:
+        self._call("delete", lambda: self.inner.delete(doc_id))
 
     def __len__(self) -> int:
         return len(self.inner)

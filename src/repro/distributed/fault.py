@@ -11,7 +11,10 @@ here it is exercised by tests and the training driver's logging.
 
 ``retry_step`` — bounded retry with re-randomized donation buffers for
 transient device errors (the restart path of checkpoint/restart is covered
-by ``repro.checkpoint``).
+by ``repro.checkpoint``). Backoff between attempts is charged to an
+injectable ``repro.core.clock.Clock`` — a ``SimClock`` makes retry timing
+deterministic and testable, a ``WallClock`` really sleeps; the default
+``backoff_s=0`` keeps the historical retry-immediately behavior.
 """
 
 from __future__ import annotations
@@ -97,7 +100,13 @@ except Exception:                                 # pragma: no cover
 
 
 def retry_step(fn: Callable, *args, retries: int = 2,
-               on_retry: Callable[[int, BaseException], None] | None = None):
+               on_retry: Callable[[int, BaseException], None] | None = None,
+               backoff_s: float = 0.0, clock=None):
+    """Call ``fn(*args)``, retrying device/transient errors up to
+    ``retries`` times. With ``backoff_s > 0`` the k-th retry waits
+    ``backoff_s · 2^k`` seconds first, charged via ``clock.advance`` —
+    pass a ``SimClock`` for deterministic tests, default is a real
+    sleep."""
     last: BaseException | None = None
     for attempt in range(retries + 1):
         try:
@@ -106,4 +115,9 @@ def retry_step(fn: Callable, *args, retries: int = 2,
             last = e
             if on_retry is not None:
                 on_retry(attempt, e)
+            if backoff_s > 0.0 and attempt < retries:
+                if clock is None:
+                    from repro.core.clock import WallClock
+                    clock = WallClock()
+                clock.advance(backoff_s * (2.0 ** attempt))
     raise last

@@ -32,6 +32,7 @@ from repro.core.cache import SemanticCache
 from repro.core.embedding import FeatureHashEmbedder
 from repro.core.policy import AdaptiveController, LoadSignal
 from repro.core.shard import ShardedSemanticCache
+from repro.distributed.fault import StepWatchdog
 from repro.models.model import Model
 
 
@@ -71,6 +72,9 @@ class EngineStats:
     # deterministic cost signal the lookup benchmark gates on.
     search_hops: int = 0
     rows_gathered: int = 0
+    # steps the watchdog flagged as stragglers (wall time > factor × the
+    # trailing-median step time) — the serving-side liveness signal.
+    straggler_steps: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -93,7 +97,8 @@ class ServingEngine:
                  *, max_batch: int = 8, prompt_len: int = 64,
                  max_new_tokens: int = 16,
                  controller: AdaptiveController | None = None,
-                 model_name: str = "default"):
+                 model_name: str = "default",
+                 watchdog: StepWatchdog | None = None):
         self.model = model
         self.params = params
         self.cache = cache
@@ -103,6 +108,10 @@ class ServingEngine:
         self.max_new = max_new_tokens
         self.controller = controller
         self.model_name = model_name
+        # Straggler detection on the serve loop itself: every non-empty
+        # step() is timed, and steps beyond the watchdog's trailing-
+        # median threshold surface as stats.straggler_steps.
+        self.watchdog = watchdog if watchdog is not None else StepWatchdog()
         self.queue: list[Request] = []
         self.stats = EngineStats()
         self._next_id = 0
@@ -147,6 +156,7 @@ class ServingEngine:
         """Serve one batch from the queue. Returns completed responses."""
         if not self.queue:
             return []
+        self.watchdog.step_start()
         batch = self.queue[:self.max_batch]
         self.queue = self.queue[self.max_batch:]
         t0 = time.monotonic()
@@ -198,6 +208,8 @@ class ServingEngine:
                 if self.controller is not None:
                     self.controller.observe(self.model_name, LoadSignal(
                         latency_ms=lat, queue_depth=len(self.queue)))
+        self.watchdog.step_end()
+        self.stats.straggler_steps = self.watchdog.straggler_events
         return responses
 
     def drain(self) -> list[Response]:

@@ -31,10 +31,12 @@ import numpy as np
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.economics import ResidencyModel
+from repro.core.faults import FaultInjector, FaultSchedule
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AdaptiveController, LoadSignal, PolicyEngine
 from repro.core.shard import ShardedSemanticCache
-from repro.core.storage import Document, VectorDBEmulator
+from repro.core.storage import (Document, FlakyStore, InMemoryStore,
+                                RetryingStore, VectorDBEmulator)
 from repro.core.workload import Query, WorkloadGenerator
 
 
@@ -61,6 +63,15 @@ class SimConfig:
     load_spikes: list = field(default_factory=list)
     l1_capacity: int = 0
     seed: int = 0
+    # hybrid fault injection (core/faults.py). None = no injector at all
+    # — construction is identical to the pre-fault code path, which the
+    # bench_faults baseline gate relies on. A FaultSchedule (even an
+    # empty one) wires the injector + store retry stack in.
+    fault_schedule: FaultSchedule | None = None
+    store_retries: int = 3              # RetryingStore bounded attempts
+    store_backoff_ms: float = 1.0       # base of the 2^k backoff ladder
+    store_budget_ms: float = 50.0       # per-op cumulative latency budget
+    write_behind_capacity: int = 1024   # per-shard outage write queue
 
 
 @dataclass
@@ -88,6 +99,10 @@ class SimResult:
     # fewer resident bytes (benchmarks/bench_admission.py gates on it).
     mean_resident_entries: float = 0.0
     hits_per_resident_mb: float = 0.0
+    # hybrid + fault injection only: availability/degraded accounting —
+    # degraded_misses, store_timeouts, write-behind queue counters and
+    # the injector's op/visit tallies. None when no injector is wired.
+    fault_stats: dict | None = None
 
     def summary(self) -> dict:
         return {
@@ -114,16 +129,44 @@ class ServingSimulator:
         if self.controller is not None:
             self.policies.controller = self.controller
 
+        self.faults: FaultInjector | None = None
+        self._retry_stores: list[RetryingStore] = []
         if sim.architecture == "hybrid":
             kw = dict(capacity=sim.cache_capacity, clock=self.clock,
                       index_kind=sim.index_kind, use_device=sim.use_device,
                       search_ms=sim.search_ms, insert_ms=sim.insert_ms,
                       l1_capacity=sim.l1_capacity, seed=sim.seed,
                       eviction=sim.eviction)
-            self.cache = (ShardedSemanticCache(policies,
-                                               n_shards=sim.n_shards, **kw)
-                          if sim.n_shards > 1
-                          else SemanticCache(policies, **kw))
+            if sim.fault_schedule is not None:
+                # Fault stack: one shared injector; every shard's doc
+                # store becomes RetryingStore(FlakyStore(InMemoryStore))
+                # — the injector raises scheduled transients, the retry
+                # wrapper absorbs bounded runs with Clock-charged
+                # backoff, exhaustion degrades the lookup (StoreTimeout
+                # handling in core/cache.py).
+                self.faults = FaultInjector(sim.fault_schedule, self.clock)
+
+                def _store(_i: int) -> RetryingStore:
+                    s = RetryingStore(FlakyStore(InMemoryStore(),
+                                                 self.faults),
+                                      clock=self.clock,
+                                      retries=sim.store_retries,
+                                      backoff_ms=sim.store_backoff_ms,
+                                      budget_ms=sim.store_budget_ms)
+                    self._retry_stores.append(s)
+                    return s
+
+                if sim.n_shards > 1:
+                    kw["store_factory"] = _store
+                else:
+                    kw["store"] = _store(0)
+            if sim.n_shards > 1:
+                self.cache = ShardedSemanticCache(
+                    policies, n_shards=sim.n_shards,
+                    faults=self.faults,
+                    write_behind_capacity=sim.write_behind_capacity, **kw)
+            else:
+                self.cache = SemanticCache(policies, **kw)
             # external fetch latency charged here (LatencyModelStore-like)
             self._fetch_ms = sim.fetch_ms
         elif sim.architecture == "vdb":
@@ -138,6 +181,11 @@ class ServingSimulator:
         self.fp_window_size = 50
         # cached ground truth per doc: doc_id -> (intent, version)
         self._truth: dict[int, tuple[int, int]] = {}
+        # fallback truth for writes acknowledged WITHOUT a slot (write-
+        # behind / fence queues under fault injection): keyed by the
+        # response payload, consulted only when a hit's doc_id is
+        # unknown — baseline (no-fault) accounting is untouched.
+        self._truth_text: dict[tuple[str, str], tuple[int, int]] = {}
         self._latencies: list[float] = []
         self._model_calls: dict[str, int] = {}
         self._traffic: dict[str, int] = {}
@@ -173,7 +221,10 @@ class ServingSimulator:
         if res.hit:
             if res.reason != "hit_l1":
                 self.clock.advance(self._fetch_ms / 1e3)
-            intent, version = self._truth.get(res.doc_id, (-1, -1))
+            truth = self._truth.get(res.doc_id)
+            if truth is None and self.faults is not None:
+                truth = self._truth_text.get((q.category, res.response))
+            intent, version = truth if truth is not None else (-1, -1)
             is_fp = intent != q.intent_id
             # §7.5.6: feed windowed FP observations back to the controller
             # so relaxation backs off when accuracy degrades.
@@ -202,6 +253,11 @@ class ServingSimulator:
                 # doc_id_of decodes sharded caches' global slot ids too
                 doc_id = self.cache.doc_id_of(slot)
                 self._truth[doc_id] = (q.intent_id, q.content_version)
+            elif self.faults is not None:
+                # the write may be acknowledged-but-deferred (write-
+                # behind / fence) — its doc_id doesn't exist yet
+                self._truth_text[(q.category, f"response:{q.text}")] = \
+                    (q.intent_id, q.content_version)
         return (self.clock.now() - t0) * 1e3
 
     def _serve_vdb(self, q: Query, gen: WorkloadGenerator) -> float:
@@ -282,6 +338,27 @@ class ServingSimulator:
                 tot = gt.false_positives + gt.true_positives
                 d["fp_rate"] = round(gt.false_positives / tot, 4) if tot else 0.0
             per_cat[name] = d
+        fault_stats = None
+        if self.faults is not None:
+            per = reg.per_category.values()
+            lookups = sum(s.lookups for s in per)
+            degraded = sum(s.degraded_misses for s in per)
+            fault_stats = {
+                "degraded_misses": degraded,
+                "store_timeouts": sum(s.store_timeouts for s in per),
+                "availability": round(1.0 - degraded / lookups, 4)
+                if lookups else 1.0,
+                "injector": self.faults.stats(),
+            }
+            if hasattr(self.cache, "fault_stats"):
+                fault_stats["front_door"] = dict(self.cache.fault_stats)
+                fault_stats["wb_pending"] = self.cache.wb_pending
+            if self._retry_stores:
+                store = {}
+                for s in self._retry_stores:
+                    for k, v in s.stats.items():
+                        store[k] = store.get(k, 0) + v
+                fault_stats["store"] = store
         return SimResult(
             per_category=per_cat,
             overall_hit_rate=reg.overall_hit_rate(),
@@ -302,4 +379,5 @@ class ServingSimulator:
                         if self.sim.architecture == "hybrid" else None),
             mean_resident_entries=mean_resident,
             hits_per_resident_mb=hits_per_mb,
+            fault_stats=fault_stats,
         )

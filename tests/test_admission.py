@@ -214,6 +214,69 @@ def test_controller_export_adopt_preserves_history():
 
 
 # ---------------------------------------------------------------------------
+# Batched ring-buffer similarity (PR-7 follow-on): one matmul over the
+# batch's gated candidates must reproduce the sequential path's counts.
+# ---------------------------------------------------------------------------
+
+def test_observe_batch_matches_sequential_counts():
+    """Unchanged-counters regression: ``observe_batch`` (one gemm over
+    the ring snapshot + fresh dots for slots the batch itself wrote)
+    returns exactly the counts the item-at-a-time ``observe`` loop
+    produced — including intra-batch repeats, paraphrases of entries
+    enrolled EARLIER IN THE SAME BATCH, and ring-slot overwrites."""
+    rng = np.random.default_rng(11)
+    base = _unit(rng, 24)
+    stream = []
+    for i in range(24):
+        stream.append(base[i])
+        if i % 3 == 0:                      # paraphrase of a recent item
+            p = base[i] + 0.05 * _unit(rng)[0]
+            stream.append(p / np.linalg.norm(p))
+        if i % 5 == 0:
+            stream.append(base[i])          # exact intra-batch repeat
+    stream = np.stack(stream)
+    for batch_size in (1, 4, len(stream)):
+        seq = CategoryTracker(DIM, tau=0.8, buffer_size=8, seed=1)
+        bat = CategoryTracker(DIM, tau=0.8, buffer_size=8, seed=1)
+        got, want = [], []
+        for lo in range(0, len(stream), batch_size):
+            chunk = stream[lo:lo + batch_size]
+            want.extend(seq.observe(e) for e in chunk)
+            got.extend(bat.observe_batch(chunk))
+        assert got == want, f"batch_size={batch_size}"
+        assert bat.representatives == seq.representatives
+
+
+def test_observe_batch_end_to_end_cache_counters_unchanged():
+    """The cache's grouped observe_batch admission gate reproduces the
+    per-item path's counters: batched inserts vs B=1 inserts of the
+    same stream admit/skip identically under admit_after=2."""
+    def policies():
+        return PolicyEngine([CategoryConfig("a", threshold=0.80, ttl=1e6,
+                                            quota=0.5, admit_after=2),
+                             CategoryConfig("b", threshold=0.78, ttl=1e6,
+                                            quota=0.4, admit_after=3)])
+    rng = np.random.default_rng(12)
+    embs = np.concatenate([_unit(rng, 10)] * 3)     # 3 passes over 10
+    cats = (["a", "b"] * 5) * 3
+    reqs = [f"q{i}" for i in range(len(embs))]
+    resps = [f"r{i}" for i in range(len(embs))]
+    batched = SemanticCache(policies(), dim=DIM, capacity=64,
+                            clock=SimClock(), index_kind="flat", seed=0)
+    batched.insert_batch(embs, cats, reqs, resps)
+    single = SemanticCache(policies(), dim=DIM, capacity=64,
+                           clock=SimClock(), index_kind="flat", seed=0)
+    for i in range(len(embs)):
+        single.insert(embs[i], cats[i], reqs[i], resps[i])
+    for c in ("a", "b"):
+        sb, ss = batched.metrics.cat(c), single.metrics.cat(c)
+        assert (sb.inserts, sb.admission_skips) == (ss.inserts,
+                                                    ss.admission_skips), c
+    assert len(batched) == len(single) > 0
+    assert batched.metrics.cat("a").admission_skips > 0
+
+
+# ---------------------------------------------------------------------------
 # Eviction scorers.
 # ---------------------------------------------------------------------------
 

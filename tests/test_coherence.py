@@ -135,3 +135,47 @@ def test_cache_mirror_exact_under_insert_remove_sweep(rng, emb_dtype):
                 assert cache.slot_valid[r.slot]
     assert cache.metrics.cat("a").ttl_evictions > 0
     assert cache.index.sync_stats["delta_updates"] > 0
+
+
+@pytest.mark.parametrize("fail_after,emb_dtype", [(0, "float32"),
+                                                  (1, "float32"),
+                                                  (2, "int8")])
+def test_failed_partial_delta_flush_recovers_exact(monkeypatch, fail_after,
+                                                   emb_dtype):
+    """Injected failed/PARTIAL delta flush: the scatter comprehension
+    dies after ``fail_after`` of the per-table scatters — the old mirror
+    may hold donated (invalid) buffers — and a retried flush must
+    restore exact host/device table equality. device_tables() drops the
+    poisoned mirror on the way out, so the retry is a clean full
+    rebuild; the dirty log survives unconsumed."""
+    from repro.core.hnsw import HNSWIndex, HNSWParams
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    idx = HNSWIndex(DIM, 256, params=HNSWParams(emb_dtype=emb_dtype),
+                    seed=7)
+    idx.add_batch(_unit(rng, 32), np.zeros(32, np.int32))
+    _assert_mirror_exact(idx)               # establish a mirror (full up)
+    idx.add_batch(_unit(rng, 4), np.ones(4, np.int32))  # dirty delta
+
+    real = ops.scatter_rows
+    calls = {"n": 0}
+
+    def dying_scatter(dst, rows, payload):
+        if calls["n"] >= fail_after:
+            raise RuntimeError("injected flush fault (device OOM)")
+        calls["n"] += 1
+        return real(dst, rows, payload)
+
+    monkeypatch.setattr(ops, "scatter_rows", dying_scatter)
+    with pytest.raises(RuntimeError, match="injected flush fault"):
+        idx.device_tables()
+    assert idx._device is None              # poisoned mirror dropped
+    assert idx._dirty                       # delta not marked consumed
+    monkeypatch.setattr(ops, "scatter_rows", real)
+    _assert_mirror_exact(idx)               # retried flush: exact again
+    # and the index keeps delta-syncing normally afterwards
+    idx.add_batch(_unit(rng, 2), np.zeros(2, np.int32))
+    before = idx.sync_stats["delta_updates"]
+    _assert_mirror_exact(idx)
+    assert idx.sync_stats["delta_updates"] == before + 1

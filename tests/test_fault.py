@@ -79,3 +79,37 @@ def test_retry_step_retries_then_raises():
         return "fine"
 
     assert retry_step(ok_after_one, retries=2) == "fine"
+
+
+def test_retry_step_backoff_charges_injected_clock():
+    """Backoff routes through the injectable Clock: on a SimClock the
+    2^k ladder is pure simulated time — deterministic, no wall sleep —
+    and a success consumes only the backoff of the failed attempts."""
+    from repro.core.clock import SimClock
+
+    clk = SimClock()
+    attempts = []
+
+    def ok_after_two():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return "fine"
+
+    assert retry_step(ok_after_two, retries=3, backoff_s=0.5,
+                      clock=clk) == "fine"
+    assert clk.now() == pytest.approx(0.5 + 1.0)    # 0.5·2^0 + 0.5·2^1
+
+    # exhaustion: no backoff after the FINAL attempt (nothing to wait for)
+    clk2 = SimClock()
+    with pytest.raises(RuntimeError):
+        retry_step(lambda: (_ for _ in ()).throw(RuntimeError("x")),
+                   retries=2, backoff_s=0.25, clock=clk2)
+    assert clk2.now() == pytest.approx(0.25 + 0.5)
+
+    # default backoff_s=0 keeps the historical retry-immediately path
+    clk3 = SimClock()
+    with pytest.raises(RuntimeError):
+        retry_step(lambda: (_ for _ in ()).throw(RuntimeError("x")),
+                   retries=1, clock=clk3)
+    assert clk3.now() == 0.0

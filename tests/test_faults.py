@@ -1,0 +1,374 @@
+"""Fault injection & degraded-mode serving (core/faults.py + the
+degraded paths in core/{shard,cache,storage}.py).
+
+Three property families pin the tentpole's guarantees:
+
+* **Inertness** — an absent or empty-schedule injector leaves every
+  hook a no-op: the wired stack's observable trace is bit-identical to
+  the unwired one (the bench_faults baseline gate, in miniature).
+* **Degraded accounting** — outage-window lookups resolve as counted
+  ``degraded_miss``es with ``hits + misses + degraded == lookups`` in
+  every run, and acknowledged writes queued during the outage ALL
+  land after recovery (zero acknowledged-write loss).
+* **Crash-safe migration** — an injected crash at EVERY enumerable
+  protocol step index, across {1,2,4} shards × {flat,hnsw} ×
+  {fp32,int8}, leaves exactly one authoritative owner, and
+  resume-or-abort recovery loses no acknowledged write (fenced
+  cutover-window writes included).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (FaultInjector, FaultSchedule, InjectedCrash,
+                        SemanticCache, ShardedSemanticCache, SimClock,
+                        StoreTimeout, TransientStoreError)
+from repro.core.policy import CategoryConfig, PolicyEngine
+from repro.core.storage import (Document, FlakyStore, InMemoryStore,
+                                RetryingStore)
+
+DIM = 48
+
+
+def _policies() -> PolicyEngine:
+    return PolicyEngine([
+        CategoryConfig("a", threshold=0.80, ttl=1e6, quota=0.40),
+        CategoryConfig("b", threshold=0.78, ttl=1e6, quota=0.40),
+        CategoryConfig("d", threshold=0.95, ttl=1.0, quota=0.0,
+                       allow_caching=False),
+    ])
+
+
+def _bank(cat: str, n: int = 64) -> np.ndarray:
+    rng = np.random.default_rng({"a": 100, "b": 101, "d": 102}[cat])
+    v = rng.standard_normal((n, DIM)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _sharded(n_shards=2, faults=None, index_kind="flat",
+             emb_dtype="float32", clock=None, **kw):
+    return ShardedSemanticCache(
+        _policies(), dim=DIM, capacity=256, n_shards=n_shards,
+        clock=clock or SimClock(), index_kind=index_kind,
+        emb_dtype=emb_dtype, seed=0, faults=faults, **kw)
+
+
+# ---------------------------------------------------------------- injector
+class TestFaultInjector:
+    def test_empty_schedule_is_inert(self):
+        inj = FaultInjector()
+        assert not inj.active
+        assert not inj.shard_down(0)
+        inj.store_op("get")
+        inj.crash_point("migration")
+        # inert injectors count NOTHING — the hooks are true no-ops
+        assert inj.stats()["store_ops"] == {"get": 0, "put": 0, "delete": 0}
+        assert inj.visits("migration") == 0
+
+    def test_outage_window_is_clock_driven(self):
+        clk = SimClock()
+        inj = FaultInjector(FaultSchedule(shard_outages=[(1.0, 2.0, 1)]),
+                            clk)
+        assert not inj.shard_down(1)        # t=0: before the window
+        clk.advance(1.5)
+        assert inj.shard_down(1)
+        assert not inj.shard_down(0)        # other shards unaffected
+        clk.advance(1.0)
+        assert not inj.shard_down(1)        # t=2.5: window closed
+
+    def test_store_op_indices_fire_once_each(self):
+        sched = FaultSchedule(store_get_failures=FaultSchedule.op_range(1, 2))
+        inj = FaultInjector(sched)
+        inj.store_op("get")                             # op 0: fine
+        for _ in range(2):                              # ops 1, 2: scheduled
+            with pytest.raises(TransientStoreError):
+                inj.store_op("get")
+        inj.store_op("get")                             # op 3: fine again
+        inj.store_op("put")                             # other kinds untouched
+        assert inj.injected["store_faults"] == 2
+
+    def test_crash_point_fires_once_then_disarms(self):
+        inj = FaultInjector(FaultSchedule(crash_at={"site": 2}))
+        inj.crash_point("site")
+        inj.crash_point("site")
+        with pytest.raises(InjectedCrash) as e:
+            inj.crash_point("site")
+        assert e.value.visit == 2
+        # recovery re-traverses the same site without re-crashing
+        inj.crash_point("site")
+        assert inj.visits("site") == 4
+        assert inj.injected["crashes"] == 1
+
+
+# ------------------------------------------------------------ retry wrapper
+class TestRetryingStore:
+    def _stack(self, get_failures=(), retries=3, backoff_ms=1.0,
+               budget_ms=50.0):
+        clk = SimClock()
+        inj = FaultInjector(
+            FaultSchedule(store_get_failures=frozenset(get_failures)), clk)
+        store = RetryingStore(FlakyStore(InMemoryStore(), inj), clock=clk,
+                              retries=retries, backoff_ms=backoff_ms,
+                              budget_ms=budget_ms)
+        return store, clk
+
+    def test_absorbs_bounded_run_with_deterministic_backoff(self):
+        store, clk = self._stack(get_failures={0, 1})
+        store.put(Document(7, "q", "r", 0.0, "a"))
+        doc = store.get(7)                  # ops 0,1 fail; op 2 succeeds
+        assert doc is not None and doc.response == "r"
+        # backoff ladder 1ms·2^0 + 1ms·2^1 charged to the sim clock
+        assert clk.now() == pytest.approx(0.003)
+        assert store.stats["get_retries"] == 2
+        assert store.stats["get_timeouts"] == 0
+
+    def test_retry_exhaustion_raises_store_timeout(self):
+        store, _ = self._stack(get_failures=set(range(10)), retries=2)
+        store.put(Document(7, "q", "r", 0.0, "a"))
+        with pytest.raises(StoreTimeout):
+            store.get(7)
+        assert store.stats["get_timeouts"] == 1
+
+    def test_latency_budget_caps_backoff_spend(self):
+        # generous retry count, tiny budget: the cumulative-backoff
+        # guard must break the loop long before 50 attempts
+        store, clk = self._stack(get_failures=set(range(60)), retries=50,
+                                 backoff_ms=4.0, budget_ms=10.0)
+        store.put(Document(7, "q", "r", 0.0, "a"))
+        with pytest.raises(StoreTimeout):
+            store.get(7)
+        assert clk.now() * 1e3 <= 10.0 + 1e-9
+
+    def test_store_timeout_degrades_hit_not_raises(self):
+        """A would-be cache hit whose doc fetch exhausts the retry
+        budget serves as a counted store_timeout miss; the entry stays
+        resident and hits again once the store heals."""
+        clk = SimClock()
+        # gets 0-2 fail: the first lookup's fetch burns all 3 attempts
+        # (retries=2) and times out; the second lookup (get op 3) heals
+        inj = FaultInjector(FaultSchedule(
+            store_get_failures=FaultSchedule.op_range(0, 3)), clk)
+        cache = SemanticCache(
+            _policies(), dim=DIM, capacity=64, clock=clk, index_kind="flat",
+            store=RetryingStore(FlakyStore(InMemoryStore(), inj), clock=clk,
+                                retries=2))
+        emb = _bank("a")[0]
+        cache.insert(emb, "a", "q", "r")
+        res = cache.lookup(emb, "a")
+        assert not res.hit and res.reason == "store_timeout"
+        st = cache.metrics.cat("a")
+        assert (st.store_timeouts, st.hits, st.misses) == (1, 0, 1)
+        res = cache.lookup(emb, "a")        # fault run consumed: hit again
+        assert res.hit and res.response == "r"
+        assert st.hits == 1
+
+
+# --------------------------------------------------------- degraded serving
+class TestDegradedServing:
+    def test_outage_lookups_degrade_and_writes_replay(self):
+        clk = SimClock()
+        inj = FaultInjector(FaultSchedule(shard_outages=[(0.0, 5.0, 0)]),
+                            clk)
+        cache = _sharded(faults=inj, clock=clk)
+        down = [c for c in ("a", "b") if cache.shard_of(c) == 0]
+        up = [c for c in ("a", "b") if cache.shard_of(c) == 1]
+        assert down and up      # the planner split the two categories
+        bank_dn, bank_up = _bank(down[0]), _bank(up[0])
+        embs = np.concatenate([bank_dn[:4], bank_up[:4]])
+        cats = [down[0]] * 4 + [up[0]] * 4
+        reqs = [f"q{i}" for i in range(8)]
+        resp = [f"r{i}" for i in range(8)]
+        slots = cache.insert_batch(embs, cats, reqs, resp)
+        # down-shard writes acknowledged without a slot, queued
+        assert all(s < 0 for s in slots[:4]) and all(s >= 0 for s in slots[4:])
+        assert cache.wb_pending == 4
+        res = cache.lookup_batch(embs, cats)
+        assert [r.reason for r in res[:4]] == ["degraded"] * 4
+        assert all(r.hit for r in res[4:])  # the up shard is unaffected
+        st = cache.metrics.cat(down[0])
+        assert st.degraded_misses == 4 and st.lookups == 4
+        # the accounting invariant bench_faults gates on
+        assert st.hits + st.misses + st.degraded_misses == st.lookups
+        assert st.hit_rate == 0.0 and st.availability == 0.0
+        # recovery: the next front-door op replays the queue FIFO
+        clk.advance(10.0)
+        res = cache.lookup_batch(embs, cats)
+        assert all(r.hit for r in res)      # zero acknowledged-write loss
+        assert cache.wb_pending == 0
+        assert cache.fault_stats["wb_replayed"] == 4
+        assert cache.metrics.cat(down[0]).availability > 0.0
+
+    def test_compliance_classification_survives_outage(self):
+        clk = SimClock()
+        inj = FaultInjector(FaultSchedule(shard_outages=[(0.0, 5.0, 0),
+                                                         (0.0, 5.0, 1)]),
+                            clk)
+        cache = _sharded(faults=inj, clock=clk)
+        res = cache.lookup(_bank("d")[0], "d")
+        assert res.reason == "compliance"   # policy-side, needs no index
+        st = cache.metrics.cat("d")
+        assert st.degraded_misses == 0 and st.compliance_rejects == 1
+
+    def test_write_behind_queue_is_bounded(self):
+        clk = SimClock()
+        inj = FaultInjector(FaultSchedule(shard_outages=[(0.0, 5.0, 0),
+                                                         (0.0, 5.0, 1)]),
+                            clk)
+        cache = _sharded(faults=inj, clock=clk, write_behind_capacity=3)
+        bank = _bank("a")
+        slots = cache.insert_batch(bank[:5], ["a"] * 5,
+                                   [f"q{i}" for i in range(5)],
+                                   [f"r{i}" for i in range(5)])
+        assert all(s < 0 for s in slots)
+        assert cache.wb_pending == 3        # overflow dropped, not queued
+        assert cache.fault_stats["wb_dropped"] == 2
+        clk.advance(10.0)
+        res = cache.lookup_batch(bank[:5], ["a"] * 5)
+        # exactly the acknowledged (enqueued) writes survive
+        assert sum(r.hit for r in res) == 3 and cache.wb_pending == 0
+
+    def test_empty_schedule_bit_identical_to_no_injector(self):
+        """The inertness property: wiring an injector with an EMPTY
+        schedule changes nothing observable — trace, counters, clock."""
+        def run(faults):
+            clk = SimClock()
+            cache = _sharded(faults=faults, clock=clk, index_kind="hnsw")
+            bank_a, bank_b = _bank("a"), _bank("b")
+            trace = []
+            for r in range(6):
+                embs = np.concatenate([bank_a[r:r + 3], bank_b[r:r + 3]])
+                cats = ["a"] * 3 + ["b"] * 3
+                res = cache.lookup_batch(embs, cats)
+                trace.append([(x.hit, x.reason, x.response) for x in res])
+                miss = [i for i, x in enumerate(res) if not x.hit]
+                if miss:
+                    cache.insert_batch(embs[miss], [cats[i] for i in miss],
+                                       [f"q{r}.{i}" for i in miss],
+                                       [f"r{r}.{i}" for i in miss])
+                clk.advance(1.0)
+            return trace, cache.metrics.snapshot(), clk.now()
+        base = run(None)
+        wired = run(FaultInjector(FaultSchedule()))
+        assert wired == base
+
+
+# ------------------------------------------------------ crash-safe cutover
+def _seed_category(cache, cat: str, n: int = 12) -> np.ndarray:
+    bank = _bank(cat)[:n]
+    cache.insert_batch(bank, [cat] * n, [f"q{i}" for i in range(n)],
+                       [f"r{i}" for i in range(n)])
+    return bank
+
+
+def _migration_visits(n_shards, index_kind, emb_dtype) -> int:
+    """Dry-run the migration under an armed-but-never-firing injector to
+    measure the enumerable crash-index space."""
+    inj = FaultInjector(FaultSchedule(crash_at={"elsewhere": 0}))
+    cache = _sharded(n_shards=n_shards, faults=inj, index_kind=index_kind,
+                     emb_dtype=emb_dtype)
+    _seed_category(cache, "a", 12)
+    src = cache.shard_of("a")
+    dst = (src + 1) % n_shards
+    mig = cache.migrate_category("a", dst, batch_size=4)
+    assert mig.done and mig.journal[-1] == "unfence"
+    return inj.visits("migration")
+
+
+@pytest.mark.parametrize("index_kind,emb_dtype", [
+    ("flat", "float32"), ("flat", "int8"),
+    ("hnsw", "float32"), ("hnsw", "int8"),
+])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_migration_crash_at_every_step(n_shards, index_kind, emb_dtype):
+    """THE tentpole property: for every enumerable crash index k in the
+    migration protocol, an injected crash at k followed by recovery
+    leaves exactly one authoritative owner holding ALL acknowledged
+    entries — resume lands them on the target, abort (pre-flip only)
+    back on the source, and post-flip recovery always finishes."""
+    if n_shards == 1:
+        # degenerate row of the matrix: there is nowhere to migrate to,
+        # and migrate_category refuses rather than stranding anything
+        cache = _sharded(n_shards=1)
+        _seed_category(cache, "a", 12)
+        assert cache.migrate_category("a", 0) is None
+        assert cache.migrate_category("a", 3) is None
+        assert cache.category_count("a") == 12
+        return
+    n_steps = _migration_visits(n_shards, index_kind, emb_dtype)
+    assert n_steps >= 9     # drain batches + 2 per batch + cutover fences
+    for k in range(n_steps):
+        for mode in ("resume", "abort"):
+            inj = FaultInjector(FaultSchedule(crash_at={"migration": k}))
+            cache = _sharded(n_shards=n_shards, faults=inj,
+                             index_kind=index_kind, emb_dtype=emb_dtype)
+            bank = _seed_category(cache, "a", 12)
+            src = cache.shard_of("a")
+            dst = (src + 1) % n_shards
+            with pytest.raises(InjectedCrash):
+                cache.migrate_category("a", dst, batch_size=4)
+            mig = cache._migrations.get("a")
+            assert mig is not None and not mig.done
+            # authority is already unambiguous BEFORE recovery runs
+            assert cache.shard_of("a") in (src, dst)
+            action = mig.recover(mode)
+            owner = cache.shard_of("a")
+            if action == "aborted":
+                assert owner == src and not mig.flipped
+            else:
+                assert owner == dst
+            # exactly one owner, holding every acknowledged entry
+            counts = [cache.shards[s].category_count("a")
+                      for s in range(n_shards)]
+            assert counts[owner] == 12
+            assert sum(counts) == 12
+            res = cache.lookup_batch(bank, ["a"] * 12)
+            assert all(r.hit for r in res), (k, mode)
+            assert "a" not in cache._migrations
+
+
+def test_fenced_writes_replay_to_recovered_owner():
+    """A write arriving while a crashed cutover holds the fence is
+    acknowledged into the fence queue and must surface on whichever
+    shard recovery makes authoritative — for both recovery modes."""
+    def crash_at(k):
+        inj = FaultInjector(FaultSchedule(crash_at={"migration": k}))
+        cache = _sharded(n_shards=2, faults=inj)
+        bank = _seed_category(cache, "a", 12)
+        src = cache.shard_of("a")
+        with pytest.raises(InjectedCrash):
+            cache.migrate_category("a", 1 - src, batch_size=4)
+        return cache, bank, src, cache._migrations["a"]
+
+    # find a crash index inside the fenced pre-flip window
+    fenced_k = next(k for k in range(_migration_visits(2, "flat", "float32"))
+                    if (lambda m: m.fenced and not m.flipped)(crash_at(k)[3]))
+    for mode, expect_flip in (("resume", True), ("abort", False)):
+        cache, bank, src, mig = crash_at(fenced_k)
+        assert mig.fenced and not mig.flipped
+        late = _bank("a")[20]
+        slot = cache.insert(late, "a", "late-q", "late-r")
+        assert slot < 0 and len(mig.fence_queue) == 1
+        assert cache.fault_stats["fenced_writes"] == 1
+        mig.recover(mode)
+        assert cache.fault_stats["fence_replayed"] == 1
+        res = cache.lookup(late, "a")
+        assert res.hit and res.response == "late-r"
+        assert cache.shard_of("a") == ((1 - src) if expect_flip else src)
+        # the original 12 acknowledged writes also all survived
+        assert all(r.hit for r in cache.lookup_batch(bank, ["a"] * 12))
+
+
+def test_migration_without_faults_unchanged():
+    """No injector → the journaled cutover is pure bookkeeping: same
+    outcome as the pre-crash-safety protocol (moved count, owner flip,
+    admission-state handoff, empty fence)."""
+    cache = _sharded(n_shards=2)
+    bank = _seed_category(cache, "a", 12)
+    src = cache.shard_of("a")
+    mig = cache.migrate_category("a", 1 - src, batch_size=5)
+    assert mig.done and mig.moved == 12
+    assert mig.journal == ["fence", "catchup", "reconcile", "flip",
+                           "purge", "unfence"]
+    assert not mig.fenced and not mig.fence_queue
+    assert cache.shard_of("a") == 1 - src
+    assert all(r.hit for r in cache.lookup_batch(bank, ["a"] * 12))

@@ -60,6 +60,41 @@ def test_engine_compliance_always_model(small_model, rng):
     assert len(cache) == 0
 
 
+def test_engine_watchdog_counts_straggler_steps(small_model, rng):
+    """The StepWatchdog rides every non-empty step(): fast steps build
+    the median history, an artificially slowed step surfaces as
+    ``stats.straggler_steps``."""
+    import time as _time
+    from repro.distributed.fault import StepWatchdog
+
+    cfg, model, params = small_model
+    policies = PolicyEngine(paper_policies())
+    cache = SemanticCache(policies, capacity=128, clock=SimClock(),
+                          index_kind="flat")
+    wd = StepWatchdog(timeout_factor=20.0, min_history=5)
+    eng = ServingEngine(model, params, cache, max_batch=1, prompt_len=16,
+                        max_new_tokens=4, watchdog=wd)
+    assert eng.step() == []                 # empty queue: never timed
+    toks = rng.integers(2, cfg.vocab_size, 16)
+    # one miss compiles + serves, then hits build a stable fast history
+    for i in range(8):
+        eng.submit("what is a closure", "code_generation", toks)
+        eng.step()
+    assert eng.stats.straggler_steps == 0
+    # slow one step far past 20× the (hit-dominated, ~ms) median
+    orig = eng._generate
+
+    def slow_generate(p, t):
+        _time.sleep(0.5)
+        return orig(p, t)
+    eng._generate = slow_generate
+    eng.submit("a brand new uncached question", "code_generation", toks)
+    eng.step()
+    eng._generate = orig
+    assert eng.stats.straggler_steps == 1
+    assert wd.straggler_events == 1
+
+
 def test_training_loss_decreases():
     from repro.launch.train import run_training
     cfg = get_config("llama3_2_3b").reduced(n_layers=2, d_model=128,
