@@ -26,8 +26,24 @@ clock is simulated — no fire-time randomness, no wall time):
                    (timeouts > 0, entry stays resident, accounting
                    still closes).
 
+    replication  — availability-vs-outage-duration curves on the head
+                   category's PRIMARY shard, three mitigation modes per
+                   duration: ``replicated`` (conversational_chat on 2
+                   shards — availability MUST be 1.0 with zero degraded
+                   misses, failover_reads > 0 and replica_divergence
+                   == 0), ``rebalance`` (no replicas, but a sustained
+                   outage past ``rebalance_after_s`` evacuates the
+                   category via the journaled OutageRebalance — its
+                   degraded window must be bounded by the threshold, not
+                   the outage), and ``unmitigated`` (PR-8 behavior: the
+                   degraded window IS the outage window). A no-replica
+                   parity pair (replication=None vs an empty {} map)
+                   must be counter-identical: the replication layer is
+                   provably free when nothing is replicated.
+
 Full mode re-runs the outage scenario on the hnsw index (same gates)
-to cover the delta-synced device path under degradation.
+to cover the delta-synced device path under degradation, and the
+replicated scenario on hnsw as well.
 
 Emits CSV rows and ``results/BENCH_faults.json`` (CI smoke runs
 ``--quick --check``).
@@ -55,17 +71,29 @@ OUTAGES = [(5.0, 20.0, 0), (30.0, 40.0, 1)]
 # ops 10-11 are a short run absorbed by retries=3; ops 40-49 are a long
 # run that exhausts the ladder at least once before healing.
 FLAKY_GETS = (FaultSchedule.op_range(10, 2) | FaultSchedule.op_range(40, 10))
+# Replication scenario family: conversational_chat (the flash_crowd head
+# category) lives on shard 1; outages of swept duration hit that primary
+# so the three mitigation modes separate cleanly. The bounded-window
+# gate allows one op of accrual granularity past the threshold.
+REPLICATION = {"conversational_chat": 2}
+REBALANCE_AFTER_S = 5.0
+OUTAGE_T0 = 5.0
+REPL_DURATIONS = [5.0, 10.0, 20.0]      # full sweep; quick keeps [10.0]
+WINDOW_SLACK_S = 1.5
 
 
 def run_scenario(*, schedule: FaultSchedule | None, n: int,
                  n_shards: int = 2, index_kind: str = "flat",
-                 seed: int = 0) -> dict:
+                 seed: int = 0,
+                 replication: dict | float | None = None,
+                 rebalance_after_s: float | None = None) -> dict:
     """One deterministic simulator run; returns the gate counters."""
     pol = PolicyEngine(paper_policies())
     sim = ServingSimulator(pol, SimConfig(
         architecture="hybrid", cache_capacity=CAPACITY,
         index_kind=index_kind, n_shards=n_shards, seed=seed,
-        fault_schedule=schedule))
+        fault_schedule=schedule, replication=replication,
+        rebalance_after_s=rebalance_after_s))
     res = sim.run(scenario_generator(SCENARIO, seed=seed), n)
     per = res.metrics.per_category
     out = {
@@ -121,6 +149,9 @@ def run(n: int = 5000, seed: int = 0, sweep: bool = True,
                      "empty_schedule_rerun": inert2},
         "shard_outage": outage,
         "store_flaky": flaky,
+        "replication": run_replication(
+            n=n, seed=seed,
+            durations=REPL_DURATIONS if sweep else [10.0]),
     }
     if sweep:
         # Same outage gates on the delta-synced hnsw device path.
@@ -131,8 +162,62 @@ def run(n: int = 5000, seed: int = 0, sweep: bool = True,
         emit("faults.shard_outage.hnsw", 0.0, hit_rate=hnsw["hit_rate"],
              degraded=hnsw["degraded_misses"],
              wb_pending=hnsw["fault"]["wb_pending"])
+        # Replicated failover on the device-synced index too.
+        repl_hnsw = run_scenario(
+            schedule=FaultSchedule(
+                shard_outages=[(OUTAGE_T0, OUTAGE_T0 + 10.0, 1)]),
+            n=n, index_kind="hnsw", seed=seed,
+            replication=dict(REPLICATION))
+        payload["replication"]["hnsw"] = repl_hnsw
+        emit("faults.replication.hnsw", 0.0,
+             chat_availability=repl_hnsw["fault"]["slo"]
+             ["conversational_chat"]["availability"],
+             failover=repl_hnsw["fault"]["front_door"]["failover_reads"],
+             divergence=repl_hnsw["fault"]["front_door"]
+             ["replica_divergence"])
     write_bench_json("faults", payload, out_dir=out_dir)
     return payload
+
+
+def run_replication(*, n: int, seed: int, durations: list) -> dict:
+    """Availability-vs-outage-duration curves, three mitigation modes
+    per duration, plus the no-replica parity pair."""
+    curve = []
+    for d in durations:
+        win = [(OUTAGE_T0, OUTAGE_T0 + d, 1)]
+        repl = run_scenario(
+            schedule=FaultSchedule(shard_outages=list(win)), n=n,
+            seed=seed, replication=dict(REPLICATION))
+        bounded = run_scenario(
+            schedule=FaultSchedule(shard_outages=list(win)), n=n,
+            seed=seed, rebalance_after_s=REBALANCE_AFTER_S)
+        plain = run_scenario(
+            schedule=FaultSchedule(shard_outages=list(win)), n=n,
+            seed=seed)
+        row = {"outage_s": d, "replicated": repl, "rebalance": bounded,
+               "unmitigated": plain}
+        curve.append(row)
+        for mode, r in (("replicated", repl), ("rebalance", bounded),
+                        ("unmitigated", plain)):
+            chat = r["fault"]["slo"]["conversational_chat"]
+            emit(f"faults.replication.{mode}", float(d),
+                 chat_availability=chat["availability"],
+                 chat_degraded_s=chat["degraded_seconds"],
+                 failover=r["fault"]["front_door"]["failover_reads"],
+                 rebalances=r["fault"]["front_door"]["outage_rebalances"])
+    # Parity pair: an empty replication MAP must be counter-identical to
+    # replication=None — the replication layer is free when unused.
+    win = [(OUTAGE_T0, OUTAGE_T0 + durations[0], 1)]
+    parity_none = run_scenario(
+        schedule=FaultSchedule(shard_outages=list(win)), n=n, seed=seed)
+    parity_empty = run_scenario(
+        schedule=FaultSchedule(shard_outages=list(win)), n=n, seed=seed,
+        replication={})
+    return {"rebalance_after_s": REBALANCE_AFTER_S,
+            "replication": dict(REPLICATION),
+            "curve": curve,
+            "no_replica_parity": {"none": parity_none,
+                                  "empty_map": parity_empty}}
 
 
 def _check_accounting(name: str, r: dict) -> None:
@@ -193,6 +278,8 @@ def check(payload: dict) -> None:
                 f"{name}: availability {r['fault']['availability']} "
                 f"not in (0, 1) despite scheduled outage windows")
 
+    check_replication(payload["replication"])
+
     flaky = payload["store_flaky"]
     _check_accounting("store_flaky", flaky)
     st = flaky["fault"]["store"]
@@ -204,12 +291,86 @@ def check(payload: dict) -> None:
         raise SystemExit(
             "store_flaky: bounded retries never fired / no backoff "
             "charged — the short transient run was not absorbed")
+    curve = payload["replication"]["curve"]
     print(f"# check ok: baseline bit-identical, outage degraded "
           f"{payload['shard_outage']['degraded_misses']} lookups at "
           f"availability {payload['shard_outage']['fault']['availability']}"
           f" with full write-behind replay, store path absorbed "
           f"{st['get_retries']} retries and degraded "
-          f"{flaky['store_timeouts']} timeouts")
+          f"{flaky['store_timeouts']} timeouts; replication held "
+          f"availability 1.0 across {len(curve)} outage durations "
+          f"(failover, zero divergence) and self-healing bounded the "
+          f"unreplicated window")
+
+
+def check_replication(rep: dict) -> None:
+    """Deterministic replication / self-healing gates."""
+    for row in rep["curve"]:
+        d = row["outage_s"]
+        runs = [(f"replicated@{d}", row["replicated"]),
+                (f"rebalance@{d}", row["rebalance"]),
+                (f"unmitigated@{d}", row["unmitigated"])]
+        if "hnsw" in rep and d == 10.0:
+            runs.append(("replicated.hnsw", rep["hnsw"]))
+        for name, r in runs:
+            _check_accounting(name, r)
+            if r["fault"]["wb_pending"] != 0:
+                raise SystemExit(f"{name}: write-behind never drained")
+        for name, r in runs:
+            if not name.startswith("replicated"):
+                continue
+            chat = r["fault"]["slo"]["conversational_chat"]
+            fd = r["fault"]["front_door"]
+            if chat["availability"] != 1.0 or chat["degraded_misses"] != 0:
+                raise SystemExit(
+                    f"{name}: replicated category degraded under a "
+                    f"single-shard outage (availability "
+                    f"{chat['availability']}, degraded "
+                    f"{chat['degraded_misses']}) — failover broken")
+            if fd["failover_reads"] <= 0:
+                raise SystemExit(
+                    f"{name}: availability held but failover_reads == 0 "
+                    f"— the outage never exercised the replica path")
+            if fd["replica_divergence"] != 0:
+                raise SystemExit(
+                    f"{name}: replicas diverged "
+                    f"({fd['replica_divergence']} observed drift events)")
+        chat_b = row["rebalance"]["fault"]["slo"]["conversational_chat"]
+        chat_u = row["unmitigated"]["fault"]["slo"]["conversational_chat"]
+        if d > rep["rebalance_after_s"] + WINDOW_SLACK_S:
+            bound = rep["rebalance_after_s"] + WINDOW_SLACK_S
+            if chat_b["degraded_seconds"] > bound:
+                raise SystemExit(
+                    f"rebalance@{d}: degraded window "
+                    f"{chat_b['degraded_seconds']}s exceeds "
+                    f"rebalance_after_s bound {bound}s — self-healing "
+                    f"never cut the outage short")
+            fd_b = row["rebalance"]["fault"]["front_door"]
+            if fd_b["outage_rebalances"] <= 0:
+                raise SystemExit(
+                    f"rebalance@{d}: window bounded but no "
+                    f"OutageRebalance ran — bound is accidental")
+            if fd_b["reabsorbed_categories"] <= 0:
+                raise SystemExit(
+                    f"rebalance@{d}: evacuated categories never "
+                    f"re-absorbed after recovery")
+            if chat_u["degraded_seconds"] <= chat_b["degraded_seconds"]:
+                raise SystemExit(
+                    f"unmitigated@{d}: degraded window "
+                    f"{chat_u['degraded_seconds']}s not longer than the "
+                    f"rebalanced run's {chat_b['degraded_seconds']}s")
+        if chat_u["degraded_misses"] <= 0:
+            raise SystemExit(
+                f"unmitigated@{d}: outage on the head category's "
+                f"primary never degraded a lookup")
+    par = rep["no_replica_parity"]
+    for k in ("lookups", "hits", "misses", "degraded_misses", "hit_rate",
+              "sync", "per_category"):
+        if par["none"][k] != par["empty_map"][k]:
+            raise SystemExit(
+                f"replication layer not free: empty-map {k} "
+                f"{par['empty_map'][k]!r} != replication=None "
+                f"{par['none'][k]!r}")
 
 
 def main() -> None:

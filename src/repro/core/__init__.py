@@ -37,6 +37,7 @@ from repro.core.shard import (  # noqa: F401
     ShardPlanner,
     ShardedSemanticCache,
     CategoryMigration,
+    OutageRebalance,
     crc32_shard,
 )
 from repro.core.economics import (  # noqa: F401

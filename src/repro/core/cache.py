@@ -98,7 +98,8 @@ class SemanticCache:
                  seed: int = 0, emb_dtype: str = "float32",
                  quota_capacity: int | None = None,
                  doc_id_start: int = 0, doc_id_step: int = 1,
-                 eviction: str = "static"):
+                 eviction: str = "static",
+                 durable_embeddings: bool = False):
         self.policies = policies
         self.dim = dim
         self.capacity = capacity
@@ -118,6 +119,14 @@ class SemanticCache:
         self.use_device = use_device
         self.search_ms = search_ms
         self.insert_ms = insert_ms
+        # Persist the fp32 embedding next to EVERY document, not just
+        # under quantized residency: a fault-tolerant tier (sharded cache
+        # with an injector wired) needs the store alone to be sufficient
+        # to rebuild a dead shard's resident set (outage rebalancing),
+        # and the resident index of a down shard is by definition
+        # unreachable. Costs store bytes only — no counter, decision or
+        # clock charge depends on it.
+        self.durable_embeddings = durable_embeddings
         self.metrics = MetricsRegistry()
         # Eviction scorer (core/admission.py): "static" = the §5.4
         # priority × 1/age × hitRate formula (seed behavior, default);
@@ -648,7 +657,8 @@ class SemanticCache:
             # the document (external tier): the re-rank tier's exact
             # copy. The fp32 index already IS exact, so its documents
             # skip the duplicate (~4·dim bytes/doc).
-            emb = (embeddings[p_i].copy() if self.index.quantized
+            emb = (embeddings[p_i].copy()
+                   if self.index.quantized or self.durable_embeddings
                    else None)
             docs.append(Document(doc_id, requests[p_i], responses[p_i],
                                  created_at, categories[p_i],
@@ -737,6 +747,14 @@ class SemanticCache:
         encoding, so callers that branch on doc ids use this instead of
         indexing ``slot_doc`` directly."""
         return int(self.slot_doc[slot]) if slot >= 0 else INVALID
+
+    def replica_doc_ids(self, slot: int) -> list[int]:
+        """All doc ids that can serve the entry behind ``slot`` — just
+        the slot's own doc here; the sharded cache overrides this with
+        the full replica set so callers tracking per-doc ground truth
+        (the simulator) cover hits served from any replica."""
+        d = self.doc_id_of(slot)
+        return [d] if d != INVALID else []
 
     @property
     def sync_stats(self) -> dict:

@@ -22,6 +22,12 @@ class CategoryStats:
                                    # exhausted store retry budget (these DO
                                    # count in misses — the entry stays
                                    # resident, the lookup still missed)
+    degraded_seconds: float = 0.0  # observed wall (sim) time with NO live
+                                   # replica for the category — accrued
+                                   # incrementally by the sharded front door
+                                   # between ops, so availability-vs-outage
+                                   # SLO curves never re-derive window
+                                   # overlap from the fault schedule
     ttl_evictions: int = 0
     quota_evictions: int = 0
     capacity_evictions: int = 0
@@ -69,6 +75,7 @@ class CategoryStats:
             "insert_rejects": self.insert_rejects,
             "admission_skips": self.admission_skips,
             "degraded_misses": self.degraded_misses,
+            "degraded_seconds": round(self.degraded_seconds, 3),
             "store_timeouts": self.store_timeouts,
             "ttl_evictions": self.ttl_evictions,
             "quota_evictions": self.quota_evictions,

@@ -50,12 +50,48 @@ Degraded mode (``core/faults.FaultInjector`` wired via ``faults=``):
 a lookup routed to a shard inside a scheduled outage window resolves as
 a counted ``degraded_miss`` — never an exception, never a hit-rate
 denominator entry — and a write to a down shard lands in a bounded
-per-shard write-behind queue that replays FIFO through the front door
-once the shard recovers. Enqueued writes are ACKNOWLEDGED (the caller
-got a normal INVALID-slot return); the zero-acknowledged-write-loss
-property tests in tests/test_faults.py pin that replay preserves them
-all. An absent/inert injector leaves every hook a no-op, so the
+per-shard write-behind queue that replays item by item through the
+front door once the shard recovers (``crash_point("wb_replay")`` sites
+bracket each item: an acknowledged write is applied exactly once no
+matter where a crash lands — the ``_wb_applied`` id set deduplicates a
+crash between apply and dequeue). Enqueued writes are ACKNOWLEDGED (the
+caller got a normal INVALID-slot return); the zero-acknowledged-write-
+loss property tests in tests/test_faults.py pin that replay preserves
+them all. An absent/inert injector leaves every hook a no-op, so the
 no-fault path is bit-identical to the pre-fault-injection code.
+
+Replication (``replication=`` — an explicit ``{category: k}`` map or a
+quota-mass threshold float: quota ≥ θ ⇒ 2 replicas): head categories
+are resident on a replica SET instead of exactly one shard. The planner
+places the primary by LPT as always, then adds k−1 replicas on the
+lightest shards not already holding the category (replica byte weight
+counts toward the bins, so total placed bytes stay balanced). The front
+door fans every write to all live replicas in the same batched round
+(each replica's dirty-log delta sync stays O(batch)); lookups route
+deterministically round-robin across the replica set, failing over to
+the next live replica inside an outage window (counted
+``failover_reads``) — a down shard with a live replica serves hits, not
+degraded_misses. Replicas answer bit-identically: identical per-
+category insert streams + name-seeded admission give identical entry
+sets, and serving-replica hit counts are echoed to the siblings through
+a doc-correspondence registry so eviction scores stay in step; any
+observed drift (a hit whose sibling copy is gone while the sibling is
+live) increments ``replica_divergence`` and prunes the mapping.
+Replicated categories are pinned — they never migrate; their outage
+story IS the replica set.
+
+Self-healing (``rebalance_after_s=``): an outage that persists past the
+threshold triggers ``OutageRebalance`` for each UNREPLICATED category
+homed on the dead shard — the resident set is rebuilt from the shard's
+(separately durable) document store into a live target, routing flips,
+and the dead shard's write-behind queue drains into the new owner,
+journaled with ``crash_point("outage_rebalance")`` sites between steps
+(rebuild → flip → wb_drain → done; pre-flip crashes leave the dead
+shard nominally authoritative and recovery re-runs or aborts, post-flip
+crashes finish forward with the same exactly-once wb dedup). When the
+original shard recovers, its stale copies are demoted (purged) and the
+category re-absorbs to its planned home through a normal live
+``CategoryMigration``.
 
 Clock semantics: shards are constructed with ``search_ms = insert_ms =
 0`` and the sharded front door advances the SHARED clock exactly once
@@ -70,6 +106,7 @@ from __future__ import annotations
 
 import zlib
 from collections import deque
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
@@ -104,6 +141,11 @@ class CRC32Planner:
         ov = self._overrides.get(category)
         return crc32_shard(category, self.n_shards) if ov is None else ov
 
+    def replica_set(self, category: str) -> list[int]:
+        """Hash placement is single-home: every category has exactly one
+        replica (the planner interface the front door routes by)."""
+        return [self.shard_of(category)]
+
     def assign(self, category: str, shard: int, nbytes: int = 0) -> None:
         self._overrides[category] = int(shard)
 
@@ -121,30 +163,45 @@ class ShardPlanner:
     Categories first seen after planning (``shard_of`` on an unknown
     name) are placed on the lightest shard at their policy's quota
     weight.
+
+    ``replication`` adds a replication pass after primary placement:
+    an explicit ``{category: k}`` map, or a float quota-mass threshold
+    (categories with quota ≥ θ get 2 replicas). Each extra replica goes
+    on the lightest shard not already holding the category and its byte
+    weight counts toward that bin, so LPT keeps balancing TOTAL placed
+    bytes, copies included. ``assignments`` still names the PRIMARY
+    (what ``shard_of`` returns); the full set is ``replica_set``.
     """
 
     def __init__(self, n_shards: int, capacity: int,
                  residency: ResidencyModel | None = None,
-                 policies: PolicyEngine | None = None):
+                 policies: PolicyEngine | None = None,
+                 replication: dict[str, int] | float | None = None):
         self.n_shards = max(1, n_shards)
         self.capacity = capacity
         self.residency = residency or ResidencyModel()
         self.policies = policies
+        self.replication = replication
         self.assignments: dict[str, int] = {}
         self._bytes: dict[str, int] = {}
         self.shard_bytes: list[int] = [0] * self.n_shards
+        # category -> [primary, replica, ...]; only k >= 2 entries live
+        # here — single-home categories resolve through shard_of.
+        self.replica_sets: dict[str, list[int]] = {}
 
     @classmethod
     def from_policies(cls, policies: PolicyEngine, n_shards: int,
                       capacity: int, dim: int = 384,
                       emb_dtype: str = "float32",
-                      graph_degree: int = 32) -> "ShardPlanner":
+                      graph_degree: int = 32,
+                      replication: dict[str, int] | float | None = None,
+                      ) -> "ShardPlanner":
         """Plan every registered category from its policy quota; the
         residency model prices bytes/entry for the resident dtype."""
         planner = cls(n_shards, capacity,
                       residency=ResidencyModel(dim=dim, emb_dtype=emb_dtype,
                                                graph_degree=graph_degree),
-                      policies=policies)
+                      policies=policies, replication=replication)
         cachable = {n: policies.get(n).quota for n in policies.categories()
                     if policies.get(n).allow_caching
                     and policies.get(n).quota > 0}
@@ -160,14 +217,44 @@ class ShardPlanner:
     def quota_bytes(self, quota_fraction: float) -> int:
         return self.residency.quota_bytes(quota_fraction, self.capacity)
 
+    def replica_count(self, name: str, quota: float) -> int:
+        """Replicas the spec asks for, capped at the shard count."""
+        spec = self.replication
+        if spec is None:
+            return 1
+        if isinstance(spec, dict):
+            k = int(spec.get(name, 1))
+        else:
+            k = 2 if quota >= float(spec) else 1
+        return max(1, min(k, self.n_shards))
+
     def plan(self, quotas: dict[str, float]) -> dict[str, int]:
         """(Re)pack ``quotas`` from scratch; returns the assignment."""
         self.assignments.clear()
         self._bytes.clear()
         self.shard_bytes = [0] * self.n_shards
+        self.replica_sets.clear()
         order = sorted(quotas, key=lambda c: (-self.quota_bytes(quotas[c]), c))
         for name in order:
             self._place(name, self.quota_bytes(quotas[name]))
+        # Replication pass: heaviest categories first (same order), each
+        # extra copy on the lightest shard that doesn't hold the
+        # category yet — copies add real byte weight to the bins.
+        for name in order:
+            k = self.replica_count(name, quotas[name])
+            if k <= 1:
+                continue
+            reps = [self.assignments[name]]
+            w = self.quota_bytes(quotas[name])
+            while len(reps) < k:
+                cands = [i for i in range(self.n_shards) if i not in reps]
+                if not cands:
+                    break
+                s = min(cands, key=lambda i: (self.shard_bytes[i], i))
+                reps.append(s)
+                self.shard_bytes[s] += w
+            if len(reps) > 1:
+                self.replica_sets[name] = reps
         return dict(self.assignments)
 
     def _place(self, category: str, nbytes: int) -> int:
@@ -184,6 +271,12 @@ class ShardPlanner:
                      if self.policies is not None else 0.0)
             return self._place(category, self.quota_bytes(quota))
         return self.assignments[category]
+
+    def replica_set(self, category: str) -> list[int]:
+        """Every shard holding the category, primary first. Single-home
+        categories (the common case) are just ``[shard_of]``."""
+        reps = self.replica_sets.get(category)
+        return list(reps) if reps else [self.shard_of(category)]
 
     def assign(self, category: str, shard: int,
                nbytes: int | None = None) -> None:
@@ -209,7 +302,9 @@ class ShardPlanner:
                 "emb_dtype": self.residency.emb_dtype,
                 "shard_bytes": list(self.shard_bytes),
                 "imbalance": round(self.imbalance(), 4),
-                "assignments": dict(self.assignments)}
+                "assignments": dict(self.assignments),
+                "replica_sets": {c: list(r)
+                                 for c, r in sorted(self.replica_sets.items())}}
 
 
 class ShardedMetrics:
@@ -245,6 +340,50 @@ class ShardedMetrics:
     def snapshot(self) -> dict:
         return {k: v.to_dict()
                 for k, v in sorted(self.per_category.items())}
+
+    def slo_report(self) -> dict:
+        """Per-category availability SLO view: the degraded fraction of
+        lookups plus the OBSERVED degraded window (``degraded_seconds``
+        accrued by the front door between ops — no re-deriving overlap
+        from the fault schedule) and the replica count that bounds it."""
+        out = {}
+        for name, st in sorted(self.per_category.items()):
+            out[name] = {
+                "availability": round(st.availability, 4),
+                "lookups": st.lookups,
+                "degraded_misses": st.degraded_misses,
+                "degraded_seconds": round(st.degraded_seconds, 3),
+                "replicas": len(self._parent.replica_set(name)),
+            }
+        return out
+
+
+@dataclass
+class _WbItem:
+    """One acknowledged write parked in a shard's write-behind queue.
+
+    ``wb_id`` is the exactly-once replay token: replay applies an item,
+    records the id in the front door's ``_wb_applied`` set, THEN
+    dequeues — a crash between apply and dequeue leaves the item queued
+    but marked, so the retry skips the apply and never double-inserts.
+    ``mode`` routes the replay: "front" re-enters through the front door
+    (the category may have migrated while queued), "replica" catches a
+    recovered replica up DIRECTLY (its live siblings already applied the
+    write during the outage — fanning it out again would double-apply),
+    back-dating ``slot_inserted`` to the acknowledgment time ``t_enq``
+    so ages — and therefore TTL expiry and eviction scores — converge
+    bit-identically with the siblings'.
+    """
+
+    wb_id: int
+    mode: str                   # "front" | "replica"
+    uid: int                    # replica-registry uid ("replica" mode)
+    emb: np.ndarray
+    category: str
+    request: str
+    response: str
+    meta: dict | None
+    t_enq: float                # absolute clock time at acknowledgment
 
 
 class CategoryMigration:
@@ -541,6 +680,186 @@ class CategoryMigration:
         return self.moved
 
 
+class OutageRebalance:
+    """Evacuate an UNREPLICATED category off a DEAD shard.
+
+    ``CategoryMigration`` cannot run here: its drain reads the source's
+    index, and the source is unreachable. Instead the resident set is
+    REBUILT on the target from the two places the data still exists —
+    the source shard's document store (separately durable; shards
+    persist fp32 embeddings per doc whenever a fault stack is wired) and
+    the dead shard's write-behind queue (acknowledged writes the store
+    never saw). Protocol, journaled with
+    ``faults.crash_point("outage_rebalance")`` between steps:
+
+    1. **rebuild** — sweep any partial target copies from a prior
+       crashed attempt, then ``store.scan(category)`` → ``adopt_entries``
+       in batches: original ``inserted`` timestamps reconstructed from
+       each doc's absolute ``created_at``, hit counts start at zero (the
+       source's in-memory hit counters died with it — an explicit,
+       deterministic choice).
+    2. **flip** — routing pivots to the target (point of no return).
+    3. **wb_drain** — the dead shard's queued writes for the category
+       replay into the NEW owner through the front door, with the same
+       ``_wb_applied`` exactly-once dedup as normal wb replay. Draining
+       strictly AFTER the journaled flip is what makes a crash safe: a
+       pre-flip crash leaves every acknowledged write either in the
+       still-intact queue or in the store, and recovery's rebuild sweep
+       never touches the queue.
+    4. **done** — unregister; the moved category is recorded in the
+       parent's ``_moved_by_outage`` ledger so the source's eventual
+       recovery can demote its stale copies and re-absorb the category.
+
+    ``recover()``: post-flip crashes finish forward (idempotent drain +
+    done); pre-flip crashes either re-run (``resume`` — the rebuild
+    sweep makes step 1 idempotent) or abort back to the dead shard
+    (``abort``: nothing was authoritative on the target yet).
+    Duck-types the ``CategoryMigration`` surface the front door routes
+    by (``owner_id``/``flipped``/``done``/``fenced``/``fence_queue``),
+    so routing through ``_migrations`` works unchanged mid-protocol.
+    """
+
+    def __init__(self, parent: "ShardedSemanticCache", category: str,
+                 src_id: int, dst_id: int, batch_size: int = 64):
+        self.parent = parent
+        self.category = category
+        self.src_id = src_id
+        self.dst_id = dst_id
+        self.batch_size = batch_size
+        self.moved = 0
+        self.done = False
+        self.journal: list[str] = []
+        # Never fences: the source is down, so front-door writes already
+        # divert to the write-behind queue; post-flip they route to the
+        # target directly. Present for _migrations duck-typing only.
+        self.fenced = False
+        self.fence_queue: deque = deque()
+
+    def _journal(self, entry: str) -> None:
+        if entry not in self.journal:
+            self.journal.append(entry)
+
+    def _cp(self) -> None:
+        faults = getattr(self.parent, "faults", None)
+        if faults is not None:
+            faults.crash_point("outage_rebalance")
+
+    @property
+    def flipped(self) -> bool:
+        return "flip" in self.journal
+
+    @property
+    def owner_id(self) -> int:
+        return self.dst_id if self.flipped else self.src_id
+
+    # -- protocol --------------------------------------------------------------
+    def _rebuild(self) -> None:
+        """Sweep partial copies from a crashed prior attempt, then adopt
+        the category's store-resident docs onto the target in batches.
+        Docs without a persisted embedding cannot be rebuilt (fp32 runs
+        before the fault stack wires ``durable_embeddings``) and are
+        skipped — the entry is lost to the outage, not corrupted."""
+        src, dst = (self.parent.shards[self.src_id],
+                    self.parent.shards[self.dst_id])
+        for s in dst.category_slots(self.category):
+            dst._evict_slot(int(s), reason="outage_rebuild_sweep")
+        self._cp()
+        docs = [d for d in src.store.scan(self.category)
+                if d.embedding is not None]
+        t0 = self.parent._t0
+        for lo in range(0, len(docs), self.batch_size):
+            chunk = docs[lo:lo + self.batch_size]
+            embs = np.stack([d.embedding_array() for d in chunk])
+            inserted = np.asarray([d.created_at - t0 for d in chunk],
+                                  np.float64)
+            hits = np.zeros(len(chunk), np.int64)
+            dst.adopt_entries(embs, [self.category] * len(chunk),
+                              inserted, hits, chunk)
+            self.moved += len(chunk)
+            self._cp()
+        self._journal("rebuild")
+
+    def _wb_drain(self) -> None:
+        """Replay the dead shard's queued writes for this category into
+        the new owner, exactly-once (``_wb_applied``), with a crash
+        point bracketing each item like normal wb replay."""
+        p = self.parent
+        q = p._write_behind[self.src_id]
+        mine = [it for it in q if it.category == self.category]
+        for it in mine:
+            self._cp()
+            if it.wb_id not in p._wb_applied:
+                p._wb_applied.add(it.wb_id)
+                p._wb_apply(it)
+            self._cp()
+            q.remove(it)
+            p.fault_stats["wb_replayed"] += 1
+        self._journal("wb_drain")
+
+    def _finish(self) -> None:
+        self.parent._migrations.pop(self.category, None)
+        self.done = True
+        self._journal("done")
+        self.parent.fault_stats["outage_rebalances"] += 1
+
+    def run(self) -> int:
+        if self.done:
+            return 0
+        self._cp()
+        self._rebuild()
+        self._cp()
+        # Flip routing to the rebuilt copy — point of no return. The
+        # admission sketch needs no transfer: trackers are seeded from
+        # the category NAME, so the target derives identical state.
+        self.parent.planner.assign(self.category, self.dst_id)
+        self._journal("flip")
+        self._cp()
+        self._wb_drain()
+        self._cp()
+        self._finish()
+        # The ledger entry lets the source's recovery demote its stale
+        # copies and re-absorb the category to its planned home.
+        self.parent._moved_by_outage[self.category] = (self.src_id,
+                                                       self.dst_id)
+        return self.moved
+
+    def abort(self) -> None:
+        """Pre-flip cancel: drop the partial target copies; the (dead)
+        source keeps nominal authority and its store keeps the data."""
+        if self.done:
+            return
+        if self.flipped:
+            raise RuntimeError(
+                "cannot abort after the routing flip — the target owns "
+                f"{self.category!r}; recover()/resume instead")
+        dst = self.parent.shards[self.dst_id]
+        for s in dst.category_slots(self.category):
+            dst._evict_slot(int(s), reason="outage_rebalance_abort")
+        self.parent._migrations.pop(self.category, None)
+        self.done = True
+        self._journal("abort")
+
+    def recover(self, mode: str = "auto") -> str:
+        """Post-flip: finish forward (idempotent wb drain + done).
+        Pre-flip: ``"resume"`` (the ``"auto"`` default — the store still
+        holds the data and the rebuild sweep is idempotent, so finishing
+        is both safe and cheap) re-runs; ``"abort"`` rolls back to the
+        dead shard."""
+        if self.done:
+            return "noop"
+        if self.flipped:
+            self._wb_drain()
+            self._finish()
+            self.parent._moved_by_outage[self.category] = (self.src_id,
+                                                           self.dst_id)
+            return "resumed"
+        if mode == "abort":
+            self.abort()
+            return "aborted"
+        self.run()
+        return "resumed"
+
+
 class ShardedSemanticCache:
     """N category-sharded ``SemanticCache``s behind the single-cache API.
 
@@ -565,13 +884,17 @@ class ShardedSemanticCache:
                  planner=None, shard_capacity: int | None = None,
                  store_factory=None, eviction: str = "static",
                  faults: FaultInjector | None = None,
-                 write_behind_capacity: int = 1024):
+                 write_behind_capacity: int = 1024,
+                 replication: dict[str, int] | float | None = None,
+                 rebalance_after_s: float | None = None):
         self.policies = policies
         # Fault wiring: an absent (or inert — empty schedule) injector
         # makes every degraded-mode hook a no-op, keeping this cache
         # bit-identical to the pre-fault-injection behavior.
         self.faults = faults
         self.write_behind_capacity = write_behind_capacity
+        self.replication = replication
+        self.rebalance_after_s = rebalance_after_s
         self.dim = dim
         self.capacity = capacity
         self.n_shards = max(1, n_shards)
@@ -584,7 +907,8 @@ class ShardedSemanticCache:
         self.eviction = eviction
         self.planner = planner if planner is not None else \
             ShardPlanner.from_policies(policies, self.n_shards, capacity,
-                                       dim=dim, emb_dtype=emb_dtype)
+                                       dim=dim, emb_dtype=emb_dtype,
+                                       replication=replication)
         self.shard_capacity = shard_capacity or capacity
         self.shards = [
             SemanticCache(policies, dim=dim, capacity=self.shard_capacity,
@@ -600,7 +924,12 @@ class ShardedSemanticCache:
                           # Admission state is seeded per category NAME
                           # (not this seed+i), so every shard reaches the
                           # single cache's admission decisions.
-                          eviction=eviction)
+                          eviction=eviction,
+                          # With a fault stack wired, persist fp32
+                          # embeddings per doc so OutageRebalance can
+                          # rebuild a dead shard's resident set from the
+                          # store alone.
+                          durable_embeddings=(faults is not None))
             for i in range(self.n_shards)]
         # One shared cache-relative time origin: inserted timestamps are
         # directly transferable between shards (migration preserves them).
@@ -620,7 +949,38 @@ class ShardedSemanticCache:
         self.fault_stats = {"degraded_misses": 0, "wb_enqueued": 0,
                             "wb_replayed": 0, "wb_dropped": 0,
                             "fenced_writes": 0, "fence_replayed": 0,
-                            "fence_dropped": 0}
+                            "fence_dropped": 0, "failover_reads": 0,
+                            "replica_divergence": 0, "outage_rebalances": 0,
+                            "reabsorbed_categories": 0}
+        # -- replication state ------------------------------------------
+        # Deterministic round-robin read cursor per replicated category.
+        self._rr: dict[str, int] = {}
+        # Doc-correspondence registry: uid -> {shard: (local_slot,
+        # doc_id)} plus the back-map (shard, doc_id) -> uid. Hit echo
+        # walks it to mirror slot_hits onto live siblings (keeping
+        # eviction scores in step); a hit whose sibling copy vanished
+        # while the sibling is LIVE is counted replica_divergence.
+        self._rep_registry: dict[int, dict[int, tuple[int, int]]] = {}
+        self._rep_uid_of: dict[tuple[int, int], int] = {}
+        self._next_uid = 0
+        # Exactly-once wb replay: ids already applied (survives a crash
+        # between apply and dequeue — in-process state is NOT rolled
+        # back on an injected crash, mirroring a durable applied-log).
+        self._wb_applied: set[int] = set()
+        self._next_wb_id = 0
+        # Degraded-window accrual (_degraded_since: category -> clock
+        # time its last live replica went dark) and outage bookkeeping
+        # (_down_since: shard -> clock time first observed down;
+        # _moved_by_outage: category -> (src, dst) moved off a dead
+        # shard, pending demote + re-absorb on its recovery).
+        self._degraded_since: dict[str, float] = {}
+        self._down_since: dict[int, float] = {}
+        self._moved_by_outage: dict[str, tuple[int, int]] = {}
+        self._in_fault_hooks = False
+        # Last lookup's read routing: request index -> serving shard
+        # (INVALID when degraded) — the determinism property tests
+        # compare this byte-for-byte across runs.
+        self.last_read_shards: list[int] = []
 
     # ------------------------------------------------------------------ routing
     def shard_of(self, category: str) -> int:
@@ -632,6 +992,17 @@ class ShardedSemanticCache:
         return mig.owner_id if mig is not None else \
             self.planner.shard_of(category)
 
+    def replica_set(self, category: str) -> list[int]:
+        """Every shard serving the category, primary first. A mid-flight
+        migration pins the set to the single authoritative end (moving
+        categories are never replicated — replicated ones are pinned)."""
+        mig = self._migrations.get(category)
+        if mig is not None:
+            return [mig.owner_id]
+        rs = getattr(self.planner, "replica_set", None)
+        return rs(category) if rs is not None else \
+            [self.planner.shard_of(category)]
+
     # -------------------------------------------------------------- degradation
     def _shard_down(self, shard: int) -> bool:
         return self.faults is not None and self.faults.shard_down(shard)
@@ -641,12 +1012,112 @@ class ShardedSemanticCache:
         """Writes acknowledged during outages, not yet replayed."""
         return sum(len(q) for q in self._write_behind)
 
+    def _fault_hooks(self) -> None:
+        """Fault-layer bookkeeping at the top of every public lookup /
+        insert: accrue per-category degraded_seconds, run outage
+        detection (rebalance triggers + demote/re-absorb on recovery),
+        then drain recovered write-behind queues. Everything is a no-op
+        without an ACTIVE injector, keeping the no-fault path
+        bit-identical to the pre-fault-injection code."""
+        if self.faults is not None and self.faults.active \
+                and not self._in_fault_hooks:
+            self._in_fault_hooks = True
+            try:
+                self._accrue_degraded()
+                self._check_outages()
+            finally:
+                self._in_fault_hooks = False
+        self._maybe_replay()
+
+    def _accrue_degraded(self) -> None:
+        """Incrementally charge degraded wall-time to every category
+        with NO live replica — the observed window ``slo_report`` and
+        the availability curves read, accrued between ops so nothing
+        downstream re-derives schedule overlap."""
+        now = self.clock.now()
+        for name in self.policies.categories():
+            down = all(self._shard_down(s) for s in self.replica_set(name))
+            since = self._degraded_since.get(name)
+            if down:
+                if since is None:
+                    self._degraded_since[name] = now
+                elif now > since:
+                    self.metrics.cat(name).degraded_seconds += now - since
+                    self._degraded_since[name] = now
+            elif since is not None:
+                del self._degraded_since[name]
+                if now > since:
+                    self.metrics.cat(name).degraded_seconds += now - since
+
+    def _check_outages(self) -> None:
+        """Outage lifecycle: track when each shard was first observed
+        down; once an outage persists past ``rebalance_after_s``,
+        evacuate its unreplicated categories (``OutageRebalance``); once
+        a previously-evacuated shard recovers, demote its stale copies
+        and re-absorb each moved category to its original home through a
+        normal live migration."""
+        now = self.clock.now()
+        for si in range(self.n_shards):
+            if self._shard_down(si):
+                self._down_since.setdefault(si, now)
+            else:
+                self._down_since.pop(si, None)
+        if self.rebalance_after_s is not None:
+            for si, since in sorted(self._down_since.items()):
+                if now - since >= self.rebalance_after_s:
+                    self._outage_rebalance(si)
+        # Demote + re-absorb: scanned on EVERY call (not just the
+        # down→up transition op) so a crash recovered out-of-band still
+        # converges the next time any traffic arrives.
+        for cat in sorted(self._moved_by_outage):
+            src, dst = self._moved_by_outage[cat]
+            if cat in self._migrations or self._shard_down(src):
+                continue
+            stale = self.shards[src]
+            for s in stale.category_slots(cat):
+                # Demote: the recovered shard's copies predate the
+                # outage moves — the evacuated owner is authoritative.
+                stale._evict_slot(int(s), reason="outage_stale")
+            del self._moved_by_outage[cat]
+            if self.shard_of(cat) != src:
+                self.migrate_category(cat, src)
+            self.fault_stats["reabsorbed_categories"] += 1
+
+    def _outage_rebalance(self, si: int) -> None:
+        """Evacuate every unreplicated cacheable category homed on the
+        (dead) shard ``si`` to the lightest live shard. Runs to
+        completion per category; an injected crash mid-protocol parks
+        the ``OutageRebalance`` in ``_migrations`` for ``recover``."""
+        stranded = sorted(
+            c for c in self.policies.categories()
+            if self.policies.get(c).allow_caching
+            and self.policies.get(c).quota > 0
+            and c not in self._migrations
+            and self.replica_set(c) == [si])
+        if not stranded:
+            return
+        live = [s for s in range(self.n_shards) if not self._shard_down(s)]
+        if not live:
+            return
+        weights = getattr(self.planner, "shard_bytes", None)
+        for cat in stranded:
+            dst = min(live, key=(lambda s: (weights[s], s)) if weights
+                      else (lambda s: s))
+            reb = OutageRebalance(self, cat, si, dst)
+            self._migrations[cat] = reb
+            reb.run()
+
     def _maybe_replay(self) -> None:
-        """FIFO-replay each recovered shard's write-behind queue through
-        the normal front-door write path (categories may have migrated
-        while queued; a still-down target just re-enqueues). Runs at the
-        top of every public lookup/insert, so recovery drains on the
-        first post-outage operation — no background thread."""
+        """FIFO-replay each recovered shard's write-behind queue, item
+        by item, through the write path (front-door for single-home
+        items — categories may have migrated while queued, and a
+        still-down target just re-enqueues; direct catch-up for
+        replica-mode items whose siblings already applied the write).
+        ``crash_point("wb_replay")`` brackets every item and the
+        ``_wb_applied`` id set deduplicates a crash between apply and
+        dequeue: each acknowledged write is applied exactly once. Runs
+        at the top of every public lookup/insert, so recovery drains on
+        the first post-outage operation — no background thread."""
         if self.faults is None or self._replaying:
             return
         todo = [si for si in range(self.n_shards)
@@ -656,16 +1127,159 @@ class ShardedSemanticCache:
         self._replaying = True
         try:
             for si in todo:
-                items = list(self._write_behind[si])
-                self._write_behind[si].clear()
-                embs = np.stack([it[0] for it in items])
-                self.insert_batch(embs, [it[1] for it in items],
-                                  [it[2] for it in items],
-                                  [it[3] for it in items],
-                                  [it[4] for it in items])
-                self.fault_stats["wb_replayed"] += len(items)
+                q = self._write_behind[si]
+                while q:
+                    it = q[0]
+                    self.faults.crash_point("wb_replay")
+                    if it.wb_id not in self._wb_applied:
+                        self._wb_applied.add(it.wb_id)
+                        self._wb_apply(it, shard=si)
+                    self.faults.crash_point("wb_replay")
+                    q.popleft()
+                    self.fault_stats["wb_replayed"] += 1
         finally:
             self._replaying = False
+
+    def _wb_apply(self, item: _WbItem, shard: int | None = None) -> None:
+        """Apply one write-behind item. Front-mode re-enters the front
+        door (normal routing / admission / fences; a still-down owner
+        re-enqueues under a fresh id, which carries the acknowledgment
+        forward). Replica-mode catches the recovered replica up
+        DIRECTLY: its live siblings applied the write during the outage,
+        so fanning out again would double-apply — and the fresh copy is
+        back-dated to the acknowledgment instant and synced to a live
+        sibling's hit count so TTL ages and eviction scores converge
+        bit-identically across the replica set."""
+        if item.mode == "replica" and shard is not None:
+            sh = self.shards[shard]
+            local = int(sh.insert_batch(
+                item.emb[None, :], [item.category], [item.request],
+                [item.response], [item.meta])[0])
+            if local == INVALID:
+                # Name-seeded admission replays the identical decision
+                # stream, so a skip here matches the siblings' skip.
+                return
+            # The row is already dirty from the insert's add_batch, so
+            # the back-dated timestamp rides the same delta flush.
+            sh.slot_inserted[local] = np.float32(item.t_enq - self._t0)  # mirror-ok
+            for sj, (oslot, odoc) in sorted(
+                    self._rep_registry.get(item.uid, {}).items()):
+                if sj == shard or self._shard_down(sj):
+                    continue
+                osh = self.shards[sj]
+                if osh.slot_valid[oslot] and int(osh.slot_doc[oslot]) == odoc:
+                    sh.slot_hits[local] = int(osh.slot_hits[oslot])
+                    break
+            self._rep_register(item.uid, shard, local, sh.doc_id_of(local))
+            return
+        self.insert_batch(item.emb[None, :], [item.category],
+                          [item.request], [item.response], [item.meta])
+
+    def _wb_enqueue(self, si: int, emb: np.ndarray, category: str,
+                    request: str, response: str, meta: dict | None,
+                    mode: str = "front", uid: int = -1) -> bool:
+        """Acknowledge a write into shard ``si``'s bounded write-behind
+        queue; a full queue DROPS (counted, unacknowledged-by-
+        construction — only enqueued writes carry the zero-loss replay
+        guarantee)."""
+        q = self._write_behind[si]
+        if len(q) >= self.write_behind_capacity:
+            self.fault_stats["wb_dropped"] += 1
+            return False
+        self._next_wb_id += 1
+        q.append(_WbItem(self._next_wb_id, mode, uid, emb.copy(), category,
+                         request, response, meta, self.clock.now()))
+        self.fault_stats["wb_enqueued"] += 1
+        return True
+
+    # ------------------------------------------------------------- replication
+    def _mint_uid(self) -> int:
+        """Fresh doc-correspondence uid; piggybacks a periodic registry
+        prune so the maps stay bounded by the LIVE replicated set."""
+        uid = self._next_uid
+        self._next_uid += 1
+        if uid and uid % 4096 == 0:
+            self._prune_registry()
+        return uid
+
+    def _rep_register(self, uid: int, shard: int, local: int,
+                      doc_id: int) -> None:
+        if uid < 0 or local == INVALID or doc_id == INVALID:
+            return
+        self._rep_registry.setdefault(uid, {})[shard] = (int(local),
+                                                         int(doc_id))
+        self._rep_uid_of[(shard, int(doc_id))] = uid
+
+    def _prune_registry(self) -> None:
+        """Drop uids with no surviving copy (evicted/expired everywhere)
+        plus their back-map keys."""
+        dead = []
+        for uid, ent in self._rep_registry.items():
+            for sj, (oslot, odoc) in ent.items():
+                osh = self.shards[sj]
+                if osh.slot_valid[oslot] and int(osh.slot_doc[oslot]) == odoc:
+                    break
+            else:
+                dead.append(uid)
+        for uid in dead:
+            for sj, (_, odoc) in self._rep_registry.pop(uid).items():
+                self._rep_uid_of.pop((sj, odoc), None)
+
+    def _echo_hit(self, si: int, local_slot: int) -> None:
+        """Mirror the serving replica's hit count onto live siblings so
+        eviction scores stay in lockstep across the replica set. A live
+        sibling whose copy is GONE while the serving copy took a hit is
+        observed drift: counted ``replica_divergence`` and pruned."""
+        sh = self.shards[si]
+        doc_id = int(sh.slot_doc[local_slot])
+        uid = self._rep_uid_of.get((si, doc_id))
+        if uid is None:
+            return
+        ent = self._rep_registry.get(uid, {})
+        h = int(sh.slot_hits[local_slot])
+        for sj in sorted(ent):
+            if sj == si:
+                continue
+            oslot, odoc = ent[sj]
+            osh = self.shards[sj]
+            if osh.slot_valid[oslot] and int(osh.slot_doc[oslot]) == odoc:
+                osh.slot_hits[oslot] = h
+            elif not self._shard_down(sj):
+                self.fault_stats["replica_divergence"] += 1
+                del ent[sj]
+                self._rep_uid_of.pop((sj, odoc), None)
+
+    def replica_doc_ids(self, slot: int) -> list[int]:
+        """Every replica's doc id behind a (global) slot, serving copy
+        first — the simulator records ground truth under ALL of them so
+        a failover read is judged against the same truth as a primary
+        read."""
+        shard, local = self.shard_of_slot(slot)
+        if shard == INVALID:
+            return []
+        d = self.shards[shard].doc_id_of(local)
+        if d == INVALID:
+            return []
+        out = [d]
+        uid = self._rep_uid_of.get((shard, d))
+        if uid is not None:
+            for sj in sorted(self._rep_registry.get(uid, {})):
+                if sj == shard:
+                    continue
+                odoc = self._rep_registry[uid][sj][1]
+                if odoc not in out:
+                    out.append(odoc)
+        return out
+
+    def recover_migrations(self, mode: str = "auto") -> dict[str, str]:
+        """Run ``recover`` on every in-flight (crashed) migration or
+        outage rebalance; returns {category: action taken}."""
+        out = {}
+        for cat in sorted(self._migrations):
+            mig = self._migrations.get(cat)
+            if mig is not None:
+                out[cat] = mig.recover(mode)
+        return out
 
     def shard_of_slot(self, slot: int) -> tuple[int, int]:
         """Decode a globally-encoded slot id to (shard, local slot);
@@ -694,46 +1308,79 @@ class ShardedSemanticCache:
         request order. One ``search_ms`` clock charge for the whole
         round — the shards search in parallel on real hardware — and the
         TTL ``now`` every shard classifies against is the same instant a
-        single cache would use."""
+        single cache would use. Replicated categories route
+        deterministically round-robin across the replica set, failing
+        over to the next live replica inside an outage window (counted
+        ``failover_reads``); a lookup is degraded only when NO replica
+        is live."""
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
         B = embeddings.shape[0]
         assert len(categories) == B
-        self._maybe_replay()
+        self._fault_hooks()
         results: list[CacheResult] = [None] * B  # type: ignore[list-item]
+        read_shards = [INVALID] * B
         per_shard: dict[int, list[int]] = {}
+        degraded: dict[int, list[int]] = {}
+        replicated: set[int] = set()
         for i, c in enumerate(categories):
-            per_shard.setdefault(self.shard_of(c), []).append(i)
+            reps = self.replica_set(c)
+            if len(reps) == 1:
+                s0 = reps[0]
+                if self._shard_down(s0):
+                    degraded.setdefault(s0, []).append(i)
+                else:
+                    per_shard.setdefault(s0, []).append(i)
+                    read_shards[i] = s0
+                continue
+            # Deterministic round-robin read routing: the per-category
+            # cursor advances on EVERY lookup (served or not), so the
+            # assignment stream is a pure function of the request
+            # stream + schedule — the determinism property tests
+            # compare it byte-for-byte across runs.
+            rr = self._rr.get(c, 0)
+            self._rr[c] = rr + 1
+            k = rr % len(reps)
+            order = reps[k:] + reps[:k]
+            si = next((s for s in order if not self._shard_down(s)), None)
+            if si is None:
+                degraded.setdefault(reps[0], []).append(i)
+                continue
+            if si != order[0]:
+                self.fault_stats["failover_reads"] += 1
+            replicated.add(i)
+            read_shards[i] = si
+            per_shard.setdefault(si, []).append(i)
         agg = {"batch": 0, "hops": 0, "rows_gathered": 0,
                "gathered_bytes": 0, "reranks": 0, "degraded": 0,
                "per_shard": {}}
         any_active = False
-        for si in sorted(per_shard):
-            idxs = per_shard[si]
-            if self._shard_down(si):
-                # Degraded mode: the shard's index is unreachable, so
-                # every cacheable lookup routed here resolves as a
-                # counted degraded_miss — the caller serves from the
-                # model, exactly like a miss, and the hit-rate
-                # denominator never sees it (metrics.CategoryStats).
-                # Compliance-blocked traffic classifies as usual: that
-                # decision is policy-side and needs no index.
-                for i in idxs:
-                    c = categories[i]
-                    st = self.metrics.cat(c)
-                    st.lookups += 1
-                    if not self.policies.effective(c).allow_caching:
-                        st.compliance_rejects += 1
-                        st.misses += 1
-                        results[i] = CacheResult(False, category=c,
-                                                 reason="compliance")
-                        continue
-                    st.degraded_misses += 1
-                    self.fault_stats["degraded_misses"] += 1
-                    agg["degraded"] += 1
-                    any_active = True
+        for si in sorted(set(per_shard) | set(degraded)):
+            # Degraded mode: no live replica holds the category, so
+            # every cacheable lookup routed here resolves as a counted
+            # degraded_miss — the caller serves from the model, exactly
+            # like a miss, and the hit-rate denominator never sees it
+            # (metrics.CategoryStats). Compliance-blocked traffic
+            # classifies as usual: that decision is policy-side and
+            # needs no index.
+            for i in degraded.get(si, []):
+                c = categories[i]
+                st = self.metrics.cat(c)
+                st.lookups += 1
+                if not self.policies.effective(c).allow_caching:
+                    st.compliance_rejects += 1
+                    st.misses += 1
                     results[i] = CacheResult(False, category=c,
-                                             reason="degraded",
-                                             latency_ms=self.search_ms)
+                                             reason="compliance")
+                    continue
+                st.degraded_misses += 1
+                self.fault_stats["degraded_misses"] += 1
+                agg["degraded"] += 1
+                any_active = True
+                results[i] = CacheResult(False, category=c,
+                                         reason="degraded",
+                                         latency_ms=self.search_ms)
+            idxs = per_shard.get(si)
+            if not idxs:
                 continue
             sub = self.shards[si].lookup_batch(
                 embeddings[idxs], [categories[i] for i in idxs])
@@ -748,8 +1395,13 @@ class ShardedSemanticCache:
                     any_active = True
                     r.latency_ms = self.search_ms
                 if r.slot != INVALID:
+                    if r.hit and i in replicated:
+                        # Echo the serving replica's hit count to live
+                        # siblings BEFORE globalizing the slot id.
+                        self._echo_hit(si, r.slot)
                     r.slot = self._global_slot(si, r.slot)
                 results[i] = r
+        self.last_read_shards = read_shards
         # Mirrors the single cache: a batch that is 100 % compliance-
         # rejected never reaches the index and costs no search time.
         if any_active:
@@ -778,7 +1430,7 @@ class ShardedSemanticCache:
         if not (len(categories) == len(requests) == len(responses)
                 == len(metas) == B):
             raise ValueError("insert_batch: ragged batch")
-        self._maybe_replay()
+        self._fault_hooks()
         # One write-round clock charge iff anything is admissible —
         # matching the single cache, whose advance sits behind the
         # compliance gate.
@@ -791,6 +1443,8 @@ class ShardedSemanticCache:
         agg = {"batch": B, "admitted": 0, "admission_skips": 0,
                "insert_rejects": 0, "per_shard": {}}
         per_shard: dict[int, list[int]] = {}
+        rep_batches: dict[int, list[tuple[int, int]]] = {}  # si -> [(i, uid)]
+        rep_primary: dict[int, int] = {}                    # i  -> primary
         for i, c in enumerate(categories):
             mig = self._migrations.get(c)
             if mig is not None and mig.fenced:
@@ -811,7 +1465,30 @@ class ShardedSemanticCache:
                                         responses[i], metas[i]))
                 self.fault_stats["fenced_writes"] += 1
                 continue
-            per_shard.setdefault(self.shard_of(c), []).append(i)
+            reps = self.replica_set(c)
+            if len(reps) == 1:
+                per_shard.setdefault(reps[0], []).append(i)
+                continue
+            # Replicated write fan-out: compliance is decided ONCE at
+            # the front door (the per-shard path would count the reject
+            # on every replica), then every LIVE replica gets the write
+            # in this same batched round; down replicas get a replica-
+            # mode write-behind item that catches them up directly on
+            # recovery (their siblings already applied the write).
+            e = eff[c]
+            if not e.allow_caching or e.quota <= 0.0:
+                self.metrics.cat(c).insert_rejects += 1
+                agg["insert_rejects"] += 1
+                continue
+            uid = self._mint_uid()
+            rep_primary[i] = reps[0]
+            for sj in reps:
+                if self._shard_down(sj):
+                    self._wb_enqueue(sj, embeddings[i], c, requests[i],
+                                     responses[i], metas[i],
+                                     mode="replica", uid=uid)
+                else:
+                    rep_batches.setdefault(sj, []).append((i, uid))
         for si in sorted(per_shard):
             idxs = per_shard[si]
             if self._shard_down(si):
@@ -820,7 +1497,6 @@ class ShardedSemanticCache:
                 # _maybe_replay). A full queue DROPS — the drop is
                 # counted and unacknowledged-by-construction: only
                 # enqueued writes carry the zero-loss replay guarantee.
-                q = self._write_behind[si]
                 for i in idxs:
                     c = categories[i]
                     e = eff[c]
@@ -828,26 +1504,56 @@ class ShardedSemanticCache:
                         self.metrics.cat(c).insert_rejects += 1
                         agg["insert_rejects"] += 1
                         continue
-                    if len(q) >= self.write_behind_capacity:
-                        self.fault_stats["wb_dropped"] += 1
-                        continue
-                    q.append((embeddings[i].copy(), c, requests[i],
-                              responses[i], metas[i]))
-                    self.fault_stats["wb_enqueued"] += 1
+                    self._wb_enqueue(si, embeddings[i], c, requests[i],
+                                     responses[i], metas[i])
                 continue
             sub = self.shards[si].insert_batch(
                 embeddings[idxs], [categories[i] for i in idxs],
                 [requests[i] for i in idxs], [responses[i] for i in idxs],
                 [metas[i] for i in idxs])
-            ins = self.shards[si].last_insert_stats
-            if ins:
-                agg["per_shard"][si] = dict(ins)
-                for k in ("admitted", "admission_skips", "insert_rejects"):
-                    agg[k] += ins.get(k, 0)
+            self._merge_insert_stats(agg, si,
+                                     self.shards[si].last_insert_stats)
             for i, local in zip(idxs, sub):
                 slots_out[i] = self._global_slot(si, int(local))
+        # Replicated fan-out: one sub-batch per live replica in the same
+        # write round (each replica's dirty-log delta sync stays
+        # O(batch)); the PRIMARY's slot is the caller-visible one.
+        for sj in sorted(rep_batches):
+            pairs = rep_batches[sj]
+            idxs = [i for i, _ in pairs]
+            sub = self.shards[sj].insert_batch(
+                embeddings[idxs], [categories[i] for i in idxs],
+                [requests[i] for i in idxs], [responses[i] for i in idxs],
+                [metas[i] for i in idxs])
+            self._merge_insert_stats(agg, sj,
+                                     self.shards[sj].last_insert_stats)
+            for (i, uid), local in zip(pairs, sub):
+                local = int(local)
+                if local == INVALID:
+                    continue
+                self._rep_register(uid, sj, local,
+                                   self.shards[sj].doc_id_of(local))
+                if rep_primary.get(i) == sj:
+                    slots_out[i] = self._global_slot(sj, local)
         self.last_insert_stats = agg
         return slots_out
+
+    @staticmethod
+    def _merge_insert_stats(agg: dict, si: int, ins: dict) -> None:
+        """Fold one shard sub-batch's insert stats into the round's
+        aggregate; a shard can serve BOTH a single-home and a replicated
+        sub-batch in one round, so per-shard entries sum-merge."""
+        if not ins:
+            return
+        prev = agg["per_shard"].get(si)
+        if prev is None:
+            agg["per_shard"][si] = dict(ins)
+        else:
+            for k, v in ins.items():
+                if isinstance(v, (int, float)):
+                    prev[k] = prev.get(k, 0) + v
+        for k in ("admitted", "admission_skips", "insert_rejects"):
+            agg[k] += ins.get(k, 0)
 
     def sweep_expired(self) -> int:
         return sum(s.sweep_expired() for s in self.shards)
@@ -869,6 +1575,11 @@ class ShardedSemanticCache:
             return None
         if category in self._migrations:
             raise RuntimeError(f"migration of {category!r} already active")
+        if len(self.replica_set(category)) > 1:
+            raise RuntimeError(
+                f"{category!r} is replicated — replicated categories are "
+                "pinned (their outage story is the replica set, not "
+                "migration)")
         mig = CategoryMigration(self, category, src, target, batch_size)
         self._migrations[category] = mig
         if not stepwise:
@@ -893,10 +1604,15 @@ class ShardedSemanticCache:
                       and self.policies.get(n).quota > 0}
         scratch = ShardPlanner(self.n_shards, self.capacity,
                                residency=self.planner.residency,
-                               policies=self.policies)
+                               policies=self.policies,
+                               replication=self.planner.replication)
         target = scratch.plan(quotas)
         moves: dict[str, tuple[int, int]] = {}
         for cat, dst in target.items():
+            if len(self.planner.replica_set(cat)) > 1:
+                # Pinned: replicated categories keep their replica set
+                # across re-plans — failover, not migration, covers them.
+                continue
             src = self.planner.shard_of(cat)
             if src != dst:
                 self.migrate_category(cat, dst)
@@ -947,6 +1663,9 @@ class ShardedSemanticCache:
                 "resident_bytes": rep["entries"]
                 * rep["in_memory_bytes_per_entry"],
                 "categories": cats,
+                "replicated": sorted(
+                    c for c, rs in getattr(self.planner, "replica_sets",
+                                           {}).items() if si in rs),
                 "sync_stats": dict(s.index.sync_stats),
                 "search_stats": dict(s.index.search_stats),
             })

@@ -107,6 +107,15 @@ class DocumentStore:
     def delete(self, doc_id: int) -> None:
         raise NotImplementedError
 
+    def scan(self, category: str | None = None) -> list[Document]:
+        """Bulk-iterate documents (optionally one category), ordered by
+        doc_id for determinism. This is the RECOVERY path — outage
+        rebalancing rebuilds a dead shard's resident set from its
+        (separately durable) store — not the per-key hot path, so
+        wrappers delegate it without per-op fault/latency accounting.
+        """
+        raise NotImplementedError
+
     def __len__(self) -> int:
         raise NotImplementedError
 
@@ -126,6 +135,12 @@ class InMemoryStore(DocumentStore):
 
     def delete(self, doc_id: int) -> None:
         self._docs.pop(doc_id, None)
+
+    def scan(self, category: str | None = None) -> list[Document]:
+        docs = sorted(self._docs.values(), key=lambda d: d.doc_id)
+        if category is not None:
+            docs = [d for d in docs if d.category == category]
+        return docs
 
     def __len__(self) -> int:
         return len(self._docs)
@@ -174,6 +189,14 @@ class FileStore(DocumentStore):
         if os.path.exists(path):
             os.unlink(path)
 
+    def scan(self, category: str | None = None) -> list[Document]:
+        ids = sorted(int(n[:-4], 16) for n in os.listdir(self.root)
+                     if n.endswith(".doc"))
+        docs = [d for d in (self.get(i) for i in ids) if d is not None]
+        if category is not None:
+            docs = [d for d in docs if d.category == category]
+        return docs
+
     def __len__(self) -> int:
         return sum(1 for n in os.listdir(self.root) if n.endswith(".doc"))
 
@@ -205,6 +228,11 @@ class LatencyModelStore(DocumentStore):
     def delete(self, doc_id: int) -> None:
         self.clock.advance(self.delete_ms / 1e3)
         self.inner.delete(doc_id)
+
+    def scan(self, category: str | None = None) -> list[Document]:
+        # one bulk round trip, not one per document
+        self.clock.advance(self.get_ms / 1e3)
+        return self.inner.scan(category)
 
     def __len__(self) -> int:
         return len(self.inner)
@@ -240,6 +268,12 @@ class FlakyStore(DocumentStore):
     def delete(self, doc_id: int) -> None:
         self.faults.store_op("delete")
         self.inner.delete(doc_id)
+
+    def scan(self, category: str | None = None) -> list[Document]:
+        # recovery/bulk path: not indexed into the per-op fault schedule
+        # (op indices name hot-path gets/puts, and a recovery scan racing
+        # the schedule would make crash sweeps non-enumerable)
+        return self.inner.scan(category)
 
     def __len__(self) -> int:
         return len(self.inner)
@@ -308,6 +342,9 @@ class RetryingStore(DocumentStore):
 
     def delete(self, doc_id: int) -> None:
         self._call("delete", lambda: self.inner.delete(doc_id))
+
+    def scan(self, category: str | None = None) -> list[Document]:
+        return self.inner.scan(category)
 
     def __len__(self) -> int:
         return len(self.inner)

@@ -28,11 +28,33 @@ from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 
 
+def parse_replicas(spec: str | None) -> dict[str, int] | float | None:
+    """``--replicas`` grammar: a float quota-mass threshold (``0.25`` —
+    categories at or above it get 2 replicas) or an explicit map
+    (``conversational_chat=2,code_generation=3``)."""
+    if not spec:
+        return None
+    try:
+        return float(spec)
+    except ValueError:
+        pass
+    out: dict[str, int] = {}
+    for part in spec.split(","):
+        name, _, k = part.partition("=")
+        if not name or not k.isdigit():
+            raise SystemExit(
+                f"--replicas: expected FLOAT or cat=k[,cat=k...], got "
+                f"{spec!r}")
+        out[name.strip()] = int(k)
+    return out
+
+
 def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
                 max_batch: int = 8, prompt_len: int = 32,
                 max_new_tokens: int = 8, seed: int = 0,
                 index_kind: str = "flat", use_device: bool = False,
                 emb_dtype: str = "float32", n_shards: int = 1,
+                replicas: dict[str, int] | float | None = None,
                 log=print) -> dict:
     model = Model(cfg)
     params = model.init_params(jax.random.key(seed))
@@ -42,7 +64,8 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
     kw = dict(capacity=max(4096, n_requests), clock=WallClock(),
               index_kind=index_kind, use_device=use_device,
               l1_capacity=256, emb_dtype=emb_dtype)
-    cache = (ShardedSemanticCache(policies, n_shards=n_shards, **kw)
+    cache = (ShardedSemanticCache(policies, n_shards=n_shards,
+                                  replication=replicas, **kw)
              if n_shards > 1 else SemanticCache(policies, **kw))
     if cache_kind == "none":
         for name in policies.categories():
@@ -86,12 +109,26 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
             log(f"[serve]   shard {si}: {ss['full_uploads']} full / "
                 f"{ss['delta_updates']} delta, "
                 f"{ss['bytes_synced'] / 1e6:.2f} MB synced")
+    replica_sets = None
+    if n_shards > 1:
+        replica_sets = {c: list(r) for c, r in sorted(
+            getattr(cache.planner, "replica_sets", {}).items())}
+        if replica_sets:
+            for c, reps in replica_sets.items():
+                log(f"[serve] replica set {c}: shards {reps} "
+                    f"(writes fan out, reads round-robin)")
+            fs = cache.fault_stats
+            log(f"[serve] replication: "
+                f"{fs['failover_reads']} failover reads, "
+                f"{fs['replica_divergence']} divergence events, "
+                f"{fs['outage_rebalances']} outage rebalances")
     return {"served": st.served, "hit_rate": st.hit_rate,
             "model_tokens": st.model_tokens, "wall_s": wall,
             "search_hops": st.search_hops,
             "rows_gathered": st.rows_gathered,
             "n_shards": n_shards,
             "per_category": cache.metrics.snapshot(),
+            "replica_sets": replica_sets,
             "index_sync": dict(sync) if sync is not None else None}
 
 
@@ -119,6 +156,12 @@ def main():
                          "shards with quota-byte planner placement "
                          "(core/shard.py); the report shows per-shard "
                          "sync accounting")
+    ap.add_argument("--replicas", default=None,
+                    help="head-category replication (needs --shards > 1): "
+                         "a float quota-mass threshold (0.25 = categories "
+                         "at/above it get 2 replicas) or an explicit "
+                         "cat=k[,cat=k...] map; the report adds replica-"
+                         "set, failover and divergence lines")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -127,7 +170,8 @@ def main():
     run_serving(cfg, n_requests=args.requests, cache_kind=args.cache,
                 max_batch=args.max_batch, index_kind=args.index,
                 use_device=args.use_device, emb_dtype=args.emb_dtype,
-                n_shards=args.shards)
+                n_shards=args.shards,
+                replicas=parse_replicas(args.replicas))
 
 
 if __name__ == "__main__":

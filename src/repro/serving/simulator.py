@@ -70,6 +70,13 @@ class SimConfig:
     fault_schedule: FaultSchedule | None = None
     store_retries: int = 3              # RetryingStore bounded attempts
     store_backoff_ms: float = 1.0       # base of the 2^k backoff ladder
+    # sharded hybrid only: head-category replication ({cat: k} map or a
+    # quota-mass threshold float) and the sustained-outage threshold
+    # that triggers OutageRebalance for unreplicated categories. None /
+    # None keeps the cache construction identical to the pre-replication
+    # path (the bench_faults baseline gate relies on it).
+    replication: dict | float | None = None
+    rebalance_after_s: float | None = None
     store_budget_ms: float = 50.0       # per-op cumulative latency budget
     write_behind_capacity: int = 1024   # per-shard outage write queue
 
@@ -164,7 +171,9 @@ class ServingSimulator:
                 self.cache = ShardedSemanticCache(
                     policies, n_shards=sim.n_shards,
                     faults=self.faults,
-                    write_behind_capacity=sim.write_behind_capacity, **kw)
+                    write_behind_capacity=sim.write_behind_capacity,
+                    replication=sim.replication,
+                    rebalance_after_s=sim.rebalance_after_s, **kw)
             else:
                 self.cache = SemanticCache(policies, **kw)
             # external fetch latency charged here (LatencyModelStore-like)
@@ -250,12 +259,21 @@ class ServingSimulator:
             slot = self.cache.insert(q.embedding, q.category, q.text,
                                      f"response:{q.text}")
             if slot >= 0:
-                # doc_id_of decodes sharded caches' global slot ids too
-                doc_id = self.cache.doc_id_of(slot)
-                self._truth[doc_id] = (q.intent_id, q.content_version)
-            elif self.faults is not None:
+                # doc_id_of decodes sharded caches' global slot ids too;
+                # a replicated write gets the truth recorded under EVERY
+                # replica's doc id so failover reads judge identically.
+                if hasattr(self.cache, "replica_doc_ids"):
+                    for doc_id in self.cache.replica_doc_ids(slot):
+                        self._truth[doc_id] = (q.intent_id,
+                                               q.content_version)
+                else:
+                    doc_id = self.cache.doc_id_of(slot)
+                    self._truth[doc_id] = (q.intent_id, q.content_version)
+            if self.faults is not None:
                 # the write may be acknowledged-but-deferred (write-
-                # behind / fence) — its doc_id doesn't exist yet
+                # behind / fence) or re-minted under a fresh doc id by a
+                # replica catch-up / outage rebuild — the payload-keyed
+                # fallback covers every copy whose id truth never saw
                 self._truth_text[(q.category, f"response:{q.text}")] = \
                     (q.intent_id, q.content_version)
         return (self.clock.now() - t0) * 1e3
@@ -353,6 +371,9 @@ class ServingSimulator:
             if hasattr(self.cache, "fault_stats"):
                 fault_stats["front_door"] = dict(self.cache.fault_stats)
                 fault_stats["wb_pending"] = self.cache.wb_pending
+                # per-category availability SLO view (sharded only):
+                # availability, degraded_misses/seconds, replica count
+                fault_stats["slo"] = self.cache.metrics.slo_report()
             if self._retry_stores:
                 store = {}
                 for s in self._retry_stores:
