@@ -54,11 +54,14 @@ Emits CSV rows and ``results/BENCH_faults.json`` (CI smoke runs
 from __future__ import annotations
 
 import argparse
+import os
 
 from benchmarks.common import emit, write_bench_json
 from repro.core.faults import FaultSchedule
 from repro.core.policy import PolicyEngine, paper_policies
 from repro.core.workload import scenario_generator
+from repro.obs import (check_span_accounting, coverage_fraction,
+                       span_accounting)
 from repro.serving.simulator import ServingSimulator, SimConfig
 
 CAPACITY = 4000
@@ -86,23 +89,31 @@ def run_scenario(*, schedule: FaultSchedule | None, n: int,
                  n_shards: int = 2, index_kind: str = "flat",
                  seed: int = 0,
                  replication: dict | float | None = None,
-                 rebalance_after_s: float | None = None) -> dict:
-    """One deterministic simulator run; returns the gate counters."""
+                 rebalance_after_s: float | None = None,
+                 trace: bool = False,
+                 trace_jsonl: str | None = None) -> dict:
+    """One deterministic simulator run; returns the gate counters.
+    ``trace=True`` wires the repro.obs TraceRecorder through the whole
+    stack and attaches span-accounting / event-attribution gate data
+    under ``"trace"`` (and optionally dumps the raw trace as JSONL)."""
     pol = PolicyEngine(paper_policies())
     sim = ServingSimulator(pol, SimConfig(
         architecture="hybrid", cache_capacity=CAPACITY,
         index_kind=index_kind, n_shards=n_shards, seed=seed,
         fault_schedule=schedule, replication=replication,
-        rebalance_after_s=rebalance_after_s))
+        rebalance_after_s=rebalance_after_s, trace=trace))
     res = sim.run(scenario_generator(SCENARIO, seed=seed), n)
     per = res.metrics.per_category
+    # the aggregate row is computed once by the registry (summed
+    # counters, recomputed rates) instead of hand-summing here
+    ov = res.metrics.snapshot()["_overall"]
     out = {
         "n_queries": n, "n_shards": n_shards, "index_kind": index_kind,
-        "lookups": sum(s.lookups for s in per.values()),
-        "hits": sum(s.hits for s in per.values()),
-        "misses": sum(s.misses for s in per.values()),
-        "degraded_misses": sum(s.degraded_misses for s in per.values()),
-        "store_timeouts": sum(s.store_timeouts for s in per.values()),
+        "lookups": ov["lookups"],
+        "hits": ov["hits"],
+        "misses": ov["misses"],
+        "degraded_misses": ov["degraded_misses"],
+        "store_timeouts": ov["store_timeouts"],
         "hit_rate": round(res.overall_hit_rate, 4),
         "sync": dict(res.index_sync or {}),
         "per_category": {
@@ -112,6 +123,33 @@ def run_scenario(*, schedule: FaultSchedule | None, n: int,
     }
     if res.fault_stats is not None:
         out["fault"] = res.fault_stats
+    if trace:
+        rec = res.trace
+        acct = span_accounting(rec)
+        # degraded-window attribution: every degraded second the metrics
+        # accrued must be explained by a degraded_accrue event
+        accrued: dict[str, float] = {}
+        for ev in rec.events:
+            if ev.name == "degraded_accrue":
+                c = ev.fields.get("category", "")
+                accrued[c] = accrued.get(c, 0.0) \
+                    + float(ev.fields.get("seconds", 0.0))
+        attribution = {
+            name: round(accrued.get(name, 0.0) / s.degraded_seconds, 6)
+            for name, s in per.items() if s.degraded_seconds > 0}
+        out["trace"] = {
+            "opened": acct["opened"], "closed": acct["closed"],
+            "roots": acct["roots"],
+            "max_gap_ms": acct["max_gap_ms"],
+            "violations": check_span_accounting(rec),
+            "leaf_coverage": round(coverage_fraction(rec), 6),
+            "events": rec.event_counts(),
+            "degraded_attribution": attribution,
+        }
+        if trace_jsonl:
+            os.makedirs(os.path.dirname(trace_jsonl) or ".", exist_ok=True)
+            out["trace"]["jsonl_lines"] = rec.to_jsonl(trace_jsonl)
+            out["trace"]["jsonl_path"] = trace_jsonl
     return out
 
 
@@ -142,6 +180,28 @@ def run(n: int = 5000, seed: int = 0, sweep: bool = True,
          get_retries=flaky["fault"]["store"]["get_retries"],
          backoff_ms=round(flaky["fault"]["store"]["backoff_ms_charged"], 3))
 
+    # Tracing gates: the SAME runs with the TraceRecorder wired in must
+    # be counter-identical (observation changes nothing), close span
+    # accounting exactly (every opened span closes, leaf sums equal root
+    # durations under the sim clock), and attribute every degraded
+    # second to named degraded_accrue events. The outage run's raw
+    # trace is dumped as the CI JSONL artifact.
+    traced = run_scenario(
+        schedule=FaultSchedule(shard_outages=list(OUTAGES)), n=n,
+        seed=seed, trace=True,
+        trace_jsonl=os.path.join(out_dir, "TRACE_faults.jsonl"))
+    emit("faults.traced_outage", 0.0, spans=traced["trace"]["opened"],
+         roots=traced["trace"]["roots"],
+         violations=len(traced["trace"]["violations"]),
+         coverage=traced["trace"]["leaf_coverage"])
+    traced_reb = run_scenario(
+        schedule=FaultSchedule(
+            shard_outages=[(OUTAGE_T0, OUTAGE_T0 + 10.0, 1)]),
+        n=n, seed=seed, rebalance_after_s=REBALANCE_AFTER_S, trace=True)
+    traced_flaky = run_scenario(
+        schedule=FaultSchedule(store_get_failures=FLAKY_GETS), n=n,
+        seed=seed, trace=True)
+
     payload = {
         "n_queries": n, "seed": seed, "scenario": SCENARIO,
         "capacity": CAPACITY, "outage_windows": [list(w) for w in OUTAGES],
@@ -149,6 +209,9 @@ def run(n: int = 5000, seed: int = 0, sweep: bool = True,
                      "empty_schedule_rerun": inert2},
         "shard_outage": outage,
         "store_flaky": flaky,
+        "traced_outage": traced,
+        "traced_rebalance": traced_reb,
+        "traced_flaky": traced_flaky,
         "replication": run_replication(
             n=n, seed=seed,
             durations=REPL_DURATIONS if sweep else [10.0]),
@@ -175,7 +238,11 @@ def run(n: int = 5000, seed: int = 0, sweep: bool = True,
              failover=repl_hnsw["fault"]["front_door"]["failover_reads"],
              divergence=repl_hnsw["fault"]["front_door"]
              ["replica_divergence"])
-    write_bench_json("faults", payload, out_dir=out_dir)
+    write_bench_json("faults", payload, out_dir=out_dir,
+                     config={"n_queries": n, "seed": seed,
+                             "scenario": SCENARIO, "capacity": CAPACITY,
+                             "sweep": sweep,
+                             "outage_windows": [list(w) for w in OUTAGES]})
     return payload
 
 
@@ -279,6 +346,7 @@ def check(payload: dict) -> None:
                 f"not in (0, 1) despite scheduled outage windows")
 
     check_replication(payload["replication"])
+    check_tracing(payload)
 
     flaky = payload["store_flaky"]
     _check_accounting("store_flaky", flaky)
@@ -300,7 +368,58 @@ def check(payload: dict) -> None:
           f"{flaky['store_timeouts']} timeouts; replication held "
           f"availability 1.0 across {len(curve)} outage durations "
           f"(failover, zero divergence) and self-healing bounded the "
-          f"unreplicated window")
+          f"unreplicated window; tracing was counter-free with "
+          f"{payload['traced_outage']['trace']['opened']} spans closed "
+          f"exactly and degraded windows fully attributed")
+
+
+def check_tracing(payload: dict) -> None:
+    """Deterministic tracing gates: tracing is observation only, span
+    accounting closes exactly, degraded windows are fully attributed."""
+    # 1) tracing-on counters bit-identical to the untraced outage run
+    tr, base = payload["traced_outage"], payload["shard_outage"]
+    for k in ("lookups", "hits", "misses", "degraded_misses",
+              "store_timeouts", "hit_rate", "sync", "per_category",
+              "fault"):
+        if tr[k] != base[k]:
+            raise SystemExit(
+                f"tracing not free: traced outage {k} {tr[k]!r} != "
+                f"untraced {base[k]!r}")
+    for name in ("traced_outage", "traced_rebalance", "traced_flaky"):
+        t = payload[name]["trace"]
+        # 2) span accounting closes exactly (SimClock)
+        if t["violations"]:
+            raise SystemExit(
+                f"{name}: span accounting violated — "
+                f"{t['violations'][:3]}")
+        if t["opened"] != t["closed"]:
+            raise SystemExit(
+                f"{name}: span leak — {t['opened']} opened, "
+                f"{t['closed']} closed")
+        # 3) every degraded second explained by degraded_accrue events
+        for cat, frac in t["degraded_attribution"].items():
+            if frac < 0.95:
+                raise SystemExit(
+                    f"{name}: only {frac:.1%} of {cat}'s degraded "
+                    f"window attributed to degraded_accrue events "
+                    f"(need >= 95%)")
+        # 4) one degraded_miss event per degraded_miss counter tick
+        deg_ev = t["events"].get("degraded_miss", 0)
+        if deg_ev != payload[name]["degraded_misses"]:
+            raise SystemExit(
+                f"{name}: {deg_ev} degraded_miss events != "
+                f"{payload[name]['degraded_misses']} counted")
+    if payload["traced_rebalance"]["trace"]["events"] \
+            .get("rebalance_step", 0) <= 0:
+        raise SystemExit(
+            "traced_rebalance: OutageRebalance ran but emitted no "
+            "rebalance_step events")
+    if payload["traced_flaky"]["trace"]["events"].get("store_retry", 0) <= 0:
+        raise SystemExit(
+            "traced_flaky: transient store runs absorbed but no "
+            "store_retry events on the stream")
+    if payload["traced_outage"]["trace"].get("jsonl_lines", 0) <= 0:
+        raise SystemExit("traced_outage: empty JSONL trace artifact")
 
 
 def check_replication(rep: dict) -> None:

@@ -33,6 +33,7 @@ from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.embedding import SyntheticCategorySpace
 from repro.core.policy import CategoryConfig, PolicyEngine
+from repro.obs import LatencyHistogram
 
 CAPACITIES = (4096, 8192, 16384)
 QUICK_CAPACITIES = (2048, 8192)
@@ -75,14 +76,15 @@ def _run_capacity(capacity: int, *, prefill: int, lookups_per_batch: int,
         stats0 = dict(cache.last_lookup_stats)
         best = None
         for _ in range(repeats):
-            lat = []
+            # fixed-bucket log-scale histogram (repro.obs): quantiles
+            # are bucket midpoints, no per-sample storage
+            h = LatencyHistogram()
             for _i in range(lookups_per_batch):
                 t0 = time.perf_counter()
                 res = cache.lookup_batch(q, ["lookup"] * batch)
-                lat.append(time.perf_counter() - t0)
-            lat_ms = np.asarray(lat) * 1e3
-            cur = {"p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
-                   "p99_ms": round(float(np.percentile(lat_ms, 99)), 3)}
+                h.observe((time.perf_counter() - t0) * 1e3)
+            cur = {"p50_ms": round(h.quantile(0.50), 3),
+                   "p99_ms": round(h.quantile(0.99), 3)}
             if best is None or cur["p50_ms"] < best["p50_ms"]:
                 best = cur
         hit_rate = float(np.mean([r.hit for r in res]))
@@ -142,7 +144,11 @@ def run(capacities=CAPACITIES, prefill: int = 1000,
         # emb_dtype + per-row byte costs: keeps rows-gathered comparable
         # across resident dtypes in the perf trajectory.
         payload["index"] = r["index"]
-    write_bench_json("lookup", payload, out_dir=out_dir)
+    write_bench_json("lookup", payload, out_dir=out_dir,
+                     config={"prefill": prefill,
+                             "lookups_per_batch": lookups_per_batch,
+                             "repeats": repeats, "seed": seed,
+                             "capacities": list(capacities)})
     return payload
 
 

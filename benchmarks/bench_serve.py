@@ -33,6 +33,7 @@ from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.embedding import SyntheticCategorySpace
 from repro.core.policy import CategoryConfig, PolicyEngine
+from repro.obs import LatencyHistogram
 
 CAPACITIES = (4096, 8192, 16384, 32768)         # 8x sweep
 QUICK_CAPACITIES = (4096, 16384)                # 4x sweep (CI smoke)
@@ -65,7 +66,10 @@ def _run_one(capacity: int, mode: str, *, steps: int, batch: int,
 
     next_intent = prefill
     last_bytes = cache.index.sync_stats["bytes_synced"]
-    step_s, sync_s, step_bytes, hits, lookups = [], [], [], 0, 0
+    # fixed-bucket log-scale histograms (repro.obs) — no sample storage;
+    # quantiles are bucket midpoints, means exact from sum/count
+    step_h, sync_h = LatencyHistogram(), LatencyHistogram()
+    step_bytes, hits, lookups = [], 0, 0
     for s in range(warmup + steps):
         # half the batch revisits cached intents (hits), half is new
         # traffic (misses -> one batched write-back)
@@ -92,24 +96,22 @@ def _run_one(capacity: int, mode: str, *, steps: int, batch: int,
         t2 = time.perf_counter()
 
         if s >= warmup:
-            step_s.append(t2 - t0)
-            sync_s.append(t2 - t1)
+            step_h.observe((t2 - t0) * 1e3)
+            sync_h.observe((t2 - t1) * 1e3)
             synced = cache.index.sync_stats["bytes_synced"]
             step_bytes.append(synced - last_bytes)
             hits += batch - len(miss)
             lookups += batch
         last_bytes = cache.index.sync_stats["bytes_synced"]
 
-    lat_ms = np.asarray(step_s) * 1e3
-    sync_ms = np.asarray(sync_s) * 1e3
     out = {
         "capacity": capacity,
         "mode": mode,
         "hit_rate": round(hits / max(1, lookups), 4),
-        "p50_step_ms": round(float(np.percentile(lat_ms, 50)), 3),
-        "p99_step_ms": round(float(np.percentile(lat_ms, 99)), 3),
-        "p50_sync_ms": round(float(np.percentile(sync_ms, 50)), 3),
-        "p99_sync_ms": round(float(np.percentile(sync_ms, 99)), 3),
+        "p50_step_ms": round(step_h.quantile(0.50), 3),
+        "p99_step_ms": round(step_h.quantile(0.99), 3),
+        "p50_sync_ms": round(sync_h.quantile(0.50), 3),
+        "p99_sync_ms": round(sync_h.quantile(0.99), 3),
         "bytes_synced_per_step": int(np.mean(step_bytes)),
         "full_uploads": cache.index.sync_stats["full_uploads"]
         - (1 if mode == "delta" else 0),      # initial upload not steady
@@ -118,7 +120,7 @@ def _run_one(capacity: int, mode: str, *, steps: int, batch: int,
         # across resident dtypes in the perf trajectory.
         **index_meta(cache.index),
     }
-    emit(f"serve.{tag}.{mode}.cap{capacity}", float(np.mean(lat_ms)) * 1e3,
+    emit(f"serve.{tag}.{mode}.cap{capacity}", step_h.mean_ms * 1e3,
          p50_ms=out["p50_step_ms"], p99_ms=out["p99_step_ms"],
          sync_ms=out["p50_sync_ms"], hit_rate=out["hit_rate"],
          sync_bytes=out["bytes_synced_per_step"])
@@ -168,7 +170,11 @@ def run(capacities=CAPACITIES, steps: int = 30, batch: int = 16,
              sync_ratio=payload["delta_sync_flatness"],
              bytes_ratio=payload["delta_bytes_ratio"],
              sweep=f"{min(capacities)}-{max(capacities)}")
-    write_bench_json("serve", payload, out_dir=out_dir)
+    write_bench_json("serve", payload, out_dir=out_dir,
+                     config={"batch": batch, "steps": steps,
+                             "prefill": prefill, "repeats": repeats,
+                             "capacities": list(capacities),
+                             "modes": list(modes), "seed": seed})
     return payload
 
 

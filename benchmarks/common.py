@@ -5,8 +5,10 @@ benches with tracked acceptance numbers also write a machine-readable
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import subprocess
 import time
 
 
@@ -23,10 +25,44 @@ def _fmt(v) -> str:
     return str(v)
 
 
-def write_bench_json(name: str, payload: dict, out_dir: str = "results"
-                     ) -> str:
-    """Write ``results/BENCH_<name>.json`` and return its path."""
+def _git(*args: str) -> str | None:
+    try:
+        out = subprocess.run(["git", *args], capture_output=True,
+                             text=True, timeout=10,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+def provenance(config: dict | None = None) -> dict:
+    """Provenance stamp for every ``BENCH_*.json``: the git commit the
+    numbers came from, whether the tree was dirty, and a short stable
+    hash of the run configuration — so two result files are comparable
+    only when their config hashes match. Git being absent (tarball
+    checkout) degrades to ``None`` fields, never an error."""
+    sha = _git("rev-parse", "HEAD")
+    status = _git("status", "--porcelain")
+    cfg_hash = None
+    if config:
+        blob = json.dumps(config, sort_keys=True, default=str)
+        cfg_hash = hashlib.sha256(blob.encode()).hexdigest()[:12]
+    return {
+        "git_sha": sha,
+        "git_dirty": bool(status) if status is not None else None,
+        "config_hash": cfg_hash,
+    }
+
+
+def write_bench_json(name: str, payload: dict, out_dir: str = "results",
+                     config: dict | None = None) -> str:
+    """Write ``results/BENCH_<name>.json`` and return its path. A
+    ``provenance`` block (git SHA, dirty flag, config hash over
+    ``config`` — pass the bench's knob dict) is stamped into every
+    payload unless the caller already provided one."""
     os.makedirs(out_dir, exist_ok=True)
+    payload = dict(payload)
+    payload.setdefault("provenance", provenance(config))
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

@@ -18,6 +18,10 @@ AST-walked — nothing is timed):
    every production kernel across the supported shape families.
 4. **Mirror-coherence lint** (``mirror_lint.py``) over the core
    index/cache/shard modules.
+5. **Span-coverage lint** (``span_lint.py``) over the traced serving
+   stack: every ``clock.advance`` charge in a traced stage must open a
+   span (or carry a ``# span-ok`` pragma), or span accounting silently
+   stops closing exactly.
 
 Exit status 0 = every contract holds; 1 = violations (printed one per
 line with evidence). CI gates on it in the ``static-analysis`` job.
@@ -29,7 +33,7 @@ import sys
 
 import numpy as np
 
-from repro.analysis import mirror_lint, vmem
+from repro.analysis import mirror_lint, span_lint, vmem
 from repro.analysis.contracts import (CompileBudget, Violation,
                                       collect_compile_census,
                                       collect_hot_path_traces, run_rules)
@@ -108,6 +112,14 @@ def check_mirror(log=print) -> list[Violation]:
     return viols
 
 
+def check_spans(log=print) -> list[Violation]:
+    paths = span_lint.default_paths()
+    viols = span_lint.lint_paths(paths)
+    log(f"  {len(paths)} modules linted "
+        f"({', '.join(p.name for p in paths)}) — {len(viols)} violations")
+    return viols
+
+
 def main(argv=None) -> int:
     quiet = bool(argv) and "-q" in argv
     log = (lambda *a, **k: None) if quiet else print
@@ -117,6 +129,7 @@ def main(argv=None) -> int:
         ("Compile budget (serve-batch bucketing)", check_compile_budget),
         ("Pallas VMEM/SMEM budget", check_vmem),
         ("Mirror-coherence lint", check_mirror),
+        ("Span-coverage lint (traced Clock charges)", check_spans),
     )
     violations: list[Violation] = []
     for title, fn in sections:

@@ -63,6 +63,7 @@ from repro.core.hnsw import CLS_EXPIRED, CLS_HIT, CLS_MISS, FlatIndex, \
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import PolicyEngine
 from repro.core.storage import Document, DocumentStore, InMemoryStore
+from repro.obs.trace import NULL_SPAN
 
 
 @dataclass
@@ -99,8 +100,15 @@ class SemanticCache:
                  quota_capacity: int | None = None,
                  doc_id_start: int = 0, doc_id_step: int = 1,
                  eviction: str = "static",
-                 durable_embeddings: bool = False):
+                 durable_embeddings: bool = False,
+                 obs=None, obs_shard: int = 0):
         self.policies = policies
+        # Observability (repro.obs.TraceRecorder or None). When None,
+        # every instrumented site goes through the shared no-op span —
+        # the empty-recorder parity contract: counters, device bytes
+        # and clock charges are bit-identical to the untraced build.
+        self.obs = obs
+        self._obs_shard = obs_shard
         self.dim = dim
         self.capacity = capacity
         # Quota ceilings are fractions of ``quota_capacity`` (default: the
@@ -197,6 +205,18 @@ class SemanticCache:
         self._cat_names[cid] = name
         return cid
 
+    def _span(self, stage: str, **attrs):
+        """Clock-timed span when a ``TraceRecorder`` is attached; the
+        shared no-op span otherwise (tracing off leaves the hot path
+        untouched)."""
+        if self.obs is None:
+            return NULL_SPAN
+        return self.obs.span(stage, shard=self._obs_shard, **attrs)
+
+    def _event(self, name: str, **fields) -> None:
+        if self.obs is not None:
+            self.obs.event(name, shard=self._obs_shard, **fields)
+
     def category_count(self, name: str) -> int:
         cid = self.policies.category_id(name)
         return int((self.slot_valid & (self.slot_category == cid)).sum())
@@ -208,6 +228,11 @@ class SemanticCache:
     def lookup_batch(self, embeddings: np.ndarray,
                      categories: Sequence[str]) -> list[CacheResult]:
         """Vectorized Algorithm 1 over a mixed-category batch."""
+        with self._span("lookup", batch=int(embeddings.shape[0])):
+            return self._lookup_batch_impl(embeddings, categories)
+
+    def _lookup_batch_impl(self, embeddings: np.ndarray,
+                           categories: Sequence[str]) -> list[CacheResult]:
         B = embeddings.shape[0]
         assert len(categories) == B
         now = self._now()
@@ -235,27 +260,45 @@ class SemanticCache:
         # nearer cross-category entry can route traffic but never shadows a
         # valid match (the seed's "category_mismatch" false-miss path is
         # gone by construction).
-        self.clock.advance(self.search_ms / 1e3)
-        q = embeddings[active]
-        taus = np.asarray([effective[i].threshold for i in active], np.float32)
-        qcats = np.asarray([self._cat_id(categories[i]) for i in active],
-                           np.int32)
-        ttls = np.asarray([effective[i].ttl for i in active], np.float64)
+        # Span "search" covers the search-latency charge, the index
+        # traversal and the single device→host sync; the fp32 re-rank
+        # tier gets a SIBLING span so its borderline store fetches are
+        # attributed separately from the traversal.
+        with self._span("search", batch=len(active)):
+            self.clock.advance(self.search_ms / 1e3)
+            q = embeddings[active]
+            taus = np.asarray([effective[i].threshold for i in active],
+                              np.float32)
+            qcats = np.asarray([self._cat_id(categories[i]) for i in active],
+                               np.int32)
+            ttls = np.asarray([effective[i].ttl for i in active], np.float64)
+            if self.use_device:
+                # Line 12-21 classification runs INSIDE the jitted search
+                # (the synced ``inserted`` table + per-query TTL/now), so
+                # the only host sync is this single device_get — the
+                # Python below then touches actual hits (doc fetch) and
+                # expirations (evict), not all B results.
+                d_idx, d_score, d_cls, d_cand = self.index.search_classified(
+                    q, taus, categories=qcats, ttls=ttls, now=now)
+                ls = self.index.last_search
+                idxs, scores, cls, cands, hops, rows = jax.device_get(
+                    (d_idx, d_score, d_cls, d_cand, ls.get("hops", 0),
+                     ls.get("rows_gathered", 0)))
+                idxs = np.asarray(idxs, np.int64)
+                scores = np.asarray(scores, np.float64)
+                cls = np.array(cls)    # writable: the re-rank tier may edit
+            else:
+                idxs, scores = self.index.search_host(q, taus,
+                                                      categories=qcats)
+                # Host path: same vectorized classification in numpy.
+                idxs = np.asarray(idxs, np.int64)
+                scores = np.asarray(scores, np.float64)
+                safe = np.maximum(idxs, 0)
+                found = (idxs != INVALID) & self.slot_valid[safe]
+                expired = found & ((now - self.slot_inserted[safe]) > ttls)
+                cls = np.where(expired, CLS_EXPIRED,
+                               np.where(found, CLS_HIT, CLS_MISS))
         if self.use_device:
-            # Line 12-21 classification runs INSIDE the jitted search (the
-            # synced ``inserted`` table + per-query TTL/now), so the only
-            # host sync is this single device_get — the Python below then
-            # touches actual hits (doc fetch) and expirations (evict), not
-            # all B results.
-            d_idx, d_score, d_cls, d_cand = self.index.search_classified(
-                q, taus, categories=qcats, ttls=ttls, now=now)
-            ls = self.index.last_search
-            idxs, scores, cls, cands, hops, rows = jax.device_get(
-                (d_idx, d_score, d_cls, d_cand, ls.get("hops", 0),
-                 ls.get("rows_gathered", 0)))
-            idxs = np.asarray(idxs, np.int64)
-            scores = np.asarray(scores, np.float64)
-            cls = np.array(cls)        # writable: the re-rank tier may edit
             reranks = 0
             if self.index.quantized:
                 # The fp32 re-rank tier: borderline quantized scores are
@@ -263,10 +306,11 @@ class SemanticCache:
                 # the document (may rewrite idxs/scores/cls in place;
                 # fetched docs land in rerank_docs so a promoted hit
                 # does not fetch the same document twice).
-                reranks = self._rerank_boundary(
-                    q, idxs, scores, cls, np.asarray(cands, np.int64),
-                    taus, ttls, now, [effective[i] for i in active],
-                    [categories[i] for i in active], rerank_docs)
+                with self._span("rerank", batch=len(active)):
+                    reranks = self._rerank_boundary(
+                        q, idxs, scores, cls, np.asarray(cands, np.int64),
+                        taus, ttls, now, [effective[i] for i in active],
+                        [categories[i] for i in active], rerank_docs)
             row_bytes = ls.get("gather_row_nbytes",
                                self.index.emb_row_nbytes())
             self.last_lookup_stats = {
@@ -275,16 +319,6 @@ class SemanticCache:
                 "gathered_bytes": int(np.sum(rows)) * row_bytes,
                 "emb_dtype": self.index.emb_dtype,
                 "reranks": reranks}
-        else:
-            idxs, scores = self.index.search_host(q, taus, categories=qcats)
-            # Host path: same vectorized classification in numpy.
-            idxs = np.asarray(idxs, np.int64)
-            scores = np.asarray(scores, np.float64)
-            safe = np.maximum(idxs, 0)
-            found = (idxs != INVALID) & self.slot_valid[safe]
-            expired = found & ((now - self.slot_inserted[safe]) > ttls)
-            cls = np.where(expired, CLS_EXPIRED,
-                           np.where(found, CLS_HIT, CLS_MISS))
         hit = cls == CLS_HIT
         np.add.at(self.slot_hits, idxs[hit], 1)   # duplicate slots accumulate
 
@@ -324,7 +358,12 @@ class SemanticCache:
                                          latency_ms=self.search_ms)
                 continue
             try:
-                doc = rerank_docs.get(doc_id) or self.store.get(doc_id)
+                doc = rerank_docs.get(doc_id)
+                if doc is None:
+                    # A StoreTimeout raised inside the span still closes
+                    # it (context-manager unwind) before the rollback.
+                    with self._span("store_fetch", category=cat):
+                        doc = self.store.get(doc_id)
             except StoreTimeout:
                 # Retry budget exhausted on a transient store fault: the
                 # would-be hit degrades to a served-from-model miss. The
@@ -332,6 +371,7 @@ class SemanticCache:
                 # not lost, the store is slow) and the hit bookkeeping
                 # rolls back so counters match the serving outcome.
                 st.store_timeouts += 1
+                self._event("store_timeout", category=cat)
                 st.misses += 1
                 st.hits -= 1
                 self.slot_hits[slot] -= 1
@@ -467,6 +507,12 @@ class SemanticCache:
         matching the sequential path, but never touch the store or index).
         """
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        with self._span("insert", batch=int(embeddings.shape[0])):
+            return self._insert_batch_impl(embeddings, categories,
+                                           requests, responses, metas)
+
+    def _insert_batch_impl(self, embeddings, categories, requests,
+                           responses, metas) -> list[int]:
         B = embeddings.shape[0]
         metas = list(metas) if metas is not None else [None] * B
         if not (len(categories) == len(requests) == len(responses)
@@ -488,48 +534,51 @@ class SemanticCache:
                                       "insert_rejects": B}
             return slots_out
 
-        self.clock.advance(self.insert_ms / 1e3)   # one batched write round
-        now = self._now()
-        cids = {c: self._cat_id(c) for c in eff}
+        # Span "gate": the batched write-round charge plus the admission
+        # sketch pass — everything that decides WHAT gets to spend quota.
+        with self._span("gate", batch=len(admitted)):
+            self.clock.advance(self.insert_ms / 1e3)  # one batched write round
+            now = self._now()
+            cids = {c: self._cat_id(c) for c in eff}
 
-        # Admission gate (core/admission.py): a category with
-        # admit_after > 1 only caches a miss once its canonical key has
-        # repeated enough in the per-category sketch. The repetition
-        # test reuses the category's OWN similarity threshold — "would
-        # this query have hit, had we cached its earlier occurrence?" —
-        # so gate and cache agree on what a repeat is. Skipped items
-        # return INVALID and count as admission_skips — they were still
-        # misses upstream (lookup already counted them), they just don't
-        # spend quota bytes. The observed repetition count feeds the
-        # fresh-entry eviction prior for items that DO land.
-        freq: dict[int, int] = {}
-        gated: list[int] = []
-        # One batched ring-buffer/sketch pass per gated category (stream
-        # order preserved; trackers are per-category, so grouping by
-        # category is observation-order-equivalent to the item loop —
-        # and a sharded front door routes a category wholly to one
-        # shard, so the per-category groups are identical across
-        # topologies, keeping single-vs-sharded parity exact).
-        by_cat: dict[str, list[int]] = {}
-        for i in admitted:
-            c = categories[i]
-            if eff[c].admit_after > 1:
-                by_cat.setdefault(c, []).append(i)
-        counts: dict[int, int] = {}
-        for c, items in by_cat.items():
-            cnts = self.admission.observe_batch(c, embeddings[items],
-                                                tau=eff[c].threshold)
-            counts.update(zip(items, (int(x) for x in cnts)))
-        for i in admitted:
-            c = categories[i]
-            k = eff[c].admit_after
-            if k > 1:
-                cnt = counts[i]
-                if cnt < k:
-                    self.metrics.cat(c).admission_skips += 1
-                    continue
-                freq[i] = cnt
-            gated.append(i)
+            # Admission gate (core/admission.py): a category with
+            # admit_after > 1 only caches a miss once its canonical key has
+            # repeated enough in the per-category sketch. The repetition
+            # test reuses the category's OWN similarity threshold — "would
+            # this query have hit, had we cached its earlier occurrence?" —
+            # so gate and cache agree on what a repeat is. Skipped items
+            # return INVALID and count as admission_skips — they were still
+            # misses upstream (lookup already counted them), they just don't
+            # spend quota bytes. The observed repetition count feeds the
+            # fresh-entry eviction prior for items that DO land.
+            freq: dict[int, int] = {}
+            gated: list[int] = []
+            # One batched ring-buffer/sketch pass per gated category (stream
+            # order preserved; trackers are per-category, so grouping by
+            # category is observation-order-equivalent to the item loop —
+            # and a sharded front door routes a category wholly to one
+            # shard, so the per-category groups are identical across
+            # topologies, keeping single-vs-sharded parity exact).
+            by_cat: dict[str, list[int]] = {}
+            for i in admitted:
+                c = categories[i]
+                if eff[c].admit_after > 1:
+                    by_cat.setdefault(c, []).append(i)
+            counts: dict[int, int] = {}
+            for c, items in by_cat.items():
+                cnts = self.admission.observe_batch(c, embeddings[items],
+                                                    tau=eff[c].threshold)
+                counts.update(zip(items, (int(x) for x in cnts)))
+            for i in admitted:
+                c = categories[i]
+                k = eff[c].admit_after
+                if k > 1:
+                    cnt = counts[i]
+                    if cnt < k:
+                        self.metrics.cat(c).admission_skips += 1
+                        continue
+                    freq[i] = cnt
+                gated.append(i)
         self.last_insert_stats = {
             "batch": B, "admitted": len(gated),
             "admission_skips": len(admitted) - len(gated),
@@ -610,34 +659,36 @@ class SemanticCache:
             setattr(p_st, reason_counter,
                     getattr(p_st, reason_counter) + 1)
 
-        for i in admitted:
-            c = categories[i]
-            e = eff[c]
-            cid = cids[c]
-            st = self.metrics.cat(c)
-            cat_quota = int(e.quota * self.quota_capacity)
-            n_cat = cat_counts.get(cid, 0) + pending_counts.get(cid, 0)
-            if n_cat >= max(1, cat_quota):
-                slot, pos = pick_victim(cid)
-                if slot != INVALID:
-                    evict_existing(slot, "quota")
-                    st.quota_evictions += 1
-                elif pos >= 0:
-                    # seed attributes quota evictions to the inserting
-                    # category — here victim and inserter share it
-                    drop_pending(pos, "quota_evictions")
-            if live_count + len(pending) >= self.capacity:
-                slot, pos = pick_victim(None)
-                if slot != INVALID:
-                    vic_cat = self._cat_names.get(evict_existing(
-                        slot, "capacity"), "?")
-                    self.metrics.cat(vic_cat).capacity_evictions += 1
-                elif pos >= 0:
-                    drop_pending(pos, "capacity_evictions")
-            pending.append([i, cid,
-                            self._evictor.fresh_score(self, cid,
-                                                      freq.get(i, 1))])
-            pending_counts[cid] = pending_counts.get(cid, 0) + 1
+        # Span "evict": quota/capacity victim selection for the batch.
+        with self._span("evict", batch=len(admitted)):
+            for i in admitted:
+                c = categories[i]
+                e = eff[c]
+                cid = cids[c]
+                st = self.metrics.cat(c)
+                cat_quota = int(e.quota * self.quota_capacity)
+                n_cat = cat_counts.get(cid, 0) + pending_counts.get(cid, 0)
+                if n_cat >= max(1, cat_quota):
+                    slot, pos = pick_victim(cid)
+                    if slot != INVALID:
+                        evict_existing(slot, "quota")
+                        st.quota_evictions += 1
+                    elif pos >= 0:
+                        # seed attributes quota evictions to the inserting
+                        # category — here victim and inserter share it
+                        drop_pending(pos, "quota_evictions")
+                if live_count + len(pending) >= self.capacity:
+                    slot, pos = pick_victim(None)
+                    if slot != INVALID:
+                        vic_cat = self._cat_names.get(evict_existing(
+                            slot, "capacity"), "?")
+                        self.metrics.cat(vic_cat).capacity_evictions += 1
+                    elif pos >= 0:
+                        drop_pending(pos, "capacity_evictions")
+                pending.append([i, cid,
+                                self._evictor.fresh_score(self, cid,
+                                                          freq.get(i, 1))])
+                pending_counts[cid] = pending_counts.get(cid, 0) + 1
 
         if not pending:
             return slots_out
@@ -648,36 +699,39 @@ class SemanticCache:
         # exists only for the float32 index table, and a restart-durable
         # store must not serialize timestamps relative to this process's
         # private _t0.
-        created_at = self.clock.now()
-        docs = []
-        for p_i, _, _ in pending:
-            doc_id = self._next_doc_id
-            self._next_doc_id += self._doc_id_step
-            # Under quantized residency the fp32 embedding travels WITH
-            # the document (external tier): the re-rank tier's exact
-            # copy. The fp32 index already IS exact, so its documents
-            # skip the duplicate (~4·dim bytes/doc).
-            emb = (embeddings[p_i].copy()
-                   if self.index.quantized or self.durable_embeddings
-                   else None)
-            docs.append(Document(doc_id, requests[p_i], responses[p_i],
-                                 created_at, categories[p_i],
-                                 metas[p_i] or {}, embedding=emb))
-        self.store.put_many(docs)
-        order = [p_i for p_i, _, _ in pending]
-        # The index owns the category table (slot_category aliases it).
-        slots = self.index.add_batch(
-            embeddings[order],
-            np.asarray([cid for _, cid, _ in pending], np.int32))
-        for (p_i, _, _), slot, doc in zip(pending, slots, docs):
-            slot = int(slot)
-            self.slot_inserted[slot] = now
-            self.slot_hits[slot] = 0
-            self.slot_doc[slot] = doc.doc_id
-            self.slot_valid[slot] = True
-            self.metrics.cat(categories[p_i]).inserts += 1
-            slots_out[p_i] = slot
-        return slots_out
+        # Span "write": the store pass + index pass (store put retries
+        # charge their backoff inside this span).
+        with self._span("write", items=len(pending)):
+            created_at = self.clock.now()
+            docs = []
+            for p_i, _, _ in pending:
+                doc_id = self._next_doc_id
+                self._next_doc_id += self._doc_id_step
+                # Under quantized residency the fp32 embedding travels WITH
+                # the document (external tier): the re-rank tier's exact
+                # copy. The fp32 index already IS exact, so its documents
+                # skip the duplicate (~4·dim bytes/doc).
+                emb = (embeddings[p_i].copy()
+                       if self.index.quantized or self.durable_embeddings
+                       else None)
+                docs.append(Document(doc_id, requests[p_i], responses[p_i],
+                                     created_at, categories[p_i],
+                                     metas[p_i] or {}, embedding=emb))
+            self.store.put_many(docs)
+            order = [p_i for p_i, _, _ in pending]
+            # The index owns the category table (slot_category aliases it).
+            slots = self.index.add_batch(
+                embeddings[order],
+                np.asarray([cid for _, cid, _ in pending], np.int32))
+            for (p_i, _, _), slot, doc in zip(pending, slots, docs):
+                slot = int(slot)
+                self.slot_inserted[slot] = now
+                self.slot_hits[slot] = 0
+                self.slot_doc[slot] = doc.doc_id
+                self.slot_valid[slot] = True
+                self.metrics.cat(categories[p_i]).inserts += 1
+                slots_out[p_i] = slot
+            return slots_out
 
     # ---------------------------------------------------------------- migration
     def adopt_entries(self, embeddings: np.ndarray,
@@ -790,6 +844,10 @@ class SemanticCache:
     def _evict_slot(self, slot: int, reason: str = "") -> None:
         if not self.slot_valid[slot]:
             return
+        if self.obs is not None:
+            self._event("eviction", reason=reason,
+                        category=self._cat_names.get(
+                            int(self.slot_category[slot]), "?"))
         self.index.remove(slot)   # also resets the (aliased) category entry
         doc_id = int(self.slot_doc[slot])
         self.store.delete(doc_id)

@@ -120,10 +120,14 @@ class FaultInjector:
     """
 
     def __init__(self, schedule: FaultSchedule | None = None,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None, obs=None):
         self.schedule = schedule or FaultSchedule()
         self.clock = clock or SimClock()
         self.active = not self.schedule.empty
+        # Optional TraceRecorder (repro.obs): injected faults land on
+        # the event stream so a degraded window is explainable. Never
+        # consulted when the schedule is inert.
+        self.obs = obs
         self._store_ops = {"get": 0, "put": 0, "delete": 0}
         self._visits: dict[str, int] = {}
         self._crashed: set[str] = set()
@@ -158,6 +162,8 @@ class FaultInjector:
             fails = self.schedule.store_put_failures
         if idx in fails:
             self.injected["store_faults"] += 1
+            if self.obs is not None:
+                self.obs.event("injected_store_fault", op=op, op_index=idx)
             raise TransientStoreError(f"injected {op} fault (op {idx})")
 
     # -- crash points ----------------------------------------------------------
@@ -175,6 +181,8 @@ class FaultInjector:
         if target is not None and visit == target:
             self._crashed.add(site)
             self.injected["crashes"] += 1
+            if self.obs is not None:
+                self.obs.event("injected_crash", site=site, visit=visit)
             raise InjectedCrash(site, visit)
 
     def visits(self, site: str) -> int:

@@ -63,7 +63,11 @@ class CategoryStats:
 
     @property
     def mean_latency_ms(self) -> float:
-        return self.latency_ms_sum / self.lookups if self.lookups else 0.0
+        """Mean over lookups the cache actually SERVED — the same
+        denominator as ``hit_rate``: degraded lookups never reached the
+        cache, so no latency was charged to them here."""
+        served = self.lookups - self.degraded_misses
+        return self.latency_ms_sum / served if served else 0.0
 
     def to_dict(self) -> dict:
         return {
@@ -89,6 +93,31 @@ class CategoryStats:
         }
 
 
+#: Fields summed when aggregating CategoryStats across categories.
+_SUM_FIELDS = tuple(CategoryStats.__dataclass_fields__)
+
+
+def overall_stats(per_category: dict[str, CategoryStats]) -> CategoryStats:
+    """Sum every counter field across categories; the derived
+    properties (hit_rate, availability, mean_latency_ms) then hold the
+    fleet-wide values for free."""
+    out = CategoryStats()
+    for st in per_category.values():
+        for f in _SUM_FIELDS:
+            setattr(out, f, getattr(out, f) + getattr(st, f))
+    return out
+
+
+def overall_row(per_category: dict[str, CategoryStats]) -> dict:
+    """The ``"_overall"`` snapshot entry: a summed ``to_dict()`` plus
+    ``availability`` (rates are recomputed from the summed counters,
+    NOT averaged across categories)."""
+    ov = overall_stats(per_category)
+    row = ov.to_dict()
+    row["availability"] = round(ov.availability, 4)
+    return row
+
+
 @dataclass
 class MetricsRegistry:
     per_category: dict[str, CategoryStats] = field(default_factory=dict)
@@ -104,4 +133,9 @@ class MetricsRegistry:
         return hits / lookups if lookups else 0.0
 
     def snapshot(self) -> dict:
-        return {k: v.to_dict() for k, v in sorted(self.per_category.items())}
+        """Per-category rows plus an ``"_overall"`` aggregate row
+        (sorted first by the ``_`` prefix; skip keys starting with
+        ``_`` when iterating categories)."""
+        snap = {k: v.to_dict() for k, v in sorted(self.per_category.items())}
+        snap["_overall"] = overall_row(self.per_category)
+        return snap

@@ -116,8 +116,9 @@ from repro.core.clock import Clock, SimClock
 from repro.core.economics import ResidencyModel
 from repro.core.faults import FaultInjector
 from repro.core.hnsw import INVALID
-from repro.core.metrics import CategoryStats
+from repro.core.metrics import CategoryStats, overall_row
 from repro.core.policy import PolicyEngine
+from repro.obs.trace import NULL_SPAN
 
 
 def crc32_shard(category: str, n_shards: int) -> int:
@@ -338,8 +339,12 @@ class ShardedMetrics:
         return hits / lookups if lookups else 0.0
 
     def snapshot(self) -> dict:
-        return {k: v.to_dict()
-                for k, v in sorted(self.per_category.items())}
+        """Per-category rows plus the ``"_overall"`` aggregate row
+        (same contract as ``MetricsRegistry.snapshot``)."""
+        per = self.per_category
+        snap = {k: v.to_dict() for k, v in sorted(per.items())}
+        snap["_overall"] = overall_row(per)
+        return snap
 
     def slo_report(self) -> dict:
         """Per-category availability SLO view: the degraded fraction of
@@ -466,6 +471,8 @@ class CategoryMigration:
     def _journal(self, entry: str) -> None:
         if entry not in self.journal:
             self.journal.append(entry)
+            self.parent._event("migration_step", category=self.category,
+                               step=entry, src=self.src_id, dst=self.dst_id)
 
     def _cp(self) -> None:
         faults = getattr(self.parent, "faults", None)
@@ -491,43 +498,47 @@ class CategoryMigration:
         if self.done:
             return 0
         self._cp()      # a drain-batch boundary
-        src, dst = self._ends()
-        slots = self._pending()[:max_entries or self.batch_size]
-        if slots.size == 0:
-            return 0
-        docs, keep = [], []
-        for s in slots:
-            doc = src.store.get(int(src.slot_doc[s]))
-            if doc is None:     # store lost the doc: drop at the source too
-                src._evict_slot(int(s), reason="missing_doc")
-                continue
-            docs.append(doc)
-            keep.append(int(s))
-        if not keep:
-            return 0
-        slots = np.asarray(keep, np.int64)
-        rows = src.index.export_rows(slots)
-        try:
-            adopted = dst.adopt_entries(rows["emb"],
-                                        [self.category] * len(keep),
-                                        rows["inserted"],
-                                        src.slot_hits[slots], docs)
-        except RuntimeError:
-            # Target out of physical slots (adopt_entries checks before
-            # mutating anything): undo the drain so the source stays
-            # authoritative and the migration is retryable after space
-            # frees up or with a bigger shard_capacity.
-            self.abort()
-            raise
-        # The adopt→registry window: a crash HERE leaves copies on the
-        # target that _copied doesn't know about (orphans). Pre-flip
-        # they are invisible to traffic (routing still points at the
-        # source); recover() sweeps or purges them.
-        self._cp()
-        for s, (dst_slot, dst_doc) in zip(slots, adopted):
-            self._copied[int(src.slot_doc[s])] = (dst_slot, dst_doc)
-        self.moved += len(keep)
-        return len(keep)
+        # Span "migration_copy": one drain batch — the source store gets
+        # plus the target's adopt (store put_many) charge inside it.
+        with self.parent._span("migration_copy", category=self.category,
+                               src=self.src_id, dst=self.dst_id):
+            src, dst = self._ends()
+            slots = self._pending()[:max_entries or self.batch_size]
+            if slots.size == 0:
+                return 0
+            docs, keep = [], []
+            for s in slots:
+                doc = src.store.get(int(src.slot_doc[s]))
+                if doc is None:  # store lost the doc: drop at the source too
+                    src._evict_slot(int(s), reason="missing_doc")
+                    continue
+                docs.append(doc)
+                keep.append(int(s))
+            if not keep:
+                return 0
+            slots = np.asarray(keep, np.int64)
+            rows = src.index.export_rows(slots)
+            try:
+                adopted = dst.adopt_entries(rows["emb"],
+                                            [self.category] * len(keep),
+                                            rows["inserted"],
+                                            src.slot_hits[slots], docs)
+            except RuntimeError:
+                # Target out of physical slots (adopt_entries checks before
+                # mutating anything): undo the drain so the source stays
+                # authoritative and the migration is retryable after space
+                # frees up or with a bigger shard_capacity.
+                self.abort()
+                raise
+            # The adopt→registry window: a crash HERE leaves copies on the
+            # target that _copied doesn't know about (orphans). Pre-flip
+            # they are invisible to traffic (routing still points at the
+            # source); recover() sweeps or purges them.
+            self._cp()
+            for s, (dst_slot, dst_doc) in zip(slots, adopted):
+                self._copied[int(src.slot_doc[s])] = (dst_slot, dst_doc)
+            self.moved += len(keep)
+            return len(keep)
 
     def remaining(self) -> int:
         return int(self._pending().size)
@@ -738,6 +749,8 @@ class OutageRebalance:
     def _journal(self, entry: str) -> None:
         if entry not in self.journal:
             self.journal.append(entry)
+            self.parent._event("rebalance_step", category=self.category,
+                               step=entry, src=self.src_id, dst=self.dst_id)
 
     def _cp(self) -> None:
         faults = getattr(self.parent, "faults", None)
@@ -761,22 +774,26 @@ class OutageRebalance:
         skipped — the entry is lost to the outage, not corrupted."""
         src, dst = (self.parent.shards[self.src_id],
                     self.parent.shards[self.dst_id])
-        for s in dst.category_slots(self.category):
-            dst._evict_slot(int(s), reason="outage_rebuild_sweep")
-        self._cp()
-        docs = [d for d in src.store.scan(self.category)
-                if d.embedding is not None]
-        t0 = self.parent._t0
-        for lo in range(0, len(docs), self.batch_size):
-            chunk = docs[lo:lo + self.batch_size]
-            embs = np.stack([d.embedding_array() for d in chunk])
-            inserted = np.asarray([d.created_at - t0 for d in chunk],
-                                  np.float64)
-            hits = np.zeros(len(chunk), np.int64)
-            dst.adopt_entries(embs, [self.category] * len(chunk),
-                              inserted, hits, chunk)
-            self.moved += len(chunk)
+        # Span "rebalance_rebuild": the store scan + adopt batches — the
+        # only store charges the rebuild can incur land inside it.
+        with self.parent._span("rebalance_rebuild", category=self.category,
+                               src=self.src_id, dst=self.dst_id):
+            for s in dst.category_slots(self.category):
+                dst._evict_slot(int(s), reason="outage_rebuild_sweep")
             self._cp()
+            docs = [d for d in src.store.scan(self.category)
+                    if d.embedding is not None]
+            t0 = self.parent._t0
+            for lo in range(0, len(docs), self.batch_size):
+                chunk = docs[lo:lo + self.batch_size]
+                embs = np.stack([d.embedding_array() for d in chunk])
+                inserted = np.asarray([d.created_at - t0 for d in chunk],
+                                      np.float64)
+                hits = np.zeros(len(chunk), np.int64)
+                dst.adopt_entries(embs, [self.category] * len(chunk),
+                                  inserted, hits, chunk)
+                self.moved += len(chunk)
+                self._cp()
         self._journal("rebuild")
 
     def _wb_drain(self) -> None:
@@ -886,8 +903,15 @@ class ShardedSemanticCache:
                  faults: FaultInjector | None = None,
                  write_behind_capacity: int = 1024,
                  replication: dict[str, int] | float | None = None,
-                 rebalance_after_s: float | None = None):
+                 rebalance_after_s: float | None = None,
+                 obs=None):
         self.policies = policies
+        # Observability (repro.obs.TraceRecorder or None): the front
+        # door records with shard=-1, each shard with its own id; all
+        # shards share this recorder so shard spans nest inside the
+        # front door's root span.
+        self.obs = obs
+        self._obs_shard = -1
         # Fault wiring: an absent (or inert — empty schedule) injector
         # makes every degraded-mode hook a no-op, keeping this cache
         # bit-identical to the pre-fault-injection behavior.
@@ -929,7 +953,8 @@ class ShardedSemanticCache:
                           # embeddings per doc so OutageRebalance can
                           # rebuild a dead shard's resident set from the
                           # store alone.
-                          durable_embeddings=(faults is not None))
+                          durable_embeddings=(faults is not None),
+                          obs=obs, obs_shard=i)
             for i in range(self.n_shards)]
         # One shared cache-relative time origin: inserted timestamps are
         # directly transferable between shards (migration preserves them).
@@ -981,6 +1006,18 @@ class ShardedSemanticCache:
         # (INVALID when degraded) — the determinism property tests
         # compare this byte-for-byte across runs.
         self.last_read_shards: list[int] = []
+
+    # ------------------------------------------------------------------ tracing
+    def _span(self, stage: str, **attrs):
+        """Front-door span (shard=-1) when a recorder is attached; the
+        shared no-op otherwise (empty-recorder parity)."""
+        if self.obs is None:
+            return NULL_SPAN
+        return self.obs.span(stage, shard=self._obs_shard, **attrs)
+
+    def _event(self, name: str, **fields) -> None:
+        if self.obs is not None:
+            self.obs.event(name, **fields)
 
     # ------------------------------------------------------------------ routing
     def shard_of(self, category: str) -> int:
@@ -1044,10 +1081,14 @@ class ShardedSemanticCache:
                 elif now > since:
                     self.metrics.cat(name).degraded_seconds += now - since
                     self._degraded_since[name] = now
+                    self._event("degraded_accrue", category=name,
+                                seconds=now - since)
             elif since is not None:
                 del self._degraded_since[name]
                 if now > since:
                     self.metrics.cat(name).degraded_seconds += now - since
+                    self._event("degraded_accrue", category=name,
+                                seconds=now - since)
 
     def _check_outages(self) -> None:
         """Outage lifecycle: track when each shard was first observed
@@ -1059,9 +1100,11 @@ class ShardedSemanticCache:
         now = self.clock.now()
         for si in range(self.n_shards):
             if self._shard_down(si):
-                self._down_since.setdefault(si, now)
-            else:
-                self._down_since.pop(si, None)
+                if si not in self._down_since:
+                    self._down_since[si] = now
+                    self._event("shard_down_observed", shard=si)
+            elif self._down_since.pop(si, None) is not None:
+                self._event("shard_up_observed", shard=si)
         if self.rebalance_after_s is not None:
             for si, since in sorted(self._down_since.items()):
                 if now - since >= self.rebalance_after_s:
@@ -1105,7 +1148,9 @@ class ShardedSemanticCache:
                       else (lambda s: s))
             reb = OutageRebalance(self, cat, si, dst)
             self._migrations[cat] = reb
-            reb.run()
+            with self._span("outage_rebalance", category=cat,
+                            src=si, dst=dst):
+                reb.run()
 
     def _maybe_replay(self) -> None:
         """FIFO-replay each recovered shard's write-behind queue, item
@@ -1137,6 +1182,8 @@ class ShardedSemanticCache:
                     self.faults.crash_point("wb_replay")
                     q.popleft()
                     self.fault_stats["wb_replayed"] += 1
+                    self._event("wb_replay", shard=si, wb_id=it.wb_id,
+                                category=it.category, mode=it.mode)
         finally:
             self._replaying = False
 
@@ -1185,11 +1232,14 @@ class ShardedSemanticCache:
         q = self._write_behind[si]
         if len(q) >= self.write_behind_capacity:
             self.fault_stats["wb_dropped"] += 1
+            self._event("wb_drop", shard=si, category=category)
             return False
         self._next_wb_id += 1
         q.append(_WbItem(self._next_wb_id, mode, uid, emb.copy(), category,
                          request, response, meta, self.clock.now()))
         self.fault_stats["wb_enqueued"] += 1
+        self._event("wb_enqueue", shard=si, category=category,
+                    wb_id=self._next_wb_id, mode=mode)
         return True
 
     # ------------------------------------------------------------- replication
@@ -1246,6 +1296,7 @@ class ShardedSemanticCache:
                 osh.slot_hits[oslot] = h
             elif not self._shard_down(sj):
                 self.fault_stats["replica_divergence"] += 1
+                self._event("replica_divergence", shard=sj, uid=uid)
                 del ent[sj]
                 self._rep_uid_of.pop((sj, odoc), None)
 
@@ -1314,42 +1365,59 @@ class ShardedSemanticCache:
         ``failover_reads``); a lookup is degraded only when NO replica
         is live."""
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        # Fault hooks run BEFORE the root span opens: write-behind
+        # replay and outage rebalancing re-enter the write path and
+        # record their own root spans, not children of this lookup.
+        self._fault_hooks()
+        with self._span("lookup", batch=int(embeddings.shape[0])):
+            return self._lookup_batch_impl(embeddings, categories)
+
+    def _lookup_batch_impl(self, embeddings: np.ndarray,
+                           categories: Sequence[str]) -> list[CacheResult]:
         B = embeddings.shape[0]
         assert len(categories) == B
-        self._fault_hooks()
         results: list[CacheResult] = [None] * B  # type: ignore[list-item]
         read_shards = [INVALID] * B
         per_shard: dict[int, list[int]] = {}
         degraded: dict[int, list[int]] = {}
         replicated: set[int] = set()
-        for i, c in enumerate(categories):
-            reps = self.replica_set(c)
-            if len(reps) == 1:
-                s0 = reps[0]
-                if self._shard_down(s0):
-                    degraded.setdefault(s0, []).append(i)
-                else:
-                    per_shard.setdefault(s0, []).append(i)
-                    read_shards[i] = s0
-                continue
-            # Deterministic round-robin read routing: the per-category
-            # cursor advances on EVERY lookup (served or not), so the
-            # assignment stream is a pure function of the request
-            # stream + schedule — the determinism property tests
-            # compare it byte-for-byte across runs.
-            rr = self._rr.get(c, 0)
-            self._rr[c] = rr + 1
-            k = rr % len(reps)
-            order = reps[k:] + reps[:k]
-            si = next((s for s in order if not self._shard_down(s)), None)
-            if si is None:
-                degraded.setdefault(reps[0], []).append(i)
-                continue
-            if si != order[0]:
-                self.fault_stats["failover_reads"] += 1
-            replicated.add(i)
-            read_shards[i] = si
-            per_shard.setdefault(si, []).append(i)
+        # Span "route": shard routing + replica pick/failover for the
+        # whole batch (no clock charge — routing is control-plane).
+        with self._span("route", batch=B) as rsp:
+            failovers = 0
+            for i, c in enumerate(categories):
+                reps = self.replica_set(c)
+                if len(reps) == 1:
+                    s0 = reps[0]
+                    if self._shard_down(s0):
+                        degraded.setdefault(s0, []).append(i)
+                    else:
+                        per_shard.setdefault(s0, []).append(i)
+                        read_shards[i] = s0
+                    continue
+                # Deterministic round-robin read routing: the per-category
+                # cursor advances on EVERY lookup (served or not), so the
+                # assignment stream is a pure function of the request
+                # stream + schedule — the determinism property tests
+                # compare it byte-for-byte across runs.
+                rr = self._rr.get(c, 0)
+                self._rr[c] = rr + 1
+                k = rr % len(reps)
+                order = reps[k:] + reps[:k]
+                si = next((s for s in order if not self._shard_down(s)), None)
+                if si is None:
+                    degraded.setdefault(reps[0], []).append(i)
+                    continue
+                if si != order[0]:
+                    self.fault_stats["failover_reads"] += 1
+                    failovers += 1
+                    self._event("failover_read", category=c,
+                                primary=order[0], served_by=si)
+                replicated.add(i)
+                read_shards[i] = si
+                per_shard.setdefault(si, []).append(i)
+            rsp.set(failovers=failovers,
+                    degraded=sum(len(v) for v in degraded.values()))
         agg = {"batch": 0, "hops": 0, "rows_gathered": 0,
                "gathered_bytes": 0, "reranks": 0, "degraded": 0,
                "per_shard": {}}
@@ -1374,6 +1442,7 @@ class ShardedSemanticCache:
                     continue
                 st.degraded_misses += 1
                 self.fault_stats["degraded_misses"] += 1
+                self._event("degraded_miss", category=c, shard=si)
                 agg["degraded"] += 1
                 any_active = True
                 results[i] = CacheResult(False, category=c,
@@ -1405,7 +1474,10 @@ class ShardedSemanticCache:
         # Mirrors the single cache: a batch that is 100 % compliance-
         # rejected never reaches the index and costs no search time.
         if any_active:
-            self.clock.advance(self.search_ms / 1e3)
+            # The front door owns the ONE fan-out search charge (shards
+            # run with search_ms=0); span "search" at shard=-1 carries it.
+            with self._span("search", batch=B):
+                self.clock.advance(self.search_ms / 1e3)
         self.last_lookup_stats = agg if any_active else {}
         return results
 
@@ -1430,65 +1502,79 @@ class ShardedSemanticCache:
         if not (len(categories) == len(requests) == len(responses)
                 == len(metas) == B):
             raise ValueError("insert_batch: ragged batch")
+        # Fault hooks run BEFORE the root span opens (see lookup_batch).
         self._fault_hooks()
-        # One write-round clock charge iff anything is admissible —
-        # matching the single cache, whose advance sits behind the
-        # compliance gate.
-        eff = {c: self.policies.effective(c)
-               for c in dict.fromkeys(categories)}
-        if any(eff[c].allow_caching and eff[c].quota > 0.0
-               for c in categories):
-            self.clock.advance(self.insert_ms / 1e3)
+        with self._span("insert", batch=B):
+            return self._insert_batch_impl(embeddings, categories,
+                                           requests, responses, metas)
+
+    def _insert_batch_impl(self, embeddings, categories, requests,
+                           responses, metas) -> list[int]:
+        B = embeddings.shape[0]
         slots_out = [INVALID] * B
         agg = {"batch": B, "admitted": 0, "admission_skips": 0,
                "insert_rejects": 0, "per_shard": {}}
         per_shard: dict[int, list[int]] = {}
         rep_batches: dict[int, list[tuple[int, int]]] = {}  # si -> [(i, uid)]
         rep_primary: dict[int, int] = {}                    # i  -> primary
-        for i, c in enumerate(categories):
-            mig = self._migrations.get(c)
-            if mig is not None and mig.fenced:
-                # Cutover write fence: the write queues on the migration
-                # (acknowledged — INVALID slot, like any deferred write)
-                # and replays to whichever shard owns the category once
-                # the fence drops. Non-cacheable traffic short-circuits
-                # as usual; the fence only defers writes that would land.
+        # Span "route": the one write-round charge plus fence/replica/
+        # write-behind partitioning of the batch.
+        with self._span("route", batch=B):
+            # One write-round clock charge iff anything is admissible —
+            # matching the single cache, whose advance sits behind the
+            # compliance gate.
+            eff = {c: self.policies.effective(c)
+                   for c in dict.fromkeys(categories)}
+            if any(eff[c].allow_caching and eff[c].quota > 0.0
+                   for c in categories):
+                self.clock.advance(self.insert_ms / 1e3)
+            for i, c in enumerate(categories):
+                mig = self._migrations.get(c)
+                if mig is not None and mig.fenced:
+                    # Cutover write fence: the write queues on the migration
+                    # (acknowledged — INVALID slot, like any deferred write)
+                    # and replays to whichever shard owns the category once
+                    # the fence drops. Non-cacheable traffic short-circuits
+                    # as usual; the fence only defers writes that would land.
+                    e = eff[c]
+                    if not e.allow_caching or e.quota <= 0.0:
+                        self.metrics.cat(c).insert_rejects += 1
+                        agg["insert_rejects"] += 1
+                        continue
+                    if len(mig.fence_queue) >= self.write_behind_capacity:
+                        self.fault_stats["fence_dropped"] += 1
+                        self._event("fence_drop", category=c)
+                        continue
+                    mig.fence_queue.append((embeddings[i].copy(),
+                                            requests[i], responses[i],
+                                            metas[i]))
+                    self.fault_stats["fenced_writes"] += 1
+                    self._event("fenced_write", category=c)
+                    continue
+                reps = self.replica_set(c)
+                if len(reps) == 1:
+                    per_shard.setdefault(reps[0], []).append(i)
+                    continue
+                # Replicated write fan-out: compliance is decided ONCE at
+                # the front door (the per-shard path would count the reject
+                # on every replica), then every LIVE replica gets the write
+                # in this same batched round; down replicas get a replica-
+                # mode write-behind item that catches them up directly on
+                # recovery (their siblings already applied the write).
                 e = eff[c]
                 if not e.allow_caching or e.quota <= 0.0:
                     self.metrics.cat(c).insert_rejects += 1
                     agg["insert_rejects"] += 1
                     continue
-                if len(mig.fence_queue) >= self.write_behind_capacity:
-                    self.fault_stats["fence_dropped"] += 1
-                    continue
-                mig.fence_queue.append((embeddings[i].copy(), requests[i],
-                                        responses[i], metas[i]))
-                self.fault_stats["fenced_writes"] += 1
-                continue
-            reps = self.replica_set(c)
-            if len(reps) == 1:
-                per_shard.setdefault(reps[0], []).append(i)
-                continue
-            # Replicated write fan-out: compliance is decided ONCE at
-            # the front door (the per-shard path would count the reject
-            # on every replica), then every LIVE replica gets the write
-            # in this same batched round; down replicas get a replica-
-            # mode write-behind item that catches them up directly on
-            # recovery (their siblings already applied the write).
-            e = eff[c]
-            if not e.allow_caching or e.quota <= 0.0:
-                self.metrics.cat(c).insert_rejects += 1
-                agg["insert_rejects"] += 1
-                continue
-            uid = self._mint_uid()
-            rep_primary[i] = reps[0]
-            for sj in reps:
-                if self._shard_down(sj):
-                    self._wb_enqueue(sj, embeddings[i], c, requests[i],
-                                     responses[i], metas[i],
-                                     mode="replica", uid=uid)
-                else:
-                    rep_batches.setdefault(sj, []).append((i, uid))
+                uid = self._mint_uid()
+                rep_primary[i] = reps[0]
+                for sj in reps:
+                    if self._shard_down(sj):
+                        self._wb_enqueue(sj, embeddings[i], c, requests[i],
+                                         responses[i], metas[i],
+                                         mode="replica", uid=uid)
+                    else:
+                        rep_batches.setdefault(sj, []).append((i, uid))
         for si in sorted(per_shard):
             idxs = per_shard[si]
             if self._shard_down(si):
@@ -1583,7 +1669,9 @@ class ShardedSemanticCache:
         mig = CategoryMigration(self, category, src, target, batch_size)
         self._migrations[category] = mig
         if not stepwise:
-            mig.run()
+            with self._span("migration", category=category,
+                            src=src, dst=target):
+                mig.run()
         return mig
 
     def rebalance(self, quotas: dict[str, float] | None = None) -> dict:

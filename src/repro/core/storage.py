@@ -213,25 +213,25 @@ class LatencyModelStore(DocumentStore):
         self.delete_ms = delete_ms
 
     def put(self, doc: Document) -> None:
-        self.clock.advance(self.put_ms / 1e3)
+        self.clock.advance(self.put_ms / 1e3)   # span-ok: caller-owned span
         self.inner.put(doc)
 
     def put_many(self, docs: list[Document]) -> None:
         # one batched round trip, not one per document
-        self.clock.advance(self.put_ms / 1e3)
+        self.clock.advance(self.put_ms / 1e3)   # span-ok: caller-owned span
         self.inner.put_many(docs)
 
     def get(self, doc_id: int) -> Document | None:
-        self.clock.advance(self.get_ms / 1e3)
+        self.clock.advance(self.get_ms / 1e3)   # span-ok: caller-owned span
         return self.inner.get(doc_id)
 
     def delete(self, doc_id: int) -> None:
-        self.clock.advance(self.delete_ms / 1e3)
+        self.clock.advance(self.delete_ms / 1e3)  # span-ok: caller-owned span
         self.inner.delete(doc_id)
 
     def scan(self, category: str | None = None) -> list[Document]:
         # one bulk round trip, not one per document
-        self.clock.advance(self.get_ms / 1e3)
+        self.clock.advance(self.get_ms / 1e3)   # span-ok: caller-owned span
         return self.inner.scan(category)
 
     def __len__(self) -> int:
@@ -302,12 +302,16 @@ class RetryingStore(DocumentStore):
 
     def __init__(self, inner: DocumentStore, clock: Clock | None = None,
                  retries: int = 3, backoff_ms: float = 1.0,
-                 budget_ms: float = 50.0):
+                 budget_ms: float = 50.0, obs=None):
         self.inner = inner
         self.clock = clock or SimClock()
         self.retries = int(retries)
         self.backoff_ms = float(backoff_ms)
         self.budget_ms = float(budget_ms)
+        # Optional TraceRecorder: retries/timeouts land on the event
+        # stream; the backoff charge itself is timed by whichever span
+        # the caller has open (store_fetch / write / migration_copy).
+        self.obs = obs
         self.stats = {"get_retries": 0, "put_retries": 0,
                       "delete_retries": 0, "get_timeouts": 0,
                       "put_timeouts": 0, "delete_timeouts": 0,
@@ -327,8 +331,13 @@ class RetryingStore(DocumentStore):
                 spent += wait
                 self.stats[f"{op}_retries"] += 1
                 self.stats["backoff_ms_charged"] += wait
-                self.clock.advance(wait / 1e3)
+                if self.obs is not None:
+                    self.obs.event("store_retry", op=op, attempt=attempt,
+                                   wait_ms=wait)
+                self.clock.advance(wait / 1e3)  # span-ok: caller-owned span
         self.stats[f"{op}_timeouts"] += 1
+        if self.obs is not None:
+            self.obs.event("store_timeout_raised", op=op)
         raise StoreTimeout(op) from last
 
     def put(self, doc: Document) -> None:
@@ -387,12 +396,12 @@ class VectorDBEmulator:
 
     def query(self, emb: np.ndarray) -> Document | None:
         """Remote search → post-search threshold → fetch → server TTL check."""
-        self.clock.advance(self.search_ms / 1e3)          # paid hit OR miss
+        self.clock.advance(self.search_ms / 1e3)  # span-ok: untraced baseline
         idx, score = self.index.search_host(emb[None, :], np.array([-np.inf]))
         slot, score = int(idx[0]), float(score[0])
         if slot < 0 or score < self.collection_threshold:  # §4.1 post-search
             return None
-        self.clock.advance(self.fetch_ms / 1e3)           # fetch BEFORE TTL
+        self.clock.advance(self.fetch_ms / 1e3)   # span-ok: untraced baseline
         doc_id = self.slot_doc[slot]
         if self.clock.now() - self.created[slot] > self.collection_ttl:  # §4.3
             self._evict(slot)
@@ -400,7 +409,7 @@ class VectorDBEmulator:
         return self.docs.get(doc_id)
 
     def insert(self, emb: np.ndarray, doc: Document) -> None:
-        self.clock.advance(self.insert_ms / 1e3)
+        self.clock.advance(self.insert_ms / 1e3)  # span-ok: untraced baseline
         if len(self.index) >= self.index.capacity:
             oldest = min(self.created, key=self.created.get)
             self._evict(oldest)

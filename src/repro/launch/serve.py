@@ -25,6 +25,8 @@ from repro.core.policy import AdaptiveController, PolicyEngine, \
     paper_policies
 from repro.core.workload import TABLE1_WORKLOAD, WorkloadGenerator
 from repro.models.model import Model
+from repro.obs import (TraceRecorder, coverage_fraction, prometheus_text,
+                       span_accounting, telemetry_report)
 from repro.serving.engine import ServingEngine
 
 
@@ -55,15 +57,25 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
                 index_kind: str = "flat", use_device: bool = False,
                 emb_dtype: str = "float32", n_shards: int = 1,
                 replicas: dict[str, int] | float | None = None,
+                telemetry: bool = False,
+                telemetry_jsonl: str | None = None,
+                telemetry_prom: str | None = None,
                 log=print) -> dict:
     model = Model(cfg)
     params = model.init_params(jax.random.key(seed))
     controller = AdaptiveController()
     policies = PolicyEngine(paper_policies(), controller=controller)
 
-    kw = dict(capacity=max(4096, n_requests), clock=WallClock(),
+    # One WallClock shared by the cache and the recorder so span
+    # timestamps and cache timestamps are the same timeline. Under a
+    # wall clock span accounting reports leaf coverage, not equality.
+    clock = WallClock()
+    trace = telemetry or telemetry_jsonl is not None \
+        or telemetry_prom is not None
+    obs = TraceRecorder(clock) if trace else None
+    kw = dict(capacity=max(4096, n_requests), clock=clock,
               index_kind=index_kind, use_device=use_device,
-              l1_capacity=256, emb_dtype=emb_dtype)
+              l1_capacity=256, emb_dtype=emb_dtype, obs=obs)
     cache = (ShardedSemanticCache(policies, n_shards=n_shards,
                                   replication=replicas, **kw)
              if n_shards > 1 else SemanticCache(policies, **kw))
@@ -74,7 +86,7 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
     engine = ServingEngine(model, params, cache, max_batch=max_batch,
                            prompt_len=prompt_len,
                            max_new_tokens=max_new_tokens,
-                           controller=controller)
+                           controller=controller, obs=obs)
 
     gen = WorkloadGenerator(TABLE1_WORKLOAD, rate_per_s=1e9, seed=seed)
     queries = gen.generate(n_requests)
@@ -122,13 +134,37 @@ def run_serving(cfg, *, n_requests: int, cache_kind: str = "hybrid",
                 f"{fs['failover_reads']} failover reads, "
                 f"{fs['replica_divergence']} divergence events, "
                 f"{fs['outage_rebalances']} outage rebalances")
+    snap = cache.metrics.snapshot()
+    ov = snap["_overall"]
+    log(f"[serve] overall: hit_rate={ov['hit_rate']:.3f}, "
+        f"availability={ov.get('availability', 1.0):.3f}, "
+        f"{ov['inserts']} inserts, "
+        f"{ov['ttl_evictions'] + ov['quota_evictions'] + ov['capacity_evictions']}"
+        f" evictions")
+    tele = None
+    if obs is not None:
+        acct = span_accounting(obs)
+        tele = {"spans": acct["spans"], "roots": acct["roots"],
+                "opened": acct["opened"], "closed": acct["closed"],
+                "leaf_coverage": round(coverage_fraction(obs), 4),
+                "events": obs.event_counts()}
+        if telemetry:
+            log(telemetry_report(obs, snapshot=snap))
+        if telemetry_jsonl:
+            n_lines = obs.to_jsonl(telemetry_jsonl)
+            log(f"[serve] trace: {n_lines} JSONL lines -> {telemetry_jsonl}")
+        if telemetry_prom:
+            with open(telemetry_prom, "w") as f:
+                f.write(prometheus_text(snapshot=snap, rec=obs))
+            log(f"[serve] metrics exposition -> {telemetry_prom}")
     return {"served": st.served, "hit_rate": st.hit_rate,
             "model_tokens": st.model_tokens, "wall_s": wall,
             "search_hops": st.search_hops,
             "rows_gathered": st.rows_gathered,
             "n_shards": n_shards,
-            "per_category": cache.metrics.snapshot(),
+            "per_category": snap,
             "replica_sets": replica_sets,
+            "telemetry": tele,
             "index_sync": dict(sync) if sync is not None else None}
 
 
@@ -162,6 +198,17 @@ def main():
                          "at/above it get 2 replicas) or an explicit "
                          "cat=k[,cat=k...] map; the report adds replica-"
                          "set, failover and divergence lines")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="wire a TraceRecorder through the stack and "
+                         "print the telemetry report (span accounting, "
+                         "per-stage latency table, event counts)")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="PATH",
+                    help="dump the span/event trace as JSONL to PATH "
+                         "(implies tracing on)")
+    ap.add_argument("--telemetry-prom", default=None, metavar="PATH",
+                    help="write a Prometheus-style text exposition of "
+                         "counters + stage histograms to PATH "
+                         "(implies tracing on)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -171,7 +218,10 @@ def main():
                 max_batch=args.max_batch, index_kind=args.index,
                 use_device=args.use_device, emb_dtype=args.emb_dtype,
                 n_shards=args.shards,
-                replicas=parse_replicas(args.replicas))
+                replicas=parse_replicas(args.replicas),
+                telemetry=args.telemetry,
+                telemetry_jsonl=args.telemetry_jsonl,
+                telemetry_prom=args.telemetry_prom)
 
 
 if __name__ == "__main__":

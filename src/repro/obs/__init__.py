@@ -1,0 +1,18 @@
+"""Deterministic observability: Clock-timed spans, fixed-bucket
+latency histograms, a structured event stream and export surfaces.
+
+See ``docs/ARCHITECTURE.md`` ("Observability") for the span taxonomy
+and the empty-recorder parity contract.
+"""
+
+from repro.obs.export import prometheus_text, telemetry_report
+from repro.obs.hist import HistogramSet, LatencyHistogram
+from repro.obs.trace import (NULL_SPAN, Event, Span, TraceRecorder,
+                             check_span_accounting, coverage_fraction,
+                             span_accounting)
+
+__all__ = [
+    "Event", "HistogramSet", "LatencyHistogram", "NULL_SPAN", "Span",
+    "TraceRecorder", "check_span_accounting", "coverage_fraction",
+    "prometheus_text", "span_accounting", "telemetry_report",
+]

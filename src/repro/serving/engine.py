@@ -34,6 +34,7 @@ from repro.core.policy import AdaptiveController, LoadSignal
 from repro.core.shard import ShardedSemanticCache
 from repro.distributed.fault import StepWatchdog
 from repro.models.model import Model
+from repro.obs import NULL_SPAN
 
 
 @dataclass
@@ -98,10 +99,17 @@ class ServingEngine:
                  max_new_tokens: int = 16,
                  controller: AdaptiveController | None = None,
                  model_name: str = "default",
-                 watchdog: StepWatchdog | None = None):
+                 watchdog: StepWatchdog | None = None,
+                 obs=None):
         self.model = model
         self.params = params
         self.cache = cache
+        # Optional TraceRecorder (repro.obs). Share ONE recorder (and
+        # one WallClock) with the cache — launch/serve.py does this —
+        # so cache stage spans nest under the engine_step root. Wall
+        # time is not exhaustively charged, so span accounting reports
+        # leaf COVERAGE here, never equality (SimClock-only invariant).
+        self.obs = obs
         self.embedder = FeatureHashEmbedder()
         self.max_batch = max_batch
         self.prompt_len = prompt_len
@@ -140,6 +148,11 @@ class ServingEngine:
 
         self._generate = jax.jit(generate)
 
+    def _span(self, stage: str, **attrs):
+        if self.obs is None:
+            return NULL_SPAN
+        return self.obs.span(stage, **attrs)
+
     # ------------------------------------------------------------------ api
     def submit(self, text: str, category: str, prompt_tokens: np.ndarray,
                max_new_tokens: int | None = None) -> int:
@@ -156,12 +169,18 @@ class ServingEngine:
         """Serve one batch from the queue. Returns completed responses."""
         if not self.queue:
             return []
+        with self._span("engine_step", batch=min(len(self.queue),
+                                                 self.max_batch)):
+            return self._step_impl()
+
+    def _step_impl(self) -> list[Response]:
         self.watchdog.step_start()
         batch = self.queue[:self.max_batch]
         self.queue = self.queue[self.max_batch:]
         t0 = time.monotonic()
 
-        embs = self.embedder.embed_batch([r.text for r in batch])
+        with self._span("embed", batch=len(batch)):
+            embs = self.embedder.embed_batch([r.text for r in batch])
         results = self.cache.lookup_batch(embs, [r.category for r in batch])
         ls = self.cache.last_lookup_stats
         if ls:
@@ -188,7 +207,9 @@ class ServingEngine:
             for j, i in enumerate(misses):
                 p = batch[i].prompt_tokens[:self.prompt_len]
                 toks[j, :len(p)] = p
-            out = np.asarray(self._generate(self.params, jnp.asarray(toks)))
+            with self._span("model_generate", batch=len(misses)):
+                out = np.asarray(
+                    self._generate(self.params, jnp.asarray(toks)))
             texts = ["tok:" + ",".join(map(str, out[j]))
                      for j in range(len(misses))]
             # one batched write-back for every miss in this step

@@ -26,8 +26,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import numpy as np
-
 from repro.core.cache import SemanticCache
 from repro.core.clock import SimClock
 from repro.core.economics import ResidencyModel
@@ -38,6 +36,7 @@ from repro.core.shard import ShardedSemanticCache
 from repro.core.storage import (Document, FlakyStore, InMemoryStore,
                                 RetryingStore, VectorDBEmulator)
 from repro.core.workload import Query, WorkloadGenerator
+from repro.obs import NULL_SPAN, LatencyHistogram, TraceRecorder
 
 
 @dataclass
@@ -79,6 +78,13 @@ class SimConfig:
     rebalance_after_s: float | None = None
     store_budget_ms: float = 50.0       # per-op cumulative latency budget
     write_behind_capacity: int = 1024   # per-shard outage write queue
+    # deterministic tracing (repro.obs): wire a TraceRecorder through
+    # the whole stack (cache, shards, stores, injector). False keeps
+    # every component on the shared NULL_SPAN no-op path — counters and
+    # device bytes are bit-identical to the pre-tracing code (the
+    # bench_faults parity gate relies on it, same discipline as an
+    # absent FaultSchedule).
+    trace: bool = False
 
 
 @dataclass
@@ -110,6 +116,9 @@ class SimResult:
     # degraded_misses, store_timeouts, write-behind queue counters and
     # the injector's op/visit tallies. None when no injector is wired.
     fault_stats: dict | None = None
+    # SimConfig.trace only: the run's TraceRecorder (spans + events +
+    # per-stage histograms) for export / span-accounting checks.
+    trace: TraceRecorder | None = None
 
     def summary(self) -> dict:
         return {
@@ -136,6 +145,11 @@ class ServingSimulator:
         if self.controller is not None:
             self.policies.controller = self.controller
 
+        # One recorder shares the sim clock with every traced component;
+        # None threads the NULL_SPAN no-op path everywhere.
+        self.obs: TraceRecorder | None = \
+            TraceRecorder(self.clock) if sim.trace else None
+
         self.faults: FaultInjector | None = None
         self._retry_stores: list[RetryingStore] = []
         if sim.architecture == "hybrid":
@@ -143,7 +157,7 @@ class ServingSimulator:
                       index_kind=sim.index_kind, use_device=sim.use_device,
                       search_ms=sim.search_ms, insert_ms=sim.insert_ms,
                       l1_capacity=sim.l1_capacity, seed=sim.seed,
-                      eviction=sim.eviction)
+                      eviction=sim.eviction, obs=self.obs)
             if sim.fault_schedule is not None:
                 # Fault stack: one shared injector; every shard's doc
                 # store becomes RetryingStore(FlakyStore(InMemoryStore))
@@ -151,7 +165,8 @@ class ServingSimulator:
                 # wrapper absorbs bounded runs with Clock-charged
                 # backoff, exhaustion degrades the lookup (StoreTimeout
                 # handling in core/cache.py).
-                self.faults = FaultInjector(sim.fault_schedule, self.clock)
+                self.faults = FaultInjector(sim.fault_schedule, self.clock,
+                                            obs=self.obs)
 
                 def _store(_i: int) -> RetryingStore:
                     s = RetryingStore(FlakyStore(InMemoryStore(),
@@ -159,7 +174,8 @@ class ServingSimulator:
                                       clock=self.clock,
                                       retries=sim.store_retries,
                                       backoff_ms=sim.store_backoff_ms,
-                                      budget_ms=sim.store_budget_ms)
+                                      budget_ms=sim.store_budget_ms,
+                                      obs=self.obs)
                     self._retry_stores.append(s)
                     return s
 
@@ -195,10 +211,18 @@ class ServingSimulator:
         # response payload, consulted only when a hit's doc_id is
         # unknown — baseline (no-fault) accounting is untouched.
         self._truth_text: dict[tuple[str, str], tuple[int, int]] = {}
-        self._latencies: list[float] = []
+        # e2e latency: fixed-bucket log-scale histogram (no per-sample
+        # storage) — mean is exact (sum/count), quantiles are bucket
+        # midpoints (≤ half a bucket width of relative error).
+        self._lat_hist = LatencyHistogram()
         self._model_calls: dict[str, int] = {}
         self._traffic: dict[str, int] = {}
         self._cost = 0.0
+
+    def _span(self, stage: str, **attrs):
+        if self.obs is None:
+            return NULL_SPAN
+        return self.obs.span(stage, **attrs)
 
     # -- model serving -----------------------------------------------------
     def _alpha(self, model: str) -> float:
@@ -211,7 +235,9 @@ class ServingSimulator:
     def _call_model(self, q: Query) -> float:
         alpha = self._alpha(q.model_name)
         t_ms = q.t_llm_ms * alpha
-        self.clock.advance(t_ms / 1e3)
+        with self._span("model_call", category=q.category,
+                        model=q.model_name):
+            self.clock.advance(t_ms / 1e3)
         self._model_calls[q.model_name] = \
             self._model_calls.get(q.model_name, 0) + 1
         self._cost += q.cost_per_call
@@ -224,12 +250,20 @@ class ServingSimulator:
 
     # -- one query through the chosen stack ---------------------------------
     def _serve_hybrid(self, q: Query, gen: WorkloadGenerator) -> float:
+        # "serve" is the per-query root span: every Clock charge below
+        # it (cache stages, doc_fetch, model_call) lands inside a leaf
+        # span, so leaf-sum accounting closes exactly under SimClock.
+        with self._span("serve", category=q.category):
+            return self._serve_hybrid_impl(q, gen)
+
+    def _serve_hybrid_impl(self, q: Query, gen: WorkloadGenerator) -> float:
         t0 = self.clock.now()
         res = self.cache.lookup(q.embedding, q.category)
         st = self.metrics.cat(q.category)
         if res.hit:
             if res.reason != "hit_l1":
-                self.clock.advance(self._fetch_ms / 1e3)
+                with self._span("doc_fetch", category=q.category):
+                    self.clock.advance(self._fetch_ms / 1e3)
             truth = self._truth.get(res.doc_id)
             if truth is None and self.faults is not None:
                 truth = self._truth_text.get((q.category, res.response))
@@ -318,6 +352,7 @@ class ServingSimulator:
         for q in queries:
             # advance the sim clock to the arrival time if ahead
             if q.timestamp > self.clock.now():
+                # span-ok: inter-arrival idle, not a serving stage
                 self.clock.advance(q.timestamp - self.clock.now())
             self._traffic[q.model_name] = self._traffic.get(q.model_name, 0)
             if self.sim.architecture == "hybrid":
@@ -328,12 +363,13 @@ class ServingSimulator:
                 lat = self._serve_vdb(q, gen)
             else:
                 lat = self._serve_none(q)
-            self._latencies.append(lat)
+            self._lat_hist.observe(lat)
+            if self.obs is not None:
+                self.obs.observe_ms("e2e", lat, category=q.category)
             self.metrics.cat(q.category).latency_ms_sum += lat
             if self.sim.architecture != "hybrid":
                 pass
 
-        lat = np.asarray(self._latencies)
         reg = (self.cache.metrics if self.sim.architecture == "hybrid"
                else self.metrics)
         mean_resident = 0.0
@@ -380,11 +416,12 @@ class ServingSimulator:
                     for k, v in s.stats.items():
                         store[k] = store.get(k, 0) + v
                 fault_stats["store"] = store
+        h = self._lat_hist
         return SimResult(
             per_category=per_cat,
             overall_hit_rate=reg.overall_hit_rate(),
-            mean_latency_ms=float(lat.mean()) if len(lat) else 0.0,
-            p95_latency_ms=float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            mean_latency_ms=h.mean_ms,
+            p95_latency_ms=h.quantile(0.95),
             model_calls=dict(self._model_calls),
             model_cost=self._cost,
             stale_served=sum(d.get("stale_served", 0)
@@ -401,4 +438,5 @@ class ServingSimulator:
             mean_resident_entries=mean_resident,
             hits_per_resident_mb=hits_per_mb,
             fault_stats=fault_stats,
+            trace=self.obs,
         )
